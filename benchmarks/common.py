@@ -1,0 +1,58 @@
+"""Shared benchmark scaffolding.
+
+Every fig*.py exposes ``run(full: bool) -> list[Row]``; ``run.py`` drives
+them all and prints ``name,us_per_call,derived`` CSV (us_per_call = wall
+time per simulator cycle; derived = the figure's own metric).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+from repro.core import lss, sim, topology
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Any
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def topo_factory(kind: str, n: int, conn: int = 2):
+    if kind == "grid":
+        side = int(round(n ** 0.5))
+        return topology.grid(side * side, diag=conn > 2)
+    if kind == "ba":
+        return topology.barabasi_albert(n, m=conn, seed=1)
+    if kind == "chord":
+        return topology.chord(n)
+    raise KeyError(kind)
+
+
+def timed_static(kind: str, n: int, spec_kw=None, cfg=lss.LSSConfig(),
+                 max_cycles=600):
+    topo = topo_factory(kind, n)
+    spec = sim.ProblemSpec(n=topo.n, **(spec_kw or {}))
+    t0 = time.perf_counter()
+    res = sim.run_static(topo, spec, cfg, max_cycles=max_cycles)
+    dt = time.perf_counter() - t0
+    cycles = res["quiesced_at"] or max_cycles
+    res["us_per_cycle"] = dt / max(cycles, 1) * 1e6
+    return res
+
+
+def timed_dynamic(kind: str, n: int, cycles=400, spec_kw=None,
+                  cfg=lss.LSSConfig(), **dyn_kw):
+    topo = topo_factory(kind, n)
+    spec = sim.ProblemSpec(n=topo.n, **(spec_kw or {}))
+    t0 = time.perf_counter()
+    res = sim.run_dynamic(topo, spec, cfg, cycles=cycles, **dyn_kw)
+    dt = time.perf_counter() - t0
+    res["us_per_cycle"] = dt / cycles * 1e6
+    return res

@@ -1,0 +1,26 @@
+"""Fig. 2 — scale-up: cycles to 95%/quiescence and messages per link vs n.
+
+The paper's claim: both tend to a constant as n grows (locality).
+Default sizes are CPU-budget scaled; --full pushes to 65k peers (the paper
+ran up to 80k on peersim).
+"""
+
+from __future__ import annotations
+
+from .common import Row, timed_static
+
+
+def run(full: bool = False):
+    rows = []
+    sizes = [256, 1024, 4096] + ([16384, 65536] if full else [])
+    for kind in ("grid", "ba", "chord"):
+        for n in sizes:
+            if kind == "chord" and n > 16384 and not full:
+                continue
+            r = timed_static(kind, n)
+            rows.append(Row(
+                f"fig2/{kind}/n{n}", r["us_per_cycle"],
+                f"c95={r['cycles_95']};c100={r['cycles_100']};"
+                f"quiesce={r['quiesced_at']};msg_per_link={r['msgs_per_link']:.2f};"
+                f"acc={r['final_accuracy']:.3f}"))
+    return rows

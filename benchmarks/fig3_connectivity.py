@@ -1,0 +1,44 @@
+"""Fig. 3 — connectivity: effect of average degree |N_i|.
+
+Paper: higher connectivity speeds convergence but costs messages per link;
+an optimum appears around |N_i| ~ 6.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import lss, sim, topology
+
+from .common import Row
+
+
+def run(full: bool = False):
+    rows = []
+    n = 4096 if full else 1024
+    cases = (
+        [("ba", dict(m=m)) for m in (1, 2, 3, 4, 6)]
+        + [("grid", dict(diag=False)), ("grid", dict(diag=True))]
+        + [("chord", {})]
+    )
+    for kind, kw in cases:
+        if kind == "ba":
+            topo = topology.barabasi_albert(n, seed=1, **kw)
+        elif kind == "grid":
+            side = int(round(n ** 0.5))
+            topo = topology.grid(side * side, **kw)
+        else:
+            topo = topology.chord(n)
+        avg_deg = float(topo.degrees.mean())
+        spec = sim.ProblemSpec(n=topo.n)
+        t0 = time.perf_counter()
+        r = sim.run_static(topo, spec, lss.LSSConfig(), max_cycles=600)
+        dt = time.perf_counter() - t0
+        cyc = r["quiesced_at"] or 600
+        tag = kind + (f"-m{kw.get('m')}" if "m" in kw else
+                      ("-diag" if kw.get("diag") else ""))
+        rows.append(Row(
+            f"fig3/{tag}/deg{avg_deg:.1f}", dt / cyc * 1e6,
+            f"avg_deg={avg_deg:.2f};c95={r['cycles_95']};"
+            f"msg_per_link={r['msgs_per_link']:.2f};acc={r['final_accuracy']:.3f}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 5 — problem difficulty: bias and std sweeps.
+
+Paper: cost decreases super-exponentially with bias (distance of the mean
+from the decision boundary); grows ~linearly in cycles / sub-linearly in
+messages with std.
+"""
+
+from __future__ import annotations
+
+from .common import Row, timed_static
+
+
+def run(full: bool = False):
+    rows = []
+    n = 4096 if full else 1024
+    for bias in (0.05, 0.1, 0.2, 0.4):
+        r = timed_static("grid", n, spec_kw=dict(bias=bias), max_cycles=800)
+        rows.append(Row(
+            f"fig5/bias{bias}", r["us_per_cycle"],
+            f"c95={r['cycles_95']};c100={r['cycles_100']};"
+            f"msg_per_link={r['msgs_per_link']:.2f};acc={r['final_accuracy']:.3f}"))
+    for std in (0.25, 1.0, 2.0, 4.0):
+        r = timed_static("grid", n, spec_kw=dict(std=std), max_cycles=800)
+        rows.append(Row(
+            f"fig5/std{std}", r["us_per_cycle"],
+            f"c95={r['cycles_95']};c100={r['cycles_100']};"
+            f"msg_per_link={r['msgs_per_link']:.2f};acc={r['final_accuracy']:.3f}"))
+    return rows

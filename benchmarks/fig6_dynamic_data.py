@@ -1,0 +1,25 @@
+"""Fig. 6 — dynamically changing data (noise rate in ppmc).
+
+Paper setup: n = 1000, bias 20%, std 2x, 100k cycles. Up to ~1 change per
+cycle the effect is on communication, not accuracy; beyond that errors
+accumulate linearly.
+"""
+
+from __future__ import annotations
+
+from .common import Row, timed_dynamic
+
+
+def run(full: bool = False):
+    rows = []
+    n = 1024
+    cycles = 2000 if full else 400
+    for noise in (0, 100, 1000, 10_000, 100_000):
+        r = timed_dynamic("grid", n, cycles=cycles,
+                          spec_kw=dict(bias=0.2, std=2.0),
+                          noise_ppmc=float(noise), warmup=cycles // 4)
+        rows.append(Row(
+            f"fig6/noise{noise}ppmc", r["us_per_cycle"],
+            f"avg_err={r['avg_error']:.4f};"
+            f"msg_per_link_cycle={r['msgs_per_link_per_cycle']:.3f}"))
+    return rows

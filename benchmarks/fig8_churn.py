@@ -1,0 +1,27 @@
+"""Fig. 8 — churn: peers fail permanently at a controlled rate.
+
+Paper setup: n = 2000, noise 1000 ppmc, churn 0..4 ppmc over 100k cycles
+(up to ~40% of peers gone); error stays ~1%, message overhead grows.
+"""
+
+from __future__ import annotations
+
+from .common import Row, timed_dynamic
+
+
+def run(full: bool = False):
+    rows = []
+    n = 2025  # 45^2 grid
+    cycles = 2000 if full else 400
+    # scale churn so the END-of-run dead fraction spans ~0..40% like the
+    # paper's 100k-cycle runs
+    for churn in (0.0, 50.0, 200.0, 1000.0) if not full else (0.0, 10.0, 20.0, 40.0):
+        r = timed_dynamic("grid", n, cycles=cycles,
+                          spec_kw=dict(bias=0.2, std=2.0),
+                          noise_ppmc=1000.0, churn_ppmc=churn,
+                          warmup=cycles // 4)
+        rows.append(Row(
+            f"fig8/churn{churn}ppmc", r["us_per_cycle"],
+            f"avg_err={r['avg_error']:.4f};alive={r['alive_frac']:.3f};"
+            f"msg_per_link_cycle={r['msgs_per_link_per_cycle']:.3f}"))
+    return rows

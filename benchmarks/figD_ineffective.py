@@ -1,0 +1,27 @@
+"""Sec. VI-D — ineffective parameters: k (options) and d (dimension).
+
+Paper: once bias and variance are controlled, neither k (3..243) nor
+d (1..6) affects performance.
+"""
+
+from __future__ import annotations
+
+from .common import Row, timed_static
+
+
+def run(full: bool = False):
+    rows = []
+    n = 1024
+    for k in (3, 27, 243):
+        r = timed_static("grid", n, spec_kw=dict(k=k), max_cycles=600)
+        rows.append(Row(
+            f"figD/k{k}", r["us_per_cycle"],
+            f"c95={r['cycles_95']};msg_per_link={r['msgs_per_link']:.2f};"
+            f"acc={r['final_accuracy']:.3f}"))
+    for d in (1, 2, 6):
+        r = timed_static("grid", n, spec_kw=dict(d=d), max_cycles=600)
+        rows.append(Row(
+            f"figD/d{d}", r["us_per_cycle"],
+            f"c95={r['cycles_95']};msg_per_link={r['msgs_per_link']:.2f};"
+            f"acc={r['final_accuracy']:.3f}"))
+    return rows

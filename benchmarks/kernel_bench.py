@@ -1,0 +1,61 @@
+"""Kernel-layer benchmark: fused LSS hot loop vs the unfused jnp path.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+their wall time is NOT the TPU number; what this benchmark reports is
+(a) the jnp reference path's throughput (peers/s) at paper scale, which is
+the simulator's actual speed here, and (b) an arithmetic-intensity summary
+for the fused kernel (bytes touched per peer per cycle) backing the
+"memory-bound, fuse it" claim in the kernel docstrings.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from .common import Row
+
+
+def run(full: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 80_000 if full else 20_000
+    D, d, k = 4, 2, 3
+    f = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32))
+    x_m, x_c = f(n, d), jnp.ones((n,))
+    out_m, out_c = f(n, D, d) * 0.3, jnp.abs(f(n, D))
+    in_m, in_c = f(n, D, d) * 0.3, jnp.abs(f(n, D))
+    mask = jnp.asarray(rng.random((n, D)) > 0.2)
+    centers = f(k, d)
+
+    fused = jax.jit(lambda *a: ref.lss_state_ref(*a))
+    out = fused(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        out = fused(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers)
+    jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / reps
+    bytes_per_peer = (d + 1 + 4 * D * (d + 1) + D) * 4  # state streamed once
+    rows.append(Row(
+        f"kernel/lss_state/n{n}", dt * 1e6,
+        f"peers_per_s={n / dt:.0f};bytes_per_peer={bytes_per_peer}"))
+
+    dec = jax.jit(lambda v, c: ref.region_decide_ref(v, c))
+    v = f(n, d)
+    _ = jax.block_until_ready(dec(v, centers))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        o = dec(v, centers)
+    jax.block_until_ready(o)
+    dt = (time.perf_counter() - t0) / reps
+    rows.append(Row(
+        f"kernel/region_decide/n{n}", dt * 1e6,
+        f"peers_per_s={n / dt:.0f};mxu_flops_per_peer={2 * d * k}"))
+    return rows

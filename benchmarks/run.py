@@ -1,0 +1,43 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs paper-scale
+(slow); default sizes fit the CI budget.  ``--only fig2`` filters.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from . import (fig2_scaleup, fig3_connectivity, fig4_message_loss,
+                   fig5_difficulty, fig6_dynamic_data, fig7_loss_dynamic,
+                   fig8_churn, figD_ineffective, kernel_bench)
+
+    suites = {
+        "fig2": fig2_scaleup, "fig3": fig3_connectivity,
+        "fig4": fig4_message_loss, "fig5": fig5_difficulty,
+        "fig6": fig6_dynamic_data, "fig7": fig7_loss_dynamic,
+        "fig8": fig8_churn, "figD": figD_ineffective,
+        "kernel": kernel_bench,
+    }
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in mod.run(full=args.full):
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{e!r}", flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

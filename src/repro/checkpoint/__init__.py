@@ -1,0 +1,23 @@
+"""Fault-tolerant checkpointing: sharded, atomic, async, elastic.
+
+Layout:  <dir>/step_<N>/
+             manifest.json        — tree structure, shapes, dtypes, step
+             shard_<i>.npz        — flat leaf arrays (host-local slices in
+                                    a multi-host deployment; whole arrays
+                                    in this single-process container)
+         <dir>/LATEST             — atomically-updated pointer file
+
+Guarantees:
+  * atomicity — writes go to ``step_<N>.tmp`` and are renamed only after
+    fsync; a crash mid-save never corrupts the latest checkpoint;
+  * async — ``save_async`` snapshots to host RAM synchronously (cheap) and
+    writes in a daemon thread, overlapping the next train steps;
+  * elastic restore — ``load`` takes target shardings and ``device_put``s
+    each leaf, so a checkpoint written on one mesh restores onto another
+    (different device count / topology), which is the re-shard path node
+    failures need.
+"""
+
+from .store import latest_step, load, save, save_async, wait_pending
+
+__all__ = ["save", "save_async", "load", "latest_step", "wait_pending"]

@@ -1,0 +1,121 @@
+"""Checkpoint store implementation (numpy-npz backed, no external deps)."""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "load", "latest_step", "wait_pending"]
+
+_PENDING: list[threading.Thread] = []
+_FINALIZE = threading.Lock()  # serializes rename + LATEST + GC across threads
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save(ckpt_dir, step: int, tree: Any, max_keep: int = 3):
+    """Synchronous atomic save."""
+    names, leaves, _ = _flatten_with_names(tree)
+    host_leaves = [np.asarray(x) for x in leaves]
+    _write(pathlib.Path(ckpt_dir), step, names, host_leaves, tree, max_keep)
+
+
+def save_async(ckpt_dir, step: int, tree: Any, max_keep: int = 3):
+    """Snapshot to host RAM now; write in a daemon thread."""
+    names, leaves, _ = _flatten_with_names(tree)
+    host_leaves = [np.asarray(x) for x in leaves]  # sync device->host copy
+
+    t = threading.Thread(
+        target=_write,
+        args=(pathlib.Path(ckpt_dir), step, names, host_leaves, tree, max_keep),
+        daemon=True,
+    )
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_pending():
+    for t in list(_PENDING):
+        t.join()
+        _PENDING.remove(t)
+
+
+def _write(root: pathlib.Path, step: int, names, host_leaves, tree, max_keep):
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest = {
+        "step": step,
+        "leaves": [
+            {"name": n, "shape": list(a.shape), "dtype": str(a.dtype)}
+            for n, a in zip(names, host_leaves)
+        ],
+    }
+    np.savez(tmp / "shard_0.npz", **{f"leaf_{i}": a
+                                     for i, a in enumerate(host_leaves)})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    os.sync()
+    with _FINALIZE:
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        latest = root / "LATEST"
+        cur = int(latest.read_text()) if latest.exists() else -1
+        if step > cur:  # concurrent async saves finish out of order
+            tmp_latest = root / f"LATEST.tmp{step}"
+            tmp_latest.write_text(str(step))
+            tmp_latest.rename(latest)
+        # GC old checkpoints (never the one LATEST points to).
+        kept = sorted(p for p in root.glob("step_????????") if p.is_dir())
+        for p in kept[:-max_keep]:
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    f = pathlib.Path(ckpt_dir) / "LATEST"
+    if not f.exists():
+        return None
+    return int(f.read_text().strip())
+
+
+def load(ckpt_dir, step: int, like: Any, shardings: Any = None):
+    """Restore into the structure of ``like``; optionally re-shard.
+
+    ``shardings`` may be a pytree of NamedSharding matching ``like`` — each
+    leaf is device_put with its target sharding, which is how a checkpoint
+    written on mesh A restores onto mesh B (elastic restart).
+    """
+    root = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    data = np.load(root / "shard_0.npz")
+    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    treedef = jax.tree_util.tree_structure(like)
+    flat_like = jax.tree_util.tree_leaves(like)
+    assert len(flat_like) == len(leaves), (
+        f"checkpoint has {len(leaves)} leaves, target has {len(flat_like)}")
+    if shardings is not None:
+        flat_sh = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        out = [jax.device_put(a.astype(l.dtype), s)
+               for a, l, s in zip(leaves, flat_like, flat_sh)]
+    else:
+        out = [np.asarray(a, dtype=l.dtype) for a, l in zip(leaves, flat_like)]
+    return jax.tree_util.tree_unflatten(treedef, out)

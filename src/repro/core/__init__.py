@@ -1,0 +1,15 @@
+"""The paper's contribution: local thresholding on general network graphs.
+
+Modules:
+  wvs        — weighted vector space (Def. 1), moment form
+  regions    — convex region families (Voronoi source selection, halfspaces)
+  topology   — Barabási–Albert / symmetric-Chord / grid generators
+  stopping   — the new local stopping rule (Def. 4) + Alg.-1 violation sets
+  correction — balance correction (Thm. 8, Eqs. 5/10)
+  lss        — Alg. 1, vectorized + jitted, with loss/churn/dynamics
+  sim        — Sec.-VI experiment driver
+  monitor    — the rule running on a device mesh (shard_map + ppermute)
+"""
+
+from . import (async_sim, correction, lss, regions, sim, stopping,  # noqa: F401
+               topology, wvs, wvs_cov)

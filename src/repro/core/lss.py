@@ -1,0 +1,251 @@
+"""LSS — Local Source Selection in general network graphs (Alg. 1).
+
+The peersim-style synchronous simulation of the paper's algorithm,
+vectorized over all peers as JAX arrays and fully ``jit``-compiled,
+including the selective-correction do-while (a ``lax.while_loop``).
+
+State layout (n peers, D = max degree slots, d dims; moment form):
+
+    out_m/out_c   (n,D,d)/(n,D)  X_ij — latest message content per out-slot
+    in_m/in_c     (n,D,d)/(n,D)  X_ji — latest message received per slot
+    x_m/x_c       (n,d)/(n,)     X_ii — local input
+    pending       (n,D) bool     out-slots changed and not yet delivered
+    last_send     (n,) int32     cycle of the peer's last send (the ell timer)
+    alive         (n,) bool      churn mask
+
+One :func:`cycle` =
+  1. deliver pending messages through the reverse-slot gather, dropping each
+     independently with probability ``drop_rate`` (dropped messages are
+     *lost*, never retried — the paper's loss model);
+  2. recompute S_i / A_ij, evaluate Alg. 1's violation sets;
+  3. peers with violations (and a cold ``ell`` timer) run the selective
+     correction do-while (Sec. IV-C2, Eq. 10) — or the uniform policy
+     (Eq. 5) if configured — and post new messages on the violating slots.
+
+Messages are counted per send (paper's "normalized messages" = sends per
+link per cycle).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import correction, stopping, topology, wvs
+
+__all__ = ["LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle", "metrics"]
+
+
+class LSSConfig(NamedTuple):
+    beta: float = 1e-3  # minimum-weight floor on |S_i| (Sec. IV-C)
+    ell: int = 1  # min cycles between a peer's sends (Alg. 1)
+    drop_rate: float = 0.0  # i.i.d. message-loss probability
+    policy: str = "selective"  # "selective" (Eq. 10) | "uniform" (Eq. 5)
+    max_corr_iters: int = 0  # 0 = use max degree D
+    eps: float = 1e-9
+
+
+class TopoArrays(NamedTuple):
+    nbr: jax.Array  # int32 (n, D)
+    mask: jax.Array  # bool  (n, D) — static link validity
+    rev: jax.Array  # int32 (n, D)
+
+    @classmethod
+    def from_topology(cls, t: topology.Topology) -> "TopoArrays":
+        return cls(jnp.asarray(t.nbr), jnp.asarray(t.mask), jnp.asarray(t.rev))
+
+
+class LSSState(NamedTuple):
+    out_m: jax.Array
+    out_c: jax.Array
+    in_m: jax.Array
+    in_c: jax.Array
+    x_m: jax.Array
+    x_c: jax.Array
+    pending: jax.Array
+    last_send: jax.Array
+    alive: jax.Array
+    t: jax.Array  # current cycle (int32)
+    msgs: jax.Array  # cumulative messages sent (int64-ish float)
+    rng: jax.Array
+
+
+def init_state(topo: TopoArrays, inputs: wvs.WV, seed: int = 0) -> LSSState:
+    n, D = topo.nbr.shape
+    d = inputs.m.shape[-1]
+    dt = inputs.m.dtype
+    return LSSState(
+        out_m=jnp.zeros((n, D, d), dt),
+        out_c=jnp.zeros((n, D), dt),
+        in_m=jnp.zeros((n, D, d), dt),
+        in_c=jnp.zeros((n, D), dt),
+        x_m=inputs.m,
+        x_c=inputs.c,
+        pending=jnp.zeros((n, D), bool),
+        last_send=jnp.full((n,), -(10**6), jnp.int32),
+        alive=jnp.ones((n,), bool),
+        t=jnp.zeros((), jnp.int32),
+        msgs=jnp.zeros((), jnp.float32),
+        rng=jax.random.PRNGKey(seed),
+    )
+
+
+def _live_mask(topo: TopoArrays, alive: jax.Array) -> jax.Array:
+    """Valid slots between two live peers (churn = failure of all links)."""
+    return topo.mask & alive[:, None] & alive[topo.nbr]
+
+
+def _deliver(state: LSSState, topo: TopoArrays, drop_rate: float, key):
+    """Move pending out-messages into the recipients' in-slots."""
+    live = _live_mask(topo, state.alive)
+    send = state.pending & live
+    if drop_rate > 0.0:
+        keep = jax.random.uniform(key, send.shape) >= drop_rate
+        delivered = send & keep
+    else:
+        delivered = send
+    # Message (i,k) lands at (nbr[i,k], rev[i,k]).
+    n, D = topo.nbr.shape
+    flat = (topo.nbr * D + topo.rev).reshape(n * D)  # flat target slot index
+    idx = jnp.where(delivered.reshape(n * D), flat, n * D)  # OOB = dropped
+
+    def scatter(buf, upd):
+        buf_f = buf.reshape(n * D, *buf.shape[2:])
+        upd_f = upd.reshape(n * D, *upd.shape[2:])
+        return buf_f.at[idx].set(upd_f, mode="drop").reshape(buf.shape)
+
+    in_m = scatter(state.in_m, state.out_m)
+    in_c = scatter(state.in_c, state.out_c)
+    sent = jnp.sum(send)
+    return state._replace(
+        in_m=in_m,
+        in_c=in_c,
+        pending=jnp.zeros_like(state.pending),
+        msgs=state.msgs + sent.astype(state.msgs.dtype),
+    ), sent
+
+
+def _violations(decide, s, a, live, eps):
+    return stopping.violations_alg1(decide, s, a, live, eps)
+
+
+def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig):
+    """Alg. 1's do-while, vectorized across peers.
+
+    The corrected messages for a violating set V_i are a pure function of
+    the *loop-entry* state (oldS_i, the entry agreements A0, the received
+    X_ji) — Eq. 10 distributes ``(|oldS| - beta)/2`` over V_i exactly once,
+    keeping ``|S'_i| = (|oldS_i| + beta)/2 >= beta``.  The do-while is a
+    fixed-point iteration that only *grows* V_i: recompute the would-be
+    correction from scratch with the larger V_i until no new slot violates.
+    (Re-incrementing already-corrected weights each iteration would leak
+    another ``(|oldS|-beta)/2`` of weight per iteration and can drive
+    ``|S_i|`` negative — a subtle mis-reading of Alg. 1 that destabilizes
+    the computation on high-degree graphs.)
+    """
+    n, D = topo.nbr.shape
+    old_s = stopping.status(
+        state.x_m, state.x_c, state.out_m, state.out_c, state.in_m, state.in_c, live
+    )
+    a0 = stopping.agreements(state.out_m, state.out_c, state.in_m, state.in_c)
+    v0 = _violations(decide, old_s, a0, live, cfg.eps) & active[:, None]
+    if cfg.policy == "uniform":
+        # Eq. 5: a violating peer corrects *every* neighbor, not just V_i.
+        any_viol = jnp.any(v0, axis=1)
+        v0 = live & (active & any_viol)[:, None]
+    running0 = active & jnp.any(v0, axis=1)
+    max_iters = cfg.max_corr_iters or D
+
+    def apply_v(v):
+        """Corrected out-messages from the entry state, for slots in v."""
+        new_m, new_c = correction.corrected_messages(
+            old_s, a0, state.in_m, state.in_c, v, cfg.beta, cfg.eps
+        )
+        out_m = jnp.where(v[..., None], new_m, state.out_m)
+        out_c = jnp.where(v, new_c, state.out_c)
+        return out_m, out_c
+
+    def body(carry):
+        v, running, it = carry
+        out_m, out_c = apply_v(v)
+        s2 = stopping.status(
+            state.x_m, state.x_c, out_m, out_c, state.in_m, state.in_c, live
+        )
+        a2 = stopping.agreements(out_m, out_c, state.in_m, state.in_c)
+        w = _violations(decide, s2, a2, live, cfg.eps) & running[:, None] & ~v
+        grew = jnp.any(w, axis=1)
+        return v | w, running & grew, it + 1
+
+    def cond(carry):
+        _, running, it = carry
+        return jnp.any(running) & (it < max_iters)
+
+    v, _, _ = jax.lax.while_loop(
+        cond, body, (v0, running0, jnp.zeros((), jnp.int32))
+    )
+    out_m, out_c = apply_v(v)
+    did_send = active & jnp.any(v, axis=1)
+    return out_m, out_c, v, did_send
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "decide"))
+def cycle(state: LSSState, topo: TopoArrays, centers: jax.Array, cfg: LSSConfig,
+          decide=None):
+    """One synchronous simulator cycle.  Returns (state', sent_this_cycle)."""
+    from . import regions as _regions
+
+    if decide is None:
+        decide = lambda v: _regions.decide_voronoi(v, centers)
+
+    rng, kdrop = jax.random.split(state.rng)
+    state = state._replace(rng=rng)
+    state, _ = _deliver(state, topo, cfg.drop_rate, kdrop)
+
+    live = _live_mask(topo, state.alive)
+    s = stopping.status(
+        state.x_m, state.x_c, state.out_m, state.out_c, state.in_m, state.in_c, live
+    )
+    a = stopping.agreements(state.out_m, state.out_c, state.in_m, state.in_c)
+    viol = _violations(decide, s, a, live, cfg.eps)
+    timer_ok = (state.t - state.last_send) >= cfg.ell
+    active = state.alive & timer_ok & jnp.any(viol, axis=1)
+
+    out_m, out_c, v, did_send = _correction_loop(decide, state, topo, live, active, cfg)
+    pending = state.pending | (v & did_send[:, None])
+    last_send = jnp.where(did_send, state.t, state.last_send)
+    sent_now = jnp.sum(v & did_send[:, None])
+
+    return state._replace(
+        out_m=out_m, out_c=out_c, pending=pending, last_send=last_send,
+        t=state.t + 1,
+    ), sent_now
+
+
+def metrics(state: LSSState, topo: TopoArrays, centers: jax.Array,
+            eps: float = 1e-9):
+    """(accuracy, quiescent, correct_mask): fraction of live peers whose
+    f(vec(S_i)) equals f(vec((+)X over live peers)), and quiescence."""
+    from . import regions as _regions
+
+    live = _live_mask(topo, state.alive)
+    s = stopping.status(
+        state.x_m, state.x_c, state.out_m, state.out_c, state.in_m, state.in_c, live
+    )
+    gx = wvs.WV(
+        jnp.sum(jnp.where(state.alive[:, None], state.x_m, 0.0), axis=0),
+        jnp.sum(jnp.where(state.alive, state.x_c, 0.0), axis=0),
+    )
+    want = _regions.decide_voronoi(wvs.vec(gx, eps)[None], centers)[0]
+    got = _regions.decide_voronoi(wvs.vec(s, eps), centers)
+    correct = (got == want) & state.alive
+    acc = jnp.sum(correct) / jnp.maximum(jnp.sum(state.alive), 1)
+
+    a = stopping.agreements(state.out_m, state.out_c, state.in_m, state.in_c)
+    decide = lambda v: _regions.decide_voronoi(v, centers)
+    viol = stopping.violations_alg1(decide, s, a, live, eps)
+    quiescent = ~jnp.any(state.pending & live) & ~jnp.any(viol)
+    return acc, quiescent, correct

@@ -1,0 +1,78 @@
+"""Convex region families for the thresholding problem (Problem 2).
+
+A region family maps a vector in R^d to the index of the (convex,
+non-overlapping) region containing it.  Two families cover the paper and the
+training-monitor use cases:
+
+* ``VoronoiRegions`` — the source-selection problem (Sec. V): regions are
+  Voronoi cells of k option points; ``f(v) = argmin_c ||c - v||``.  Reduces
+  to majority voting for C = {0, 1}.
+* ``HalfspaceRegions`` — one hyperplane ``w . v >= b`` (two convex regions);
+  the classic threshold-monitoring predicate (e.g. ``||g||^2 < tau`` on a
+  statistics vector that carries the squared norm as a coordinate).
+
+Decision functions are pure and vectorized: input (..., d) -> int32 (...).
+``decide_voronoi`` uses the expansion ||v - c||^2 = ||v||^2 - 2 v.c + ||c||^2
+so the inner loop is a matmul (MXU-friendly; the Pallas kernel in
+``repro.kernels.region_decide`` implements the same contraction).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "VoronoiRegions",
+    "HalfspaceRegions",
+    "decide_voronoi",
+]
+
+
+def decide_voronoi(v: jax.Array, centers: jax.Array) -> jax.Array:
+    """argmin_k ||v - centers[k]||^2 for batched v: (..., d) -> int32 (...)."""
+    # ||v||^2 is constant across candidates: argmin needs only the last terms.
+    scores = -2.0 * jnp.einsum("...d,kd->...k", v, centers) + jnp.sum(
+        centers * centers, axis=-1
+    )
+    return jnp.argmin(scores, axis=-1).astype(jnp.int32)
+
+
+class VoronoiRegions(NamedTuple):
+    """Voronoi cells of k centers — the source-selection region family."""
+
+    centers: jax.Array  # (k, d)
+
+    @property
+    def k(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.centers.shape[1]
+
+    def decide(self, v: jax.Array) -> jax.Array:
+        return decide_voronoi(v, self.centers)
+
+
+class HalfspaceRegions(NamedTuple):
+    """Two regions split by ``w . v >= b`` (region 1 = above threshold)."""
+
+    w: jax.Array  # (d,)
+    b: jax.Array  # ()
+
+    @property
+    def k(self) -> int:
+        return 2
+
+    @property
+    def d(self) -> int:
+        return self.w.shape[0]
+
+    def decide(self, v: jax.Array) -> jax.Array:
+        return (jnp.einsum("...d,d->...", v, self.w) >= self.b).astype(jnp.int32)
+
+
+RegionFamily = Callable[[jax.Array], jax.Array]

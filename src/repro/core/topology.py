@@ -1,0 +1,146 @@
+"""Network topologies used by the paper's experiments (Sec. VI-A).
+
+Three generators, matching the paper's three target systems:
+
+* ``barabasi_albert`` — unstructured P2P / Internet router graph [1].
+* ``chord`` — structured P2P; the *symmetric* Chord variant (bidirectional
+  finger links) the paper uses, degree ~ 2 log2(n).
+* ``grid`` — wireless sensor network: peers on a bi-dimensional grid
+  (optionally a torus).
+
+All generators return a :class:`Topology`: a padded fixed-degree adjacency
+``nbr[n, D]`` with a validity ``mask`` and a reverse-slot map ``rev`` such
+that ``nbr[nbr[i, k], rev[i, k]] == i`` for every valid slot.  The reverse
+map makes message delivery a single gather: the message peer ``i`` posts on
+its slot ``k`` lands in slot ``rev[i, k]`` of peer ``nbr[i, k]``.
+
+Generation is host-side numpy (topologies are inputs, not traced); the
+simulator converts to jnp once.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = ["Topology", "barabasi_albert", "chord", "grid", "from_edges"]
+
+
+class Topology(NamedTuple):
+    nbr: np.ndarray  # int32 (n, D) neighbor ids; padding slots hold 0
+    mask: np.ndarray  # bool  (n, D) slot validity
+    rev: np.ndarray  # int32 (n, D) slot of i in nbr[nbr[i,k]]
+    n: int
+    max_deg: int
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.mask.sum(axis=1)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.mask.sum()) // 2
+
+    def drop_peers(self, dead: np.ndarray) -> "Topology":
+        """Churn: peer failure = failure of all its links (Sec. II-B)."""
+        dead = np.asarray(dead)
+        alive_slot = self.mask & ~dead[self.nbr]
+        alive_slot[dead] = False
+        return self._replace(mask=alive_slot)
+
+
+def from_edges(n: int, edges, max_deg: int | None = None) -> Topology:
+    """Build a padded Topology from an undirected edge list."""
+    adj = [[] for _ in range(n)]
+    seen = set()
+    for a, b in edges:
+        a, b = int(a), int(b)
+        if a == b:
+            continue
+        key = (min(a, b), max(a, b))
+        if key in seen:
+            continue
+        seen.add(key)
+        adj[a].append(b)
+        adj[b].append(a)
+    deg = np.array([len(a) for a in adj], dtype=np.int32)
+    D = int(deg.max()) if max_deg is None else max_deg
+    if deg.max() > D:
+        raise ValueError(f"max_deg={D} < actual max degree {deg.max()}")
+    nbr = np.zeros((n, D), dtype=np.int32)
+    mask = np.zeros((n, D), dtype=bool)
+    slot_of = {}  # (i, j) -> slot k with nbr[i, k] == j
+    for i, neigh in enumerate(adj):
+        for k, j in enumerate(neigh):
+            nbr[i, k] = j
+            mask[i, k] = True
+            slot_of[(i, j)] = k
+    rev = np.zeros((n, D), dtype=np.int32)
+    for (i, j), k in slot_of.items():
+        rev[i, k] = slot_of[(j, i)]
+    return Topology(nbr=nbr, mask=mask, rev=rev, n=n, max_deg=D)
+
+
+def barabasi_albert(n: int, m: int = 2, seed: int = 0) -> Topology:
+    """Barabási–Albert preferential attachment: each new node adds m edges."""
+    if n <= m:
+        raise ValueError("n must exceed m")
+    rng = np.random.default_rng(seed)
+    edges = []
+    # Start from a star over the first m+1 nodes (connected seed graph).
+    targets = list(range(m))
+    repeated: list[int] = []  # node id repeated once per incident edge
+    for i in range(m, n):
+        chosen = set()
+        for t in targets:
+            if t != i:
+                chosen.add(t)
+        for t in chosen:
+            edges.append((i, t))
+            repeated.extend((i, t))
+        # Preferential sample of m targets for the next node.
+        if repeated:
+            idx = rng.integers(0, len(repeated), size=m)
+            targets = [repeated[j] for j in idx]
+        else:
+            targets = list(range(m))
+    return from_edges(n, edges)
+
+
+def chord(n: int, seed: int = 0) -> Topology:
+    """Symmetric Chord: ring successors + bidirectional fingers at 2^j."""
+    del seed  # deterministic
+    edges = []
+    b = max(1, int(np.ceil(np.log2(n))))
+    for i in range(n):
+        edges.append((i, (i + 1) % n))
+        for j in range(1, b):
+            f = (i + (1 << j)) % n
+            if f != i:
+                edges.append((i, f))
+    return from_edges(n, edges)
+
+
+def grid(n: int, wrap: bool = False, diag: bool = False) -> Topology:
+    """Peers at locations of a bi-dimensional grid (optionally torus)."""
+    side = int(np.round(np.sqrt(n)))
+    if side * side != n:
+        raise ValueError(f"grid needs a square n, got {n}")
+    edges = []
+    deltas = [(0, 1), (1, 0)]
+    if diag:
+        deltas += [(1, 1), (1, -1)]
+
+    def nid(r, c):
+        return r * side + c
+
+    for r in range(side):
+        for c in range(side):
+            for dr, dc in deltas:
+                rr, cc = r + dr, c + dc
+                if wrap:
+                    edges.append((nid(r, c), nid(rr % side, cc % side)))
+                elif 0 <= rr < side and 0 <= cc < side:
+                    edges.append((nid(r, c), nid(rr, cc)))
+    return from_edges(n, edges)

@@ -1,0 +1,17 @@
+"""Deterministic, shardable data pipeline.
+
+Production shape: every host builds only its local shard of each global
+batch from a counter-indexed PRNG (no files needed for LM pretraining
+benchmarks; swap ``TokenSource`` for a real corpus reader behind the same
+interface).  Determinism by construction gives:
+
+  * exact resume — the step index fully determines the batch (no reader
+    state to checkpoint);
+  * elastic re-sharding — a host joining with a different data-shard id
+    regenerates its slice of the same global batch;
+  * zero host-to-host coordination — no data-server stragglers.
+"""
+
+from .pipeline import Batch, TokenSource, make_batch_fn
+
+__all__ = ["Batch", "TokenSource", "make_batch_fn"]

@@ -1,0 +1,3 @@
+"""Distributed-optimization substrate: compression, pipeline, elasticity."""
+
+from . import compression, elastic, pipeline  # noqa: F401

@@ -1,0 +1,63 @@
+"""Gradient compression for the slow (DCN / pod) axis.
+
+Two standard schemes, both with error feedback so compression error is
+carried, not dropped (convergence-preserving):
+
+* ``int8_compress`` — per-tensor symmetric int8 quantization: 4x fewer
+  bytes on the wire for f32 grads (2x for bf16).
+* ``topk_compress``  — keep the top-k fraction by magnitude, zero the rest
+  (sparsity is realized as masked dense tensors here: a real DCN transport
+  would ship (indices, values); the *reduction math* and error feedback are
+  exact either way, which is what correctness tests can check).
+
+Usage inside a step:
+    comp, err = topk_compress(grad, err, frac=0.01)
+    g = psum_over_pod(comp)          # the only cross-pod traffic
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_compress", "int8_decompress", "topk_compress"]
+
+
+class Int8Pack(NamedTuple):
+    q: jax.Array  # int8 payload
+    scale: jax.Array  # f32 per-tensor scale
+
+
+def int8_compress(x, err=None):
+    """Returns (pack, new_err).  err is the running error-feedback buffer."""
+    xf = x.astype(jnp.float32)
+    if err is not None:
+        xf = xf + err
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = xf - deq
+    return Int8Pack(q=q, scale=scale), new_err
+
+
+def int8_decompress(pack: Int8Pack):
+    return pack.q.astype(jnp.float32) * pack.scale
+
+
+def topk_compress(x, err=None, frac: float = 0.01):
+    """Top-|frac| magnitude sparsification with error feedback.
+
+    Returns (sparse_dense, new_err): ``sparse_dense`` equals x+err on the
+    kept coordinates and 0 elsewhere.
+    """
+    xf = x.astype(jnp.float32)
+    if err is not None:
+        xf = xf + err
+    flat = xf.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(xf) >= thresh
+    kept = jnp.where(mask, xf, 0.0)
+    return kept, xf - kept

@@ -1,0 +1,55 @@
+"""Elastic scaling: rebuild the mesh after membership changes and re-shard.
+
+Flow on failure/join (driven by the trainer):
+  1. failure detected (heartbeat / collective timeout — here: injected);
+  2. survivors agree on the new device set;
+  3. ``remesh`` builds the largest (data, model)-factorable mesh from the
+     surviving devices (model axis preserved when possible — TP groups are
+     latency-critical; data axis absorbs the loss);
+  4. state restores from the latest checkpoint via
+     ``checkpoint.load(..., shardings=new)`` — device_put does the
+     re-partitioning;
+  5. the data pipeline re-shards by construction (counter-indexed).
+
+The paper's own churn experiment (§VI-F) is the P2P analogue: LSS keeps
+being correct while peers leave because neighbor state is recomputed from
+the remaining links — here, the monitor's neighbor set is remapped by the
+new mesh and its weighted state re-enters from the survivors' inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["remesh", "reshard"]
+
+
+def remesh(devices=None, model_axis: int = 1, axes=("data", "model")):
+    """Largest mesh over ``devices`` with the model axis preserved.
+
+    Drops trailing devices if the count is not divisible (a real deployment
+    would keep them as hot spares — the count is reported).
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    model = model_axis
+    while model > 1 and n % model:
+        model //= 2
+    data = n // model
+    used = devices[: data * model]
+    arr = np.array(used).reshape(data, model)
+    mesh = jax.sharding.Mesh(arr, axes)
+    return mesh, {"devices_used": data * model, "spares": n - data * model,
+                  "shape": {"data": data, "model": model}}
+
+
+def reshard(tree, spec_tree, mesh):
+    """device_put every leaf onto ``mesh`` with its PartitionSpec."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: Eq.-10 balance-correction message computation.
+
+For a block of peers with violating sets V_i, computes in one VMEM pass:
+
+    T_i      = S_i (+) (+)_{k in V} A_ik           (selective target, Eq. 8)
+    |A'_ik|  = |A_ik| + (|S_i| - beta) / (2 |V_i|)  (uniform distribution)
+    X'_ik    = (|A'_ik| / |T_i|) (.) T_i  (-)  X_ki  (Eq. 10)
+
+Everything is elementwise + a D-slot reduction per peer: VPU work, blocked
+(BN, D, dp) to stream the message arrays through VMEM once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["correction_kernel", "correction_call"]
+
+BLOCK_N = 64
+
+
+def correction_kernel(s_m_ref, s_c_ref, a_m_ref, a_c_ref, in_m_ref, in_c_ref,
+                      v_ref, o_m_ref, o_c_ref, *, beta: float, eps: float):
+    s_m = s_m_ref[...]  # (BN, dp)
+    s_c = s_c_ref[...][:, 0]  # (BN,)
+    a_m = a_m_ref[...]  # (BN, D, dp)
+    a_c = a_c_ref[...]  # (BN, D)
+    i_m = in_m_ref[...]
+    i_c = in_c_ref[...]
+    v = v_ref[...] != 0  # (BN, D)
+
+    t_m = s_m + jnp.sum(jnp.where(v[..., None], a_m, 0.0), axis=1)
+    t_c = s_c + jnp.sum(jnp.where(v, a_c, 0.0), axis=1)
+    nv = jnp.maximum(jnp.sum(v.astype(jnp.float32), axis=1), 1.0)
+    w_new = a_c + ((s_c - beta) / (2.0 * nv))[:, None]  # (BN, D)
+    t_safe = jnp.where(jnp.abs(t_c) > eps, t_c, 1.0)
+    scale = w_new / t_safe[:, None]
+    o_m_ref[...] = scale[..., None] * t_m[:, None, :] - i_m
+    o_c_ref[...] = scale * t_c[:, None] - i_c
+
+
+def correction_call(s_m, s_c, a_m, a_c, in_m, in_c, v_set,
+                    *, beta: float, eps: float, interpret: bool):
+    n, D, dp = a_m.shape
+    grid = (n // BLOCK_N,)
+    kern = functools.partial(correction_kernel, beta=beta, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, dp), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, D, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, D, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_N, D, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, D, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(s_m, s_c, a_m, a_c, in_m, in_c, v_set)

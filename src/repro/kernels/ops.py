@@ -1,0 +1,99 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handle padding to hardware-aligned shapes (peers -> block multiple, vector
+dim -> 128 lanes), dtype normalization, and CPU fallback (interpret=True
+executes the kernel bodies in Python — the correctness path this container
+validates; on TPU the same calls compile to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import correction as _corr
+from . import lss_state as _state
+from . import region_decide as _dec
+
+__all__ = ["region_decide", "lss_state", "correction"]
+
+LANES = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+def _prep_centers(centers):
+    ct = _pad_to(centers.astype(jnp.float32), LANES, 1).T  # (dp, k)
+    cn = jnp.sum(centers.astype(jnp.float32) ** 2, -1)[None, :]  # (1, k)
+    return ct, cn
+
+
+@functools.partial(jax.jit, static_argnames=())
+def region_decide(v, centers):
+    """Nearest-center ids, kernel-accelerated: (n, d) -> (n,) int32."""
+    n = v.shape[0]
+    vp = _pad_to(_pad_to(v.astype(jnp.float32), LANES, 1), _dec.BLOCK_N, 0)
+    ct, cn = _prep_centers(centers)
+    out = _dec.region_decide_call(vp, ct, cn, interpret=_interpret())
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def lss_state(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers, eps=1e-9):
+    """Fused S/A/violations/decision.  Unpadded moment-form inputs.
+
+    Returns (s_m (n,d), s_c (n,), viol bool (n,D), decision (n,) int32).
+    """
+    n, D, d = out_m.shape
+    BN = _state.BLOCK_N
+    f32 = jnp.float32
+    pad0 = lambda a: _pad_to(a, BN, 0)
+    padl = lambda a: _pad_to(a, LANES, a.ndim - 1)
+
+    args = (
+        pad0(padl(x_m.astype(f32))),
+        pad0(x_c.astype(f32)[:, None]),
+        pad0(padl(out_m.astype(f32))),
+        pad0(out_c.astype(f32)),
+        pad0(padl(in_m.astype(f32))),
+        pad0(in_c.astype(f32)),
+        pad0(mask.astype(jnp.int8)),
+    )
+    ct, cn = _prep_centers(centers)
+    s_m, s_c, viol, dec = _state.lss_state_call(
+        *args, ct, cn, eps=eps, interpret=_interpret())
+    return s_m[:n, :d], s_c[:n, 0], viol[:n].astype(bool), dec[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "eps"))
+def correction(s_m, s_c, a_m, a_c, in_m, in_c, v_set, beta=1e-3, eps=1e-9):
+    """Eq.-10 corrected messages: returns (out_m' (n,D,d), out_c' (n,D))."""
+    n, D, d = a_m.shape
+    BN = _corr.BLOCK_N
+    f32 = jnp.float32
+    pad0 = lambda a: _pad_to(a, BN, 0)
+    padl = lambda a: _pad_to(a, LANES, a.ndim - 1)
+    o_m, o_c = _corr.correction_call(
+        pad0(padl(s_m.astype(f32))),
+        pad0(s_c.astype(f32)[:, None]),
+        pad0(padl(a_m.astype(f32))),
+        pad0(a_c.astype(f32)),
+        pad0(padl(in_m.astype(f32))),
+        pad0(in_c.astype(f32)),
+        pad0(v_set.astype(jnp.int8)),
+        beta=beta, eps=eps, interpret=_interpret())
+    return o_m[:n, :, :d], o_c[:n]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These restate the math independently of the kernels (and delegate to the
+core-library formulas where they exist, so kernel == oracle == algorithm).
+All oracles take unpadded, moment-form arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import correction as corr_lib
+from repro.core import regions, stopping, wvs
+
+__all__ = ["region_decide_ref", "lss_state_ref", "correction_ref"]
+
+
+def region_decide_ref(v, centers):
+    """v: (n, d), centers: (k, d) -> (n,) int32 nearest-center ids."""
+    return regions.decide_voronoi(v, centers)
+
+
+def lss_state_ref(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers,
+                  eps: float = 1e-9):
+    """Fused S / A / Alg.-1 violations / decision.
+
+    Returns (s_m (n,d), s_c (n,), viol (n,D) bool, decision (n,) int32).
+    """
+    s = stopping.status(x_m, x_c, out_m, out_c, in_m, in_c, mask)
+    a = stopping.agreements(out_m, out_c, in_m, in_c)
+    decide = lambda u: regions.decide_voronoi(u, centers)
+    viol = stopping.violations_alg1(decide, s, a, mask, eps)
+    decision = decide(wvs.vec(s, eps))
+    return s.m, s.c, viol, decision
+
+
+def correction_ref(s_m, s_c, a_m, a_c, in_m, in_c, v_set, beta,
+                   eps: float = 1e-9):
+    """Eq.-10 corrected out-messages on the violating set.
+
+    Returns (out_m' (n,D,d), out_c' (n,D)) — meaningful on v_set slots.
+    """
+    s = wvs.WV(s_m, s_c)
+    a = wvs.WV(a_m, a_c)
+    return corr_lib.corrected_messages(s, a, in_m, in_c, v_set, beta, eps)

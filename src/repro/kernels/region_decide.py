@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: nearest-source decision (Sec. V's f) as an MXU matmul.
+
+``argmin_k ||v - c_k||^2  ==  argmin_k (-2 v . c_k + ||c_k||^2)`` — the
+per-peer decision becomes one (BN, dp) x (dp, k) matmul against the option
+matrix plus a row argmin: exactly the contraction shape the MXU wants.
+
+Blocking: peers are tiled BN = 128 rows per grid step (sublane-aligned);
+the vector dim is lane-padded to a multiple of 128 by ``ops.py`` (zero
+padding leaves the scores unchanged); the (k, dp) center matrix and its
+norms live fully in VMEM (k <= a few hundred in every experiment —
+Sec. VI-D sweeps k to 243; ~243*128*4B = 124 KiB).
+VMEM per step ~ BN*dp*4 + k*dp*4 + BN*k*4 bytes — ~0.5 MiB at defaults.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["region_decide_kernel", "region_decide_call"]
+
+BLOCK_N = 128
+
+
+def region_decide_kernel(v_ref, ct_ref, cn_ref, out_ref):
+    v = v_ref[...]  # (BN, dp) f32
+    ct = ct_ref[...]  # (dp, k) f32 — centers, transposed
+    cn = cn_ref[...]  # (1, k)  f32 — ||c_k||^2
+    scores = jnp.dot(v, ct, preferred_element_type=jnp.float32)
+    scores = -2.0 * scores + cn
+    out_ref[...] = jnp.argmin(scores, axis=-1, keepdims=True).astype(jnp.int32)
+
+
+def region_decide_call(v_pad, ct, cn, *, interpret: bool):
+    """v_pad: (n_pad, dp); ct: (dp, k); cn: (1, k) -> (n_pad, 1) int32."""
+    n_pad, dp = v_pad.shape
+    k = ct.shape[1]
+    grid = (n_pad // BLOCK_N,)
+    return pl.pallas_call(
+        region_decide_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, dp), lambda i: (i, 0)),
+            pl.BlockSpec((dp, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+        interpret=interpret,
+    )(v_pad, ct, cn)

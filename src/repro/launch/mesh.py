@@ -1,0 +1,38 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16x16 = 256 chips over ("data", "model");
+multi-pod: 2 pods = 512 chips over ("pod", "data", "model"), where the pod
+axis is the DCN dimension (batch sharding composes over pod x data; the
+LSS-gated sync and gradient compression target this axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Best-effort mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        # Favor data parallelism: (n, 1).
+        shape = (n, 1) if len(axes) == 2 else (n,)
+    if int(np.prod(shape)) != n:
+        raise ValueError(f"mesh shape {shape} != {n} devices")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

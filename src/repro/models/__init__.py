@@ -1,0 +1,15 @@
+"""Model zoo: unified LM (dense/GQA/MoE/SSM/hybrid) + enc-dec backbone."""
+
+from __future__ import annotations
+
+from .encdec import EncDec, EncDecConfig
+from .transformer import LM, LMConfig
+
+__all__ = ["LM", "LMConfig", "EncDec", "EncDecConfig", "build"]
+
+
+def build(cfg):
+    """Model object from a config (LMConfig | EncDecConfig)."""
+    if isinstance(cfg, EncDecConfig):
+        return EncDec(cfg)
+    return LM(cfg)

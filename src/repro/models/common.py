@@ -1,0 +1,162 @@
+"""Shared model building blocks: norms, RoPE, init, sharding helpers.
+
+Models are plain functions over param pytrees (nested dicts).  Sharding is
+expressed twice:
+
+* **param specs** — a pytree of ``PartitionSpec`` mirroring the params,
+  produced by each model's ``param_specs(cfg)``; consumed by the launcher's
+  ``in_shardings`` and by FSDP all-gather insertion (XLA does the gathering
+  from the specs alone).
+* **activation constraints** — ``shard(x, *axes)`` applies
+  ``with_sharding_constraint`` using the axis environment installed by the
+  step builder (``axis_env``).  Axis names that the current mesh lacks are
+  dropped, so one model definition serves the single-pod, multi-pod and
+  single-device (tests) meshes unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "axis_env",
+    "axis_size",
+    "shard",
+    "pspec",
+    "DATA",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "apply_rope",
+    "normal_init",
+    "Params",
+]
+
+Params = Any  # nested dict of arrays
+
+# Batch-sharding axes: pod (if present) composes with data.
+DATA = ("pod", "data")
+
+_env = threading.local()
+
+
+@contextlib.contextmanager
+def axis_env(mesh_or_names):
+    """Install the available mesh axes (and sizes) for shard()/pspec().
+
+    Accepts a Mesh (preferred — exposes axis sizes to ``axis_size``) or a
+    bare sequence of axis names (sizes default to 1).
+    """
+    prev = getattr(_env, "axes", None)
+    prev_sizes = getattr(_env, "sizes", None)
+    if hasattr(mesh_or_names, "shape") and hasattr(mesh_or_names, "axis_names"):
+        _env.axes = tuple(mesh_or_names.axis_names)
+        _env.sizes = dict(mesh_or_names.shape)
+    else:
+        _env.axes = tuple(mesh_or_names)
+        _env.sizes = {a: 1 for a in _env.axes}
+    try:
+        yield
+    finally:
+        _env.axes = prev
+        _env.sizes = prev_sizes
+
+
+def _avail() -> tuple[str, ...]:
+    return getattr(_env, "axes", None) or ()
+
+
+def axis_size(name) -> int:
+    """Product of mesh sizes of the given axis name(s); 1 if absent."""
+    sizes = getattr(_env, "sizes", None) or {}
+    if isinstance(name, str):
+        name = (name,)
+    out = 1
+    for a in name:
+        out *= sizes.get(a, 1)
+    return out
+
+
+def _filter(axis):
+    """Drop axis names absent from the current mesh; () -> None."""
+    avail = _avail()
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in avail else None
+    kept = tuple(a for a in axis if a in avail)
+    return kept if kept else None
+
+
+def pspec(*axes) -> P:
+    """PartitionSpec with unavailable axes dropped (None-padded dims kept)."""
+    return P(*(_filter(a) for a in axes))
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the current axis environment."""
+    if not _avail():
+        return x
+    return jax.lax.with_sharding_constraint(x, pspec(*axes))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(positions, d_head: int, theta: float = 10_000.0):
+    """cos/sin tables for rotary embedding: (..., L, d_head/2) each."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., L, H, d_head); cos/sin: (..., L, d_head/2), broadcast over H."""
+    half = x.shape[-1] // 2
+    c = jnp.expand_dims(cos, -2)  # (..., L, 1, half)
+    s = jnp.expand_dims(sin, -2)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    return (scale * jax.random.normal(key, shape)).astype(dtype)

@@ -1,0 +1,67 @@
+"""Dense MLP blocks: SwiGLU (llama/qwen family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import DATA, shard
+
+__all__ = ["init_swiglu", "swiglu", "init_gelu", "gelu_mlp"]
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": common.normal_init(k1, (d_model, d_ff), dtype),
+        "wu": common.normal_init(k2, (d_model, d_ff), dtype),
+        "wd": common.normal_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu_specs(fsdp: bool = False):
+    d0 = DATA if fsdp else None
+    return {
+        "wg": common.pspec(d0, "model"),
+        "wu": common.pspec(d0, "model"),
+        "wd": common.pspec("model", d0),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(jnp.einsum("bld,df->blf", x, params["wg"]))
+    h = h * jnp.einsum("bld,df->blf", x, params["wu"])
+    h = shard(h, DATA, None, "model")
+    y = jnp.einsum("blf,fd->bld", h, params["wd"])
+    return shard(y, DATA, None, None)
+
+
+def init_gelu(key, d_model: int, d_ff: int, dtype=jnp.float32, bias=True):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "w1": common.normal_init(k1, (d_model, d_ff), dtype),
+        "w2": common.normal_init(k2, (d_ff, d_model), dtype),
+    }
+    if bias:
+        p |= {"b1": jnp.zeros((d_ff,), dtype), "b2": jnp.zeros((d_model,), dtype)}
+    return p
+
+
+def gelu_specs(bias=True, fsdp: bool = False):
+    d0 = DATA if fsdp else None
+    p = {"w1": common.pspec(d0, "model"), "w2": common.pspec("model", d0)}
+    if bias:
+        p |= {"b1": common.pspec("model"), "b2": common.pspec(None)}
+    return p
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("bld,df->blf", x, params["w1"])
+    if "b1" in params:
+        h = h + params["b1"]
+    h = shard(jax.nn.gelu(h), DATA, None, "model")
+    y = jnp.einsum("blf,fd->bld", h, params["w2"])
+    if "b2" in params:
+        y = y + params["b2"]
+    return shard(y, DATA, None, None)

@@ -1,0 +1,155 @@
+"""Token-choice top-k Mixture-of-Experts with group-local capacity dispatch.
+
+Dispatch is **group-local** (group = batch row, the Mesh-TF/MaxText
+"G" dim): each sequence sorts its own (L*K) token-slots by expert id,
+assigns positions within the expert via a local running count, drops
+beyond capacity, and scatters into its (E, C, D) slice of the global
+(B, E, C, D) buffer.  Consequences:
+
+  * no global sort / gather — every dispatch op is local to a batch row,
+    so the whole path shards cleanly over the data axes (the earlier
+    global-argsort formulation replicated (T*K, D) intermediates onto
+    every device: a 131 GB/device temp at mixtral prefill_32k — found and
+    killed via the dry-run memory analysis, see EXPERIMENTS.md §Perf);
+  * expert parallelism stays an einsum: (B,E,C,D) x (E,D,F) with E on
+    ``model`` (qwen3-moe: 8 experts/device) or F on ``model`` when there
+    are fewer experts than shards (mixtral);
+  * capacity C = cf * L * K / E per group; ``dropless=True`` (decode)
+    sets C = L so serving can never drop a token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import DATA, shard
+
+__all__ = ["MoEConfig", "init", "param_specs", "fwd"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int  # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shard_experts: bool = True  # EP on 'model' (else TP inside experts)
+    router_jitter: float = 0.0
+
+
+def init(key, cfg: MoEConfig, dtype=jnp.float32):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": common.normal_init(kr, (D, E), jnp.float32),
+        "wg": common.normal_init(kg, (E, D, F), dtype),
+        "wu": common.normal_init(ku, (E, D, F), dtype),
+        "wd": common.normal_init(kd, (E, F, D), dtype),
+    }
+
+
+def param_specs(cfg: MoEConfig, fsdp: bool = False):
+    d0 = DATA if fsdp else None
+    if cfg.shard_experts:
+        return {
+            "router": common.pspec(None, None),
+            "wg": common.pspec("model", d0, None),
+            "wu": common.pspec("model", d0, None),
+            "wd": common.pspec("model", d0, None),
+        }
+    return {
+        "router": common.pspec(None, None),
+        "wg": common.pspec(None, d0, "model"),
+        "wu": common.pspec(None, d0, "model"),
+        "wd": common.pspec(None, "model", d0),
+    }
+
+
+def _dispatch_group(xg, top_e, top_p, E: int, C: int):
+    """One group's dispatch.  xg: (L, D); top_e/top_p: (L, K).
+
+    Returns (buf (E, C, D), dst (L*K,), keep (L*K,), w (L*K,)).
+    """
+    L, D = xg.shape
+    K = top_e.shape[1]
+    flat_e = top_e.reshape(L * K)
+    order = jnp.argsort(flat_e)  # local, stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(L * K) - starts[sorted_e]
+    keep = pos_in_e < C
+    src_tok = order // K
+    dst = jnp.where(keep, sorted_e * C + pos_in_e, E * C)
+    buf = jnp.zeros((E * C, D), xg.dtype).at[dst].set(
+        xg[src_tok], mode="drop").reshape(E, C, D)
+    w = top_p.reshape(L * K)[order]
+    return buf, dst, keep, src_tok, w
+
+
+def _combine_group(y_e, dst, keep, src_tok, w, L: int, D: int):
+    """Inverse of dispatch: weighted scatter-add back to (L, D).
+
+    Runs at the storage dtype: the (L*K, D) cotangent of this gather is
+    all-reduced across the model axis in backward (experts live there) —
+    at f32 it was the largest single collective of the qwen3-moe train
+    cell (§Perf A3); bf16 halves it.
+    """
+    EC = y_e.shape[0] * y_e.shape[1]
+    slot_val = jnp.where(
+        keep[:, None], y_e.reshape(EC, D)[jnp.clip(dst, 0, EC - 1)], 0.0)
+    contrib = slot_val * w[:, None].astype(y_e.dtype)
+    return jnp.zeros((L, D), y_e.dtype).at[src_tok].add(contrib)
+
+
+def fwd(params, cfg: MoEConfig, x, dropless: bool = False):
+    """x: (B, L, D) -> (B, L, D), plus aux losses dict.
+
+    ``dropless=True`` (decode path) sets capacity C = L so routing
+    collisions can never drop a token — capacity drops are a training-time
+    throughput tradeoff, never acceptable during serving.
+    """
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("bld,de->ble", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # (B, L, K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style), over all tokens.
+    # ce via bincount, NOT one_hot: one_hot(top_e, E) materializes a
+    # (B, L, K, E) f32 tensor per layer — 536 GB global at qwen3-moe
+    # train_4k, the single largest HBM/all-reduce contributor (§Perf A2).
+    me = jnp.mean(probs, axis=(0, 1))
+    counts = jnp.bincount(top_e.reshape(-1), length=E)
+    ce = counts.astype(jnp.float32) / (B * L)
+    aux = E * jnp.sum(me * jax.lax.stop_gradient(ce)) / K
+
+    C = L if dropless else (int(cfg.capacity_factor * L * K / E) or 1)
+    C = min(C, L * K)
+
+    buf, dst, keep, src_tok, w = jax.vmap(
+        lambda xg, te, tp: _dispatch_group(xg, te, tp, E, C))(x, top_e, top_p)
+
+    e_ax = "model" if cfg.shard_experts else None
+    f_ax = None if cfg.shard_experts else "model"
+    buf = shard(buf, DATA, e_ax, None, None)  # (B, E, C, D)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["wg"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["wu"])
+    h = shard(h, DATA, e_ax, None, f_ax)
+    y_e = jnp.einsum("becf,efd->becd", h, params["wd"])
+    y_e = shard(y_e, DATA, e_ax, None, None)
+
+    y = jax.vmap(
+        lambda ye, d, k, s, ww: _combine_group(ye, d, k, s, ww, L, D)
+    )(y_e, dst, keep, src_tok, w)
+    return y.astype(x.dtype), {"aux_loss": aux}

@@ -1,0 +1,256 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked "dual" form for train/prefill: within a chunk of length Q the
+computation is an attention-like quadratic contraction with a causal decay
+mask (segment-sum of ``a = dt * A``); across chunks a linear recurrence
+carries the (H, P, N) state.  Decode is the pure recurrence — O(1) per
+token, which is why the ssm/hybrid archs run the ``long_500k`` shape.
+
+Layout: d_inner = expand * d_model, H = d_inner / headdim heads, state size
+N, G B/C-groups (shared across H/G heads).  Heads are sharded on ``model``;
+the state (B, H, P, N) is the decode "cache".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import DATA, shard
+
+__all__ = ["SSMConfig", "SSMState", "init", "param_specs", "fwd_train",
+           "fwd_decode", "init_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int  # N
+    headdim: int = 64  # P
+    expand: int = 2
+    n_groups: int = 1  # G
+    conv_kernel: int = 4
+    chunk: int = 256  # Q
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array  # (B, H, P, N)
+    conv: jax.Array  # (B, K-1, conv_dim) — causal-conv tail
+    pos: jax.Array  # (B,) int32
+
+
+def init(key, cfg: SSMConfig, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    H = cfg.n_heads
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + H
+    return {
+        "in_proj": common.normal_init(k1, (cfg.d_model, d_in_proj), dtype),
+        "conv_w": common.normal_init(k2, (cfg.conv_kernel, cfg.conv_dim),
+                                     dtype, scale=0.5),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((cfg.d_inner,), dtype),
+        "out_proj": common.normal_init(k3, (cfg.d_inner, cfg.d_model), dtype),
+    }
+
+
+def param_specs(cfg: SSMConfig, fsdp: bool = False):
+    d0 = DATA if fsdp else None
+    return {
+        "in_proj": common.pspec(d0, "model"),
+        "conv_w": common.pspec(None, "model"),
+        "conv_b": common.pspec("model"),
+        "A_log": common.pspec(None),
+        "D": common.pspec(None),
+        "dt_bias": common.pspec(None),
+        "norm_w": common.pspec("model"),
+        "out_proj": common.pspec("model", d0),
+    }
+
+
+def init_state(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    return SSMState(
+        ssm=jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state), dtype),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.conv_dim), dtype),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _split(cfg: SSMConfig, proj):
+    """in_proj output -> (z, xBC, dt)."""
+    di, gn, H = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : di + cfg.conv_dim]
+    dt = proj[..., di + cfg.conv_dim :]
+    return z, xBC, dt
+
+
+def _xbc_split(cfg: SSMConfig, xBC):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    return xBC[..., :di], xBC[..., di : di + gn], xBC[..., di + gn :]
+
+
+def _causal_conv(cfg: SSMConfig, xBC, conv_w, conv_b, tail=None):
+    """Depthwise causal conv1d along L; tail = (B, K-1, C) history."""
+    K = cfg.conv_kernel
+    if tail is None:
+        tail = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    xpad = jnp.concatenate([tail, xBC], axis=1)  # (B, L+K-1, C)
+    out = sum(
+        xpad[:, i : i + xBC.shape[1]] * conv_w[i] for i in range(K)
+    )
+    return jax.nn.silu(out + conv_b), xpad[:, -(K - 1):]
+
+
+def _segsum(a):
+    """(..., Q) -> (..., Q, Q) with out[i, j] = sum_{l=j+1..i} a_l (i >= j)."""
+    cum = jnp.cumsum(a, axis=-1)
+    return cum[..., :, None] - cum[..., None, :]
+
+
+def fwd_train(params, cfg: SSMConfig, x, state: SSMState | None = None):
+    """x: (B, L, D) -> (B, L, D), final SSMState (for prefill reuse)."""
+    B, L, D = x.shape
+    H, P, N, G, Q = cfg.n_heads, cfg.headdim, cfg.d_state, cfg.n_groups, cfg.chunk
+    # Largest divisor of L <= the configured chunk (production seq lengths
+    # are powers of two; odd test lengths fall back gracefully).
+    Q = min(Q, L)
+    while L % Q:
+        Q -= 1
+    nc = L // Q
+
+    proj = jnp.einsum("bld,df->blf", x, params["in_proj"])
+    z, xBC, dt_raw = _split(cfg, proj)
+    tail = state.conv if state is not None else None
+    xBC, new_tail = _causal_conv(cfg, xBC, params["conv_w"], params["conv_b"],
+                                 tail)
+    xin, Bssm, Cssm = _xbc_split(cfg, xBC)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+    a = dt * A  # (B, L, H)
+
+    xh = xin.reshape(B, L, H, P)
+    xh = shard(xh, DATA, None, "model", None)
+    Bh = Bssm.reshape(B, L, G, N)
+    Ch = Cssm.reshape(B, L, G, N)
+    rep = H // G
+    xdt = (xh.astype(jnp.float32) * dt[..., None])  # (B, L, H, P)
+
+    # chunk views
+    ac = a.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(ac, axis=2)  # (B, nc, Q, H)
+    xc = xdt.reshape(B, nc, Q, H, P)
+    Bc = Bh.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    Cc = Ch.reshape(B, nc, Q, G, N).astype(jnp.float32)
+
+    # ---- intra-chunk (dual quadratic form) ------------------------------
+    # Big O(Q^2) tensors are cast to the storage dtype (bf16 in
+    # production) on the einsum streams with f32 accumulation; the
+    # exp/segsum statistics stay f32 (§Perf C1).
+    dt_store = x.dtype
+    seg = _segsum(ac.transpose(0, 1, 3, 2))  # (B, nc, H, Q, Q) = cum_i - cum_j
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    # scores[b,c,h,i,j] = (C_i . B_j) * decay[h,i,j]
+    cb = jnp.einsum("bcigm,bcjgm->bcgij", Cc.astype(dt_store),
+                    Bc.astype(dt_store),
+                    preferred_element_type=jnp.float32)  # (B,nc,G,Q,Q)
+    cb = jnp.repeat(cb, rep, axis=2)  # (B, nc, H, Q, Q)
+    scores = (cb * decay).astype(dt_store)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, xc.astype(dt_store),
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states and inter-chunk recurrence ------------------------
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, Q, H)
+    Bfull = jnp.repeat(Bc, rep, axis=3)  # (B, nc, Q, H, N)
+    states = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn",
+                        decay_end.astype(dt_store), xc.astype(dt_store),
+                        Bfull.astype(dt_store),
+                        preferred_element_type=jnp.float32)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nc, H)
+    s0 = (state.ssm.astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def scan_fn(s, inp):
+        st_c, dec_c = inp  # (B,H,P,N), (B,H)
+        s_in = s  # state entering this chunk
+        s_out = s * dec_c[..., None, None] + st_c
+        return s_out, s_in
+
+    (s_final, s_enter) = jax.lax.scan(
+        scan_fn, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_enter = s_enter.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    Cfull = jnp.repeat(Cc, rep, axis=3)  # (B, nc, Q, H, N)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cfull.astype(dt_store),
+                         s_enter.astype(dt_store),
+                         jnp.exp(cum).astype(dt_store),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra.reshape(B, L, H, P) + y_inter.reshape(B, L, H, P))
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, L, cfg.d_inner)
+    # Gated RMSNorm (Mamba2's RMSNormGated: gate, then normalize).
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rms_norm(y.astype(x.dtype), params["norm_w"])
+    out = jnp.einsum("blf,fd->bld", y, params["out_proj"])
+    newpos = ((state.pos if state is not None else 0) + L)
+    new_state = SSMState(
+        ssm=s_final.astype(s0.dtype),
+        conv=new_tail,
+        pos=jnp.broadcast_to(jnp.asarray(newpos, jnp.int32), (B,)),
+    )
+    return shard(out, DATA, None, None), new_state
+
+
+def fwd_decode(params, cfg: SSMConfig, x, state: SSMState):
+    """One-token recurrence. x: (B, 1, D) -> (B, 1, D), state'."""
+    B = x.shape[0]
+    H, P, N, G = cfg.n_heads, cfg.headdim, cfg.d_state, cfg.n_groups
+    proj = jnp.einsum("bld,df->blf", x, params["in_proj"])[:, 0]
+    z, xBC, dt_raw = _split(cfg, proj)
+    # conv over the K-long history window
+    hist = jnp.concatenate([state.conv, xBC[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    xin, Bssm, Cssm = _xbc_split(cfg, xBC)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt * A)  # (B, H)
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bssm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cssm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+
+    s = state.ssm.astype(jnp.float32) * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, s) + params["D"][None, :, None] * xh
+    y = y.reshape(B, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rms_norm(y.astype(x.dtype), params["norm_w"])
+    out = jnp.einsum("bf,fd->bd", y, params["out_proj"])[:, None, :]
+    return out, SSMState(ssm=s.astype(state.ssm.dtype), conv=hist[:, 1:],
+                         pos=state.pos + 1)

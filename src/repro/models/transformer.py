@@ -1,0 +1,445 @@
+"""Unified decoder-only LM covering the dense / MoE / SSM / hybrid families.
+
+One config describes every assigned LM arch:
+
+* ``block="dense"``  — attn + SwiGLU (qwen3, command-r, codeqwen, yi,
+  chameleon backbone)
+* ``block="moe"``    — attn + MoE FFN (qwen3-moe, mixtral)
+* ``block="ssm"``    — Mamba2 block only (mamba2-370m; d_ff = 0)
+* ``block="hybrid"`` — groups of ``attn_every`` Mamba2 blocks, each group
+  preceded by a **shared** transformer block whose weights are reused by
+  every group (zamba2's shared-attention design; the KV caches are
+  per-application even though the weights are shared)
+
+Layers are stacked and scanned (``lax.scan`` over a (n_layers, ...) param
+stack) with optional ``jax.checkpoint`` on the block body, so the HLO is
+O(1) in depth — essential for 94-layer configs on a 512-way dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, common, mlp, moe as moe_lib, ssm as ssm_lib
+from .common import DATA, shard
+
+__all__ = ["LMConfig", "LM"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv: int = 0
+    d_head: int = 0
+    d_ff: int = 0
+    qk_norm: bool = False
+    bias: bool = False
+    window: int = 0
+    rope_theta: float = 10_000.0
+    block: str = "dense"
+    moe: Optional[moe_lib.MoEConfig] = None
+    ssm: Optional[ssm_lib.SSMConfig] = None
+    attn_every: int = 6  # hybrid: one shared attn block per group
+    norm_eps: float = 1e-6
+    tie_embed: bool = False
+    remat: bool = True
+    # remat policy: None = full recompute; "dots" = save matmul outputs
+    # (checkpoint_dots_with_no_batch_dims) — trades HBM capacity for not
+    # re-streaming the whole forward in backward (§Perf C3).
+    remat_policy: str | None = None
+    fsdp: bool = True
+    # Serving: shard weights over the data axes too (ZeRO-style) when a
+    # 1/16 model-parallel slice alone exceeds HBM (qwen3-moe: 29 GB/chip).
+    serve_fsdp: bool = False
+    dtype: Any = jnp.bfloat16
+    # Stub modality frontends (chameleon VQ tokens / whisper frames) supply
+    # ids from the fused vocab; nothing extra needed at the backbone.
+
+    @property
+    def attn(self) -> attention.AttnConfig:
+        return attention.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            d_head=self.d_head, qk_norm=self.qk_norm, bias=self.bias,
+            window=self.window, rope_theta=self.rope_theta,
+        )
+
+    @property
+    def n_groups(self) -> int:
+        assert self.block == "hybrid"
+        assert self.n_layers % self.attn_every == 0
+        return self.n_layers // self.attn_every
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6ND roofline math)."""
+        D, V = self.d_model, self.vocab
+        emb = V * D * (1 if self.tie_embed else 2)
+        per = 0
+        if self.block in ("dense", "moe"):
+            a = self.attn
+            per += D * (a.n_heads + 2 * a.n_kv) * a.d_head + a.n_heads * a.d_head * D
+            if self.block == "dense":
+                per += 3 * D * self.d_ff
+            else:
+                m = self.moe
+                per += D * m.n_experts + 3 * m.n_experts * D * m.d_ff
+            per += 2 * D
+        elif self.block == "ssm":
+            s = self.ssm
+            per += D * (2 * s.d_inner + 2 * s.n_groups * s.d_state + s.n_heads)
+            per += s.d_inner * D + s.conv_kernel * s.conv_dim + 2 * D
+        elif self.block == "hybrid":
+            s = self.ssm
+            per_ssm = (D * (2 * s.d_inner + 2 * s.n_groups * s.d_state + s.n_heads)
+                       + s.d_inner * D + s.conv_kernel * s.conv_dim + 2 * D)
+            a = self.attn
+            shared = (D * (a.n_heads + 2 * a.n_kv) * a.d_head
+                      + a.n_heads * a.d_head * D + 3 * D * self.d_ff + 2 * D)
+            return emb + self.n_layers * per_ssm + shared
+        return emb + self.n_layers * per
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.block != "moe":
+            return self.param_count()
+        D, V, m = self.d_model, self.vocab, self.moe
+        a = self.attn
+        per = (D * (a.n_heads + 2 * a.n_kv) * a.d_head
+               + a.n_heads * a.d_head * D
+               + D * m.n_experts + 3 * m.top_k * D * m.d_ff + 2 * D)
+        return V * D * (1 if self.tie_embed else 2) + self.n_layers * per
+
+
+class LMCache(NamedTuple):
+    """Decode cache: stacked attention caches + stacked SSM states."""
+
+    kv: Any  # KVCache with leading layer dim, or None
+    ssm: Any  # SSMState with leading layer dims, or None
+
+
+class LM:
+    """Functional model: params are nested dicts, methods are pure."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # ---------------- init -------------------------------------------------
+    def _init_block(self, key):
+        cfg = self.cfg
+        p = {}
+        if cfg.block in ("dense", "moe"):
+            k1, k2 = jax.random.split(key)
+            p["ln1"] = jnp.ones((cfg.d_model,), cfg.dtype)
+            p["attn"] = attention.init(k1, cfg.attn, cfg.dtype)
+            p["ln2"] = jnp.ones((cfg.d_model,), cfg.dtype)
+            if cfg.block == "dense":
+                p["mlp"] = mlp.init_swiglu(k2, cfg.d_model, cfg.d_ff, cfg.dtype)
+            else:
+                p["moe"] = moe_lib.init(k2, cfg.moe, cfg.dtype)
+        elif cfg.block in ("ssm", "hybrid"):
+            p["ln1"] = jnp.ones((cfg.d_model,), cfg.dtype)
+            p["ssm"] = ssm_lib.init(key, cfg.ssm, cfg.dtype)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 3)
+        blocks = jax.vmap(self._init_block)(keys[: cfg.n_layers])
+        params = {
+            "embed": common.normal_init(keys[-1], (cfg.vocab, cfg.d_model),
+                                        cfg.dtype, scale=0.02),
+            "blocks": blocks,
+            "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+        if not cfg.tie_embed:
+            params["lm_head"] = common.normal_init(
+                keys[-2], (cfg.d_model, cfg.vocab), cfg.dtype)
+        if cfg.block == "hybrid":
+            k1, k2 = jax.random.split(keys[-3])
+            params["shared"] = {
+                "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                "attn": attention.init(k1, cfg.attn, cfg.dtype),
+                "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mlp": mlp.init_swiglu(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+            }
+        return params
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---------------- sharding specs ---------------------------------------
+    def param_specs(self):
+        from jax.sharding import PartitionSpec as P
+
+        cfg = self.cfg
+        L = common.pspec  # shorthand
+        fsdp = cfg.fsdp
+
+        def stack(tree):
+            # blocks are stacked along a leading layer dim -> prepend None
+            return jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), tree,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+
+        blk = {}
+        if cfg.block in ("dense", "moe"):
+            blk["ln1"] = L(None)
+            blk["attn"] = attention.param_specs(cfg.attn, fsdp)
+            blk["ln2"] = L(None)
+            if cfg.block == "dense":
+                blk["mlp"] = mlp.swiglu_specs(fsdp)
+            else:
+                blk["moe"] = moe_lib.param_specs(cfg.moe, fsdp)
+        else:
+            blk["ln1"] = L(None)
+            blk["ssm"] = ssm_lib.param_specs(cfg.ssm, fsdp)
+
+        specs = {
+            "embed": L("model", DATA if fsdp else None),
+            "blocks": stack(blk),
+            "final_norm": L(None),
+        }
+        if not cfg.tie_embed:
+            specs["lm_head"] = L(DATA if fsdp else None, "model")
+        if cfg.block == "hybrid":
+            specs["shared"] = {
+                "ln1": L(None),
+                "attn": attention.param_specs(cfg.attn, fsdp),
+                "ln2": L(None),
+                "mlp": mlp.swiglu_specs(fsdp),
+            }
+        return specs
+
+    # ---------------- block bodies ------------------------------------------
+    def _attn_mlp_block(self, p, x, mode, cache=None, moe_aux=None):
+        cfg = self.cfg
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mode == "train":
+            a = attention.fwd_train(p["attn"], cfg.attn, h)
+        elif mode == "prefill":
+            a, cache = attention.fwd_prefill(p["attn"], cfg.attn, h, cache)
+        else:
+            a, cache = attention.fwd_decode(p["attn"], cfg.attn, h, cache)
+        x = x + a
+        h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.block == "moe" and "moe" in p:
+            y, aux = moe_lib.fwd(p["moe"], cfg.moe, h,
+                                 dropless=(mode == "decode"))
+            moe_aux = aux["aux_loss"] if moe_aux is None else moe_aux + aux["aux_loss"]
+        else:
+            y = mlp.swiglu(p["mlp"], h)
+        return x + y, cache, moe_aux
+
+    def _ssm_block(self, p, x, mode, state=None):
+        cfg = self.cfg
+        h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            y, state = ssm_lib.fwd_decode(p["ssm"], cfg.ssm, h, state)
+        else:
+            y, state = ssm_lib.fwd_train(p["ssm"], cfg.ssm, h, state)
+        return x + y, state
+
+    def _ckpt(self, body):
+        cfg = self.cfg
+        if not cfg.remat:
+            return body
+        if cfg.remat_policy == "dots":
+            pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            return jax.checkpoint(body, policy=pol)
+        return jax.checkpoint(body)
+
+    # ---------------- forward (train) ---------------------------------------
+    def logits_train(self, params, tokens):
+        """tokens (B, L) int32 -> logits (B, L, V); returns (logits, aux)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.dtype)
+        x = shard(x, DATA, None, None)
+
+        if cfg.block in ("dense", "moe"):
+            def body(carry, bp):
+                x, aux = carry
+                x, _, aux2 = self._attn_mlp_block(bp, x, "train", None, aux)
+                return (x, aux2 if aux2 is not None else aux), None
+
+            body = self._ckpt(body)
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       params["blocks"])
+        elif cfg.block == "ssm":
+            def body(carry, bp):
+                x = carry
+                x, _ = self._ssm_block(bp, x, "train")
+                return x, None
+
+            body = self._ckpt(body)
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+            aux = jnp.zeros((), jnp.float32)
+        else:  # hybrid
+            g = self.cfg.attn_every
+            ng = cfg.n_groups
+            stacked = jax.tree.map(
+                lambda a: a.reshape(ng, g, *a.shape[1:]), params["blocks"])
+
+            def body(x, bp_group):
+                x, _, _ = self._attn_mlp_block(params["shared"], x, "train")
+
+                def inner(x, bp):
+                    x, _ = self._ssm_block(bp, x, "train")
+                    return x, None
+
+                x, _ = jax.lax.scan(inner, x, bp_group)
+                return x, None
+
+            body = self._ckpt(body)
+            x, _ = jax.lax.scan(body, x, stacked)
+            aux = jnp.zeros((), jnp.float32)
+
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+        logits = jnp.einsum("bld,dv->blv", x, head.astype(cfg.dtype))
+        return shard(logits, DATA, None, "model"), aux
+
+    def loss(self, params, tokens, labels):
+        logits, aux = self.logits_train(params, tokens)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = jnp.mean(logz - gold)
+        return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+    # ---------------- serving ----------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> LMCache:
+        cfg = self.cfg
+
+        def stack_kv(n):
+            c = attention.init_cache(cfg.attn, batch,
+                                     min(max_len, cfg.window or max_len),
+                                     cfg.dtype)
+            return jax.tree.map(lambda a: jnp.stack([a] * n), c)
+
+        def stack_ssm(shape_prefix):
+            s = ssm_lib.init_state(cfg.ssm, batch)
+            def rep(a):
+                out = a
+                for n in reversed(shape_prefix):
+                    out = jnp.stack([out] * n)
+                return out
+            return jax.tree.map(rep, s)
+
+        if cfg.block in ("dense", "moe"):
+            return LMCache(kv=stack_kv(cfg.n_layers), ssm=None)
+        if cfg.block == "ssm":
+            return LMCache(kv=None, ssm=stack_ssm((cfg.n_layers,)))
+        return LMCache(kv=stack_kv(cfg.n_groups),
+                       ssm=stack_ssm((cfg.n_groups, cfg.attn_every)))
+
+    def cache_specs(self, long_ctx: bool = False) -> LMCache:
+        """PartitionSpec tree matching init_cache().
+
+        Normal decode shards the batch on (pod, data) and heads on model;
+        ``long_ctx`` (batch too small to shard) shards the KV *sequence* on
+        data instead (sequence parallelism) and replicates SSM state on
+        data (it is O(1)-sized).
+        """
+        cfg = self.cfg
+        L = common.pspec
+        b = None if long_ctx else DATA
+        # Shard KV heads on "model" when divisible; otherwise shard head_dim
+        # (within-head Megatron-style split — d_head is 64/80/128 in the
+        # pool, always divisible by the 16-way model axis).
+        kv_div = cfg.n_kv and cfg.n_kv % max(common.axis_size("model"), 1) == 0
+        h_ax, d_ax = ("model", None) if kv_div else (None, "model")
+        kv = attention.KVCache(
+            k=L(None, b, "data" if long_ctx else None, h_ax, d_ax),
+            v=L(None, b, "data" if long_ctx else None, h_ax, d_ax),
+            length=L(None, b),
+        )
+        if cfg.block in ("dense", "moe"):
+            return LMCache(kv=kv, ssm=None)
+        if cfg.block == "ssm":
+            st = ssm_lib.SSMState(
+                ssm=L(None, b, "model", None, None),
+                conv=L(None, b, None, "model"),
+                pos=L(None, b),
+            )
+            return LMCache(kv=None, ssm=st)
+        st = ssm_lib.SSMState(
+            ssm=L(None, None, b, "model", None, None),
+            conv=L(None, None, b, None, "model"),
+            pos=L(None, None, b),
+        )
+        return LMCache(kv=kv, ssm=st)
+
+    def _serve_scan(self, params, x, cache: LMCache, mode):
+        cfg = self.cfg
+        if cfg.block in ("dense", "moe"):
+            def body(x, inp):
+                bp, c = inp
+                x, c2, _ = self._attn_mlp_block(bp, x, mode, c)
+                return x, c2
+
+            x, kv = jax.lax.scan(body, x, (params["blocks"], cache.kv))
+            return x, LMCache(kv=kv, ssm=None)
+        if cfg.block == "ssm":
+            def body2(x, inp):
+                bp, s = inp
+                h = common.rms_norm(x, bp["ln1"], cfg.norm_eps)
+                if mode == "decode":
+                    y, s2 = ssm_lib.fwd_decode(bp["ssm"], cfg.ssm, h, s)
+                else:
+                    y, s2 = ssm_lib.fwd_train(bp["ssm"], cfg.ssm, h, s)
+                return x + y, s2
+
+            x, st = jax.lax.scan(body2, x, (params["blocks"], cache.ssm))
+            return x, LMCache(kv=None, ssm=st)
+        # hybrid
+        g, ng = cfg.attn_every, cfg.n_groups
+        stacked = jax.tree.map(
+            lambda a: a.reshape(ng, g, *a.shape[1:]), params["blocks"])
+
+        def body(x, inp):
+            bp_group, kv_c, ssm_c = inp
+            x, kv2, _ = self._attn_mlp_block(params["shared"], x, mode, kv_c)
+
+            def inner(x, inp2):
+                bp, s = inp2
+                h = common.rms_norm(x, bp["ln1"], cfg.norm_eps)
+                if mode == "decode":
+                    y, s2 = ssm_lib.fwd_decode(bp["ssm"], cfg.ssm, h, s)
+                else:
+                    y, s2 = ssm_lib.fwd_train(bp["ssm"], cfg.ssm, h, s)
+                return x + y, s2
+
+            x, ssm2 = jax.lax.scan(inner, x, (bp_group, ssm_c))
+            return x, (kv2, ssm2)
+
+        x, (kv, st) = jax.lax.scan(body, x, (stacked, cache.kv, cache.ssm))
+        return x, LMCache(kv=kv, ssm=st)
+
+    def prefill(self, params, tokens, cache: LMCache):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.dtype)
+        x = shard(x, DATA, None, None)
+        x, cache = self._serve_scan(params, x, cache, "prefill")
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cfg.dtype))
+        return shard(logits, DATA, "model"), cache
+
+    def decode_step(self, params, token, cache: LMCache):
+        """token (B,) int32 -> (logits (B, V), cache')."""
+        cfg = self.cfg
+        x = params["embed"][token[:, None]].astype(cfg.dtype)
+        x, cache = self._serve_scan(params, x, cache, "decode")
+        x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+        logits = jnp.einsum("bd,dv->bv", x[:, 0], head.astype(cfg.dtype))
+        return shard(logits, DATA, "model"), cache

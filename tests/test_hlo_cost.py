@@ -1,0 +1,99 @@
+"""hlo_cost analyzer: loop multipliers and collective byte accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_cost
+
+
+def test_scan_flops_scale_with_trip_count():
+    """A scanned matmul must count body flops x trip count."""
+    D = 64
+
+    def f(w, x):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    w = jnp.zeros((D, D))
+    x = jnp.zeros((8, D))
+    txt = jax.jit(f).lower(w, x).compile().as_text()
+    res = hlo_cost.analyze(txt)
+    per_mm = 2 * 8 * D * D
+    # 7 iterations of one matmul (allow fusion slop)
+    assert res["flops"] >= 6.5 * per_mm, res["flops"]
+    assert res["flops"] <= 9 * per_mm, res["flops"]
+
+
+def test_unrolled_vs_scanned_flops_agree():
+    D = 32
+
+    def scanned(w, x):
+        def body(x, _):
+            return x @ w, None
+        return jax.lax.scan(body, x, None, length=5)[0]
+
+    def unrolled(w, x):
+        for _ in range(5):
+            x = x @ w
+        return x
+
+    w = jnp.zeros((D, D))
+    x = jnp.zeros((4, D))
+    fs = hlo_cost.analyze(jax.jit(scanned).lower(w, x).compile().as_text())
+    fu = hlo_cost.analyze(jax.jit(unrolled).lower(w, x).compile().as_text())
+    assert abs(fs["flops"] - fu["flops"]) / fu["flops"] < 0.25, (fs, fu)
+
+
+def test_nested_scan_multiplies():
+    D = 16
+
+    def f(w, x):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+            x, _ = jax.lax.scan(inner, x, None, length=3)
+            return x, None
+        return jax.lax.scan(outer, x, None, length=4)[0]
+
+    w = jnp.zeros((D, D))
+    x = jnp.zeros((2, D))
+    res = hlo_cost.analyze(jax.jit(f).lower(w, x).compile().as_text())
+    per_mm = 2 * 2 * D * D
+    assert res["flops"] >= 11 * per_mm, res  # 12 matmuls expected
+    assert res["flops"] <= 14 * per_mm, res
+
+
+def test_dot_flops_parsing():
+    hlo = """
+HloModule m
+
+ENTRY %main_spmd (p0: f32[8,32], p1: f32[32,16]) -> f32[8,16] {
+  %p0 = f32[8,32]{1,0} parameter(0)
+  %p1 = f32[32,16]{1,0} parameter(1)
+  ROOT %dot.1 = f32[8,16]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    res = hlo_cost.analyze(hlo)
+    assert res["flops"] == 2 * 8 * 16 * 32
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+HloModule m
+
+ENTRY %main_spmd (p0: f32[128]) -> f32[128] {
+  %p0 = f32[128]{0} parameter(0)
+  ROOT %all-reduce.1 = f32[128]{0} all-reduce(%p0), replica_groups={}, to_apply=%add
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+"""
+    res = hlo_cost.analyze(hlo)
+    assert res["collective_bytes"]["all-reduce"] == 128 * 4

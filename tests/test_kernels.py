@@ -1,0 +1,84 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk(rng, n, D, d, k, dtype, zero_frac=0.25):
+    f = lambda *s: jnp.asarray(rng.standard_normal(s).astype(dtype))
+    pos = lambda *s: jnp.asarray(rng.uniform(0.05, 2.0, s).astype(dtype))
+    x_m, x_c = f(n, d), jnp.ones((n,), dtype)
+    out_m, out_c = f(n, D, d) * 0.3, pos(n, D)
+    in_m, in_c = f(n, D, d) * 0.3, pos(n, D)
+    zero = rng.random((n, D)) < zero_frac
+    out_c = jnp.where(zero, 0.0, out_c)
+    out_m = jnp.where(zero[..., None], 0.0, out_m)
+    in_c = jnp.where(zero, 0.0, in_c)
+    in_m = jnp.where(zero[..., None], 0.0, in_m)
+    mask = jnp.asarray(rng.random((n, D)) > 0.2)
+    centers = f(k, d) * 2.0
+    return x_m, x_c, out_m, out_c, in_m, in_c, mask, centers
+
+
+SHAPES = [(64, 2, 2, 3), (200, 5, 3, 4), (130, 8, 6, 7), (1024, 4, 1, 2),
+          (33, 3, 2, 243)]
+
+
+@pytest.mark.parametrize("n,D,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_region_decide_sweep(n, D, d, k, dtype):
+    rng = np.random.default_rng(n + D)
+    v = jnp.asarray(rng.standard_normal((n, d)).astype(dtype))
+    centers = jnp.asarray(rng.standard_normal((k, d)).astype(dtype))
+    got = ops.region_decide(v, centers)
+    want = ref.region_decide_ref(v, centers)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("n,D,d,k", SHAPES)
+def test_lss_state_sweep(n, D, d, k):
+    rng = np.random.default_rng(n * 7 + D)
+    x_m, x_c, out_m, out_c, in_m, in_c, mask, centers = _mk(
+        rng, n, D, d, k, np.float32)
+    sm, sc, viol, dec = ops.lss_state(x_m, x_c, out_m, out_c, in_m, in_c,
+                                      mask, centers)
+    rsm, rsc, rviol, rdec = ref.lss_state_ref(x_m, x_c, out_m, out_c, in_m,
+                                              in_c, mask, centers)
+    np.testing.assert_allclose(np.asarray(sm), np.asarray(rsm), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(rsc), atol=1e-6)
+    assert (np.asarray(dec) == np.asarray(rdec)).all()
+    assert (np.asarray(viol) == np.asarray(rviol)).all()
+
+
+@pytest.mark.parametrize("n,D,d,k", SHAPES)
+@pytest.mark.parametrize("beta", [1e-3, 0.1])
+def test_correction_sweep(n, D, d, k, beta):
+    rng = np.random.default_rng(n * 13 + D)
+    x_m, x_c, out_m, out_c, in_m, in_c, mask, centers = _mk(
+        rng, n, D, d, k, np.float32, zero_frac=0.0)
+    rsm, rsc, rviol, _ = ref.lss_state_ref(x_m, x_c, out_m, out_c, in_m,
+                                           in_c, mask, centers)
+    a_m, a_c = out_m + in_m, out_c + in_c
+    v = rviol & np.asarray(mask)
+    om, oc = ops.correction(rsm, rsc, a_m, a_c, in_m, in_c, v, beta=beta)
+    rom, roc = ref.correction_ref(rsm, rsc, a_m, a_c, in_m, in_c, v, beta)
+    sel = np.asarray(v)
+    if sel.any():
+        np.testing.assert_allclose(np.asarray(om)[sel], np.asarray(rom)[sel],
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(oc)[sel], np.asarray(roc)[sel],
+                                   atol=1e-5)
+
+
+def test_lss_state_bf16_inputs_upcast():
+    """Kernels normalize dtypes: bf16 inputs give f32-accurate results."""
+    rng = np.random.default_rng(3)
+    args = _mk(rng, 64, 4, 2, 3, np.float32)
+    bf = [a.astype(jnp.bfloat16) if a.dtype == jnp.float32 else a
+          for a in args[:6]] + list(args[6:])
+    sm, sc, viol, dec = ops.lss_state(*bf)
+    assert sm.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(sm)))

@@ -1,0 +1,210 @@
+"""Substrate tests: checkpoint, data, optimizer, compression, trainer FT."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.data import TokenSource
+from repro.distributed import compression
+from repro.optim import AdamWConfig, adamw_init, adamw_update, \
+    clip_by_global_norm, cosine_schedule
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    checkpoint.save(tmp_path, 7, t)
+    assert checkpoint.latest_step(tmp_path) == 7
+    t2 = checkpoint.load(tmp_path, 7, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save_async(tmp_path, s, t, max_keep=2)
+    checkpoint.wait_pending()
+    assert checkpoint.latest_step(tmp_path) == 5
+    kept = sorted(p.name for p in tmp_path.glob("step_*") if p.is_dir())
+    assert len(kept) <= 2
+    t2 = checkpoint.load(tmp_path, 5, t)
+    np.testing.assert_array_equal(np.asarray(t2["a"]), np.asarray(t["a"]))
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    """A tmp dir left behind must never be visible as a checkpoint."""
+    t = _tree()
+    checkpoint.save(tmp_path, 1, t)
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert checkpoint.latest_step(tmp_path) == 1
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore with explicit shardings (mesh-to-mesh move)."""
+    t = _tree()
+    checkpoint.save(tmp_path, 3, t)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    t2 = checkpoint.load(tmp_path, 3, t, shardings=sh)
+    assert t2["a"].sharding.mesh.shape == {"data": 1}
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_sharded():
+    src = TokenSource(vocab=1000, seq_len=16, global_batch=8, seed=3)
+    b1 = src.global_batch_at(5)
+    b2 = src.global_batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1.tokens), np.asarray(b2.tokens))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b1.tokens[:, 1:]),
+                                  np.asarray(b1.labels[:, :-1]))
+    # different steps differ
+    b3 = src.global_batch_at(6)
+    assert not np.array_equal(np.asarray(b1.tokens), np.asarray(b3.tokens))
+
+
+def test_data_vocab_range():
+    src = TokenSource(vocab=50, seq_len=64, global_batch=4)
+    b = src.global_batch_at(0)
+    assert int(b.tokens.min()) >= 0 and int(b.tokens.max()) < 50
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.array([1.0, 2.0, 3.0])))
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        _, g = clip_by_global_norm(g, 10.0)
+        params, opt = adamw_update(params, g, opt, 0.05, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               [1.0, 2.0, 3.0], atol=0.05)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    norm, g2 = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g2)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    import numpy as np
+    lrs = [float(cosine_schedule(jnp.asarray(s), 1e-3, 10, 100))
+           for s in range(0, 100, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=0.1)
+    assert lrs[-1] < lrs[4]
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+def test_int8_error_feedback_preserves_sum():
+    """With error feedback, quantization error does not accumulate: the
+    running sum of decompressed values tracks the true running sum."""
+    rng = np.random.default_rng(0)
+    err = None
+    true_sum = np.zeros(64, np.float32)
+    deq_sum = np.zeros(64, np.float32)
+    for _ in range(100):
+        g = jnp.asarray(rng.normal(size=64).astype(np.float32))
+        pack, err = compression.int8_compress(g, err)
+        deq = compression.int8_decompress(pack)
+        true_sum += np.asarray(g)
+        deq_sum += np.asarray(deq)
+    # residual error is bounded by one quantization step, not ~100 steps
+    assert np.max(np.abs(true_sum - deq_sum)) < 0.5
+
+
+def test_topk_error_feedback():
+    rng = np.random.default_rng(1)
+    err = None
+    true_sum = np.zeros(128, np.float32)
+    sent_sum = np.zeros(128, np.float32)
+    for _ in range(200):
+        g = jnp.asarray(rng.normal(size=128).astype(np.float32))
+        kept, err = compression.topk_compress(g, err, frac=0.1)
+        true_sum += np.asarray(g)
+        sent_sum += np.asarray(kept)
+    # every coordinate eventually ships (error feedback) — relative error
+    # of the running sum stays small
+    denom = np.maximum(np.abs(true_sum), 1.0)
+    assert np.median(np.abs(true_sum - sent_sum) / denom) < 0.6
+
+
+def test_topk_keeps_top_fraction():
+    x = jnp.arange(100.0)
+    kept, err = compression.topk_compress(x, None, frac=0.1)
+    assert int(jnp.sum(kept != 0)) == 10
+    assert float(kept[99]) == 99.0 and float(kept[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# trainer fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_resume_and_fault_recovery(tmp_path):
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    params = {"w": jnp.zeros((4,))}
+    opt = adamw_init(params)
+
+    def step_fn(p, o, batch):
+        g = {"w": p["w"] - batch}
+        _, g = clip_by_global_norm(g, 1e9)
+        p2, o2 = adamw_update(p, g, o, 0.1, AdamWConfig(weight_decay=0.0))
+        return p2, o2, {"loss": jnp.sum(jnp.square(p2["w"] - batch))}
+
+    def batch_fn(step):
+        return jnp.full((4,), 1.0)
+
+    cfg = TrainerConfig(total_steps=30, ckpt_every=10,
+                        ckpt_dir=str(tmp_path), log_every=5)
+    boom = {"armed": True}
+
+    def fault(step):
+        if step == 17 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected device failure")
+
+    tr = Trainer(cfg, step_fn, batch_fn)
+    params2, opt2 = tr.run(params, opt, fault_injector=fault)
+    events = [m.get("event") for m in tr.metrics_log]
+    assert "restored" in events  # failure was recovered from a checkpoint
+    assert int(opt2.step) >= 30 - 10  # made it to the end after restore
+    assert checkpoint.latest_step(tmp_path) == 30

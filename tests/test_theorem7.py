@@ -1,0 +1,122 @@
+"""Thm. 7: a termination state exists for any connected graph + inputs.
+
+We build the constructive assignment from the proof — spanning-tree
+messages X_ij = 1/2 (.) Y_i  (-)  1/(4|V|) (.) (+)X and
+X_ji = 3/(4|V|) (.) (+)X (-) 1/2 (.) Y_i, zero-weight off-tree links —
+and check the proof's invariants numerically on a *cyclic* graph:
+
+  * every tree-edge difference X_ij (-) X_ji has zero weight, hence the
+    subtree status Y_i has weight exactly 1 for every node;
+  * all A_ij and S_i (-) A_ij equal (1/(2|V|)) (.) (+)X (vector = global
+    mean, weight 1/2);
+  * Def. 4 holds at every peer for any region family containing the mean.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stopping, topology, wvs
+
+
+def _bfs_tree(topo: topology.Topology):
+    import collections
+
+    n = topo.n
+    parent = np.full(n, -2, np.int64)
+    parent[0] = -1
+    q = collections.deque([0])
+    adj = [
+        [int(topo.nbr[i, k]) for k in range(topo.max_deg) if topo.mask[i, k]]
+        for i in range(n)
+    ]
+    order = [0]
+    while q:
+        u = q.popleft()
+        for v in adj[u]:
+            if parent[v] == -2:
+                parent[v] = u
+                order.append(v)
+                q.append(v)
+    assert (parent != -2).all(), "graph not connected"
+    return parent, order
+
+
+def test_thm7_construction_is_stopping_state():
+    topo = topology.grid(25)  # cyclic!
+    n, D = topo.n, topo.max_deg
+    d = 2
+    rng = np.random.default_rng(0)
+    xv = rng.normal(size=(n, d)).astype(np.float64)
+    gx_m = xv.sum(0)  # moment of (+)X (weight n)
+    gx_mean = gx_m / n
+    parent, order = _bfs_tree(topo)
+
+    out_m = np.zeros((n, D, d))
+    out_c = np.zeros((n, D))
+    in_m = np.zeros((n, D, d))
+    in_c = np.zeros((n, D))
+
+    def slot(i, j):
+        for k in range(D):
+            if topo.mask[i, k] and topo.nbr[i, k] == j:
+                return k
+        raise KeyError((i, j))
+
+    # Bottom-up: Y_i = X_ii (+) sum over children (X_ki (-) X_ik), then the
+    # proof's messages for the edge to the parent.  The child differences
+    # carry ZERO weight (each is (+)_{V_k} X (-) (|V_k|/|V|)(.)( +)X), so
+    # |Y_i| == 1 for every node — the subtlety the proof's induction rests
+    # on.
+    y_m = xv.copy()
+    y_c = np.ones(n)
+    for u in reversed(order):
+        p = parent[u]
+        if p < 0:
+            continue
+        # messages on edge (u -> p) from Y_u
+        m_up = 0.5 * y_m[u] - gx_m / (4.0 * n) * 1.0  # 1/(4|V|) (.) (+)X
+        c_up = 0.5 * y_c[u] - 0.25
+        m_dn = 3.0 * gx_m / (4.0 * n) - 0.5 * y_m[u]
+        c_dn = 0.75 - 0.5 * y_c[u]
+        ku, kp = slot(u, p), slot(p, u)
+        out_m[u, ku], out_c[u, ku] = m_up, c_up
+        in_m[p, kp], in_c[p, kp] = m_up, c_up
+        out_m[p, kp], out_c[p, kp] = m_dn, c_dn
+        in_m[u, ku], in_c[u, ku] = m_dn, c_dn
+        # fold this edge into the parent's Y (children-only status)
+        y_m[p] += m_up - m_dn
+        y_c[p] += c_up - c_dn
+
+    # Invariant: |Y_i| == 1 everywhere (zero-weight differences).
+    assert np.allclose(y_c, 1.0, atol=1e-12)
+
+    mask = jnp.asarray(topo.mask)
+    f32 = lambda a: jnp.asarray(a, jnp.float32)
+    s = stopping.status(f32(xv), jnp.ones((n,)), f32(out_m), f32(out_c),
+                        f32(in_m), f32(in_c), mask)
+    a = stopping.agreements(f32(out_m), f32(out_c), f32(in_m), f32(in_c))
+
+    # S_i: weight 1, vector = global mean, for every peer.
+    assert np.allclose(np.asarray(s.c), 1.0, atol=1e-5)
+    assert np.allclose(np.asarray(wvs.vec(s)), gx_mean, atol=1e-4)
+
+    # Tree-edge agreements: weight 1/2, vector = global mean; off-tree
+    # edges zero-weight.
+    ac = np.asarray(a.c)
+    va = np.asarray(wvs.vec(a))
+    for i in range(n):
+        for k in range(D):
+            if not topo.mask[i, k]:
+                continue
+            if abs(ac[i, k]) < 1e-9:
+                continue  # off-tree: zero weight, Def.-4 guard applies
+            assert np.isclose(ac[i, k], 0.5, atol=1e-5), (i, k)
+            assert np.allclose(va[i, k], gx_mean, atol=1e-4), (i, k)
+
+    # Def. 4 holds in the context of any region family containing the mean.
+    centers = jnp.asarray(
+        np.stack([gx_mean + 0.01, gx_mean + 5.0]).astype(np.float32))
+    from repro.core import regions
+    decide = lambda v: regions.decide_voronoi(v, centers)
+    ok = stopping.def4_satisfied(decide, s, a, mask)
+    assert bool(jnp.all(ok))

@@ -1,0 +1,96 @@
+"""Property tests for the weighted vector space (Def. 1), moment form."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wvs
+
+finite = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                   allow_infinity=False)
+pos = st.floats(min_value=0.0078125, max_value=128.0, allow_nan=False)
+
+
+def wv_strategy(d=3):
+    return st.tuples(
+        st.lists(finite, min_size=d, max_size=d),
+        pos,
+    ).map(lambda t: wvs.from_vector(jnp.array(t[0], jnp.float32),
+                                    jnp.float32(t[1])))
+
+
+@settings(max_examples=50, deadline=None)
+@given(wv_strategy(), wv_strategy())
+def test_add_commutative(x, y):
+    assert wvs.allclose(wvs.add(x, y), wvs.add(y, x))
+
+
+@settings(max_examples=50, deadline=None)
+@given(wv_strategy(), wv_strategy(), wv_strategy())
+def test_add_associative(x, y, z):
+    a = wvs.add(wvs.add(x, y), z)
+    b = wvs.add(x, wvs.add(y, z))
+    assert np.allclose(a.m, b.m, rtol=1e-4, atol=1e-4)
+    assert np.allclose(a.c, b.c, rtol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(wv_strategy())
+def test_identity_element(x):
+    z = wvs.zero(x.d)
+    assert wvs.allclose(wvs.add(x, z), x)
+
+
+@settings(max_examples=50, deadline=None)
+@given(wv_strategy(), wv_strategy())
+def test_sub_inverts_add(x, y):
+    # X = Y (+) Z  =>  Z = X (-) Y  (footnote 1: defined since weights > 0)
+    z = wvs.sub(wvs.add(x, y), y)
+    # f32 cancellation scales with the larger moment magnitude
+    scale = max(1.0, float(np.max(np.abs(np.asarray(y.m)))))
+    assert np.allclose(z.m, x.m, atol=1e-3 * scale, rtol=1e-4)
+    assert np.allclose(z.c, x.c, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(wv_strategy(), st.floats(min_value=0.125, max_value=8.0))
+def test_smul_scales_weight_not_vector(x, s):
+    y = wvs.smul(jnp.float32(s), x)
+    # vector part unchanged (paper: c (.) <v, c2> = <v, c*c2>)
+    assert np.allclose(wvs.vec(y), wvs.vec(x), rtol=1e-4, atol=1e-5)
+    assert np.allclose(y.c, s * x.c, rtol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(wv_strategy(), wv_strategy())
+def test_weighted_average_definition(x, y):
+    """(+) is the weighted average of the vector parts (Def. 1)."""
+    z = wvs.add(x, y)
+    want = (x.c * wvs.vec(x) + y.c * wvs.vec(y)) / (x.c + y.c)
+    assert np.allclose(wvs.vec(z), want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(wv_strategy(), min_size=2, max_size=6))
+def test_wsum_matches_fold(xs):
+    batched = wvs.WV(jnp.stack([x.m for x in xs]), jnp.stack([x.c for x in xs]))
+    total = wvs.wsum(batched, axis=0)
+    acc = xs[0]
+    for x in xs[1:]:
+        acc = wvs.add(acc, x)
+    assert np.allclose(total.m, acc.m, rtol=1e-4, atol=1e-4)
+    assert np.allclose(total.c, acc.c, rtol=1e-5)
+
+
+def test_triangle_inequality_vector_part():
+    # ||vec(X (+) Y)|| <= max component norm: convex combination property.
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        x = wvs.from_vector(jnp.array(rng.normal(size=3), jnp.float32),
+                            jnp.float32(rng.uniform(0.1, 5)))
+        y = wvs.from_vector(jnp.array(rng.normal(size=3), jnp.float32),
+                            jnp.float32(rng.uniform(0.1, 5)))
+        z = wvs.add(x, y)
+        n = float(jnp.linalg.norm(wvs.vec(z)))
+        assert n <= max(float(jnp.linalg.norm(wvs.vec(x))),
+                        float(jnp.linalg.norm(wvs.vec(y)))) + 1e-5

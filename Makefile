@@ -1,0 +1,21 @@
+# Tier-1 verification + common dev entry points.
+
+PY ?= python
+
+.PHONY: verify test bench bench-full dev-deps
+
+# The tier-1 gate (ROADMAP.md): full suite, fail fast.
+verify:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test: verify
+
+dev-deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+# CI-budget benchmark sweep (CSV to stdout); bench-full = paper scale.
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+bench-full:
+	PYTHONPATH=src $(PY) -m benchmarks.run --full

@@ -36,11 +36,12 @@ def topo_factory(kind: str, n: int, conn: int = 2):
 
 
 def timed_static(kind: str, n: int, spec_kw=None, cfg=lss.LSSConfig(),
-                 max_cycles=600):
+                 max_cycles=600, engine=None):
     topo = topo_factory(kind, n)
     spec = sim.ProblemSpec(n=topo.n, **(spec_kw or {}))
     t0 = time.perf_counter()
-    res = sim.run_static(topo, spec, cfg, max_cycles=max_cycles)
+    res = sim.run_static(topo, spec, cfg, max_cycles=max_cycles,
+                         engine=engine)
     dt = time.perf_counter() - t0
     cycles = res["quiesced_at"] or max_cycles
     res["us_per_cycle"] = dt / max(cycles, 1) * 1e6
@@ -48,11 +49,12 @@ def timed_static(kind: str, n: int, spec_kw=None, cfg=lss.LSSConfig(),
 
 
 def timed_dynamic(kind: str, n: int, cycles=400, spec_kw=None,
-                  cfg=lss.LSSConfig(), **dyn_kw):
+                  cfg=lss.LSSConfig(), engine=None, **dyn_kw):
     topo = topo_factory(kind, n)
     spec = sim.ProblemSpec(n=topo.n, **(spec_kw or {}))
     t0 = time.perf_counter()
-    res = sim.run_dynamic(topo, spec, cfg, cycles=cycles, **dyn_kw)
+    res = sim.run_dynamic(topo, spec, cfg, cycles=cycles, engine=engine,
+                          **dyn_kw)
     dt = time.perf_counter() - t0
     res["us_per_cycle"] = dt / cycles * 1e6
     return res

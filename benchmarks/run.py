@@ -16,16 +16,17 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from . import (fig2_scaleup, fig3_connectivity, fig4_message_loss,
-                   fig5_difficulty, fig6_dynamic_data, fig7_loss_dynamic,
-                   fig8_churn, figD_ineffective, kernel_bench)
+    from . import (engine_scaleup, fig2_scaleup, fig3_connectivity,
+                   fig4_message_loss, fig5_difficulty, fig6_dynamic_data,
+                   fig7_loss_dynamic, fig8_churn, figD_ineffective,
+                   kernel_bench)
 
     suites = {
         "fig2": fig2_scaleup, "fig3": fig3_connectivity,
         "fig4": fig4_message_loss, "fig5": fig5_difficulty,
         "fig6": fig6_dynamic_data, "fig7": fig7_loss_dynamic,
         "fig8": fig8_churn, "figD": figD_ineffective,
-        "kernel": kernel_bench,
+        "kernel": kernel_bench, "engine": engine_scaleup,
     }
     print("name,us_per_call,derived")
     for name, mod in suites.items():

@@ -1,0 +1,5 @@
+"""Reproduction of "Local Thresholding in General Network Graphs"."""
+
+from . import compat as _compat
+
+_compat.ensure_mesh_compat()

@@ -1,0 +1,96 @@
+"""Version-compatibility shims for the range of jax versions we run under.
+
+The repo targets the jax >= 0.5 mesh API (``jax.make_mesh(...,
+axis_types=(jax.sharding.AxisType.Auto, ...))``) but must also run on the
+0.4.x line baked into some containers, where ``jax.sharding.AxisType`` does
+not exist and ``jax.make_mesh`` rejects the ``axis_types`` keyword.  On
+those versions every mesh axis is implicitly "auto", so dropping the
+argument is semantically a no-op.
+
+Importing :mod:`repro` applies the shim once; it only *adds* missing
+attributes and never changes behaviour on new jax versions.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+__all__ = ["ensure_mesh_compat", "shard_map"]
+
+
+def _resolve_shard_map():
+    import jax
+
+    try:  # jax >= 0.6 exposes shard_map at top level (check_vma spelling)
+        return jax.shard_map, "check_vma"
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as sm  # type: ignore
+
+        kw = "check_vma" if "check_vma" in inspect.signature(sm).parameters \
+            else "check_rep"
+        return sm, kw
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` across jax versions (old spelling: ``check_rep``)."""
+    sm, kw = _resolve_shard_map()
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check_vma})
+
+_applied = False
+
+
+def ensure_mesh_compat() -> None:
+    """Backfill ``jax.sharding.AxisType`` / ``make_mesh(axis_types=...)``."""
+    global _applied
+    if _applied:
+        return
+    _applied = True
+
+    import jax
+    import jax.sharding as jsh
+
+    if not hasattr(jsh, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jsh.AxisType = AxisType  # type: ignore[attr-defined]
+
+    _orig_make_mesh = getattr(jax, "make_mesh", None)
+    if _orig_make_mesh is None:  # jax < 0.4.35: synthesize from Mesh
+        import math
+
+        import numpy as np
+
+        def _make_mesh_fallback(axis_shapes, axis_names, *, devices=None):
+            n = math.prod(axis_shapes)
+            devs = list(devices) if devices is not None else jax.devices()[:n]
+            return jsh.Mesh(np.asarray(devs).reshape(axis_shapes),
+                            tuple(axis_names))
+
+        _orig_make_mesh = _make_mesh_fallback
+    else:
+        try:
+            params = inspect.signature(_orig_make_mesh).parameters
+        except (TypeError, ValueError):  # pragma: no cover
+            params = {}
+        if "axis_types" in params:
+            return
+
+    @functools.wraps(_orig_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # Pre-0.5 meshes are implicitly Auto on every axis; Explicit/Manual
+        # sharding-in-types does not exist there, so only Auto is accepted.
+        if axis_types is not None:
+            auto = getattr(jsh.AxisType, "Auto", None)
+            if any(t != auto for t in axis_types):
+                raise NotImplementedError(
+                    f"jax {jax.__version__} only supports Auto mesh axes"
+                )
+        return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh

@@ -37,7 +37,24 @@ import numpy as np
 
 from . import correction, stopping, topology, wvs
 
-__all__ = ["LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle", "metrics"]
+__all__ = [
+    "LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle", "metrics",
+    "counter_dtype",
+]
+
+
+def counter_dtype():
+    """Exact dtype for cumulative message counters.
+
+    float32 loses integer exactness past 2^24 sends — a threshold million-
+    peer runs cross within a handful of cycles.  int64 is exact to 2^63 when
+    x64 is enabled; otherwise jax lowers it to int32 (exact to 2^31).  The
+    sim/engine drivers drain the device counter into a host Python int at
+    every metrics check, so the device-side count only ever spans one check
+    interval (bounded by n*D*check_every << 2^31) and the reported totals
+    are exact at any run length.
+    """
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 
 class LSSConfig(NamedTuple):
@@ -70,7 +87,7 @@ class LSSState(NamedTuple):
     last_send: jax.Array
     alive: jax.Array
     t: jax.Array  # current cycle (int32)
-    msgs: jax.Array  # cumulative messages sent (int64-ish float)
+    msgs: jax.Array  # cumulative messages sent (exact int, see counter_dtype)
     rng: jax.Array
 
 
@@ -89,7 +106,7 @@ def init_state(topo: TopoArrays, inputs: wvs.WV, seed: int = 0) -> LSSState:
         last_send=jnp.full((n,), -(10**6), jnp.int32),
         alive=jnp.ones((n,), bool),
         t=jnp.zeros((), jnp.int32),
-        msgs=jnp.zeros((), jnp.float32),
+        msgs=jnp.zeros((), counter_dtype()),
         rng=jax.random.PRNGKey(seed),
     )
 
@@ -133,7 +150,8 @@ def _violations(decide, s, a, live, eps):
     return stopping.violations_alg1(decide, s, a, live, eps)
 
 
-def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig):
+def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
+                     status_viol=None, corrected=None):
     """Alg. 1's do-while, vectorized across peers.
 
     The corrected messages for a violating set V_i are a pure function of
@@ -146,13 +164,28 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig):
     another ``(|oldS|-beta)/2`` of weight per iteration and can drive
     ``|S_i|`` negative — a subtle mis-reading of Alg. 1 that destabilizes
     the computation on high-degree graphs.)
+
+    ``status_viol(out_m, out_c) -> (S: WV, viol)`` and
+    ``corrected(old_s, a0, in_m, in_c, v) -> (new_m, new_c)`` are pluggable
+    so the sharded engine can route the same loop through the fused Pallas
+    kernels; the defaults are the reference :mod:`stopping` /
+    :mod:`correction` formulas.
     """
     n, D = topo.nbr.shape
-    old_s = stopping.status(
-        state.x_m, state.x_c, state.out_m, state.out_c, state.in_m, state.in_c, live
-    )
+    if status_viol is None:
+        def status_viol(out_m, out_c):
+            s = stopping.status(state.x_m, state.x_c, out_m, out_c,
+                                state.in_m, state.in_c, live)
+            a = stopping.agreements(out_m, out_c, state.in_m, state.in_c)
+            return s, _violations(decide, s, a, live, cfg.eps)
+    if corrected is None:
+        def corrected(old_s, a0, in_m, in_c, v):
+            return correction.corrected_messages(
+                old_s, a0, in_m, in_c, v, cfg.beta, cfg.eps)
+
+    old_s, viol0 = status_viol(state.out_m, state.out_c)
     a0 = stopping.agreements(state.out_m, state.out_c, state.in_m, state.in_c)
-    v0 = _violations(decide, old_s, a0, live, cfg.eps) & active[:, None]
+    v0 = viol0 & active[:, None]
     if cfg.policy == "uniform":
         # Eq. 5: a violating peer corrects *every* neighbor, not just V_i.
         any_viol = jnp.any(v0, axis=1)
@@ -162,9 +195,7 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig):
 
     def apply_v(v):
         """Corrected out-messages from the entry state, for slots in v."""
-        new_m, new_c = correction.corrected_messages(
-            old_s, a0, state.in_m, state.in_c, v, cfg.beta, cfg.eps
-        )
+        new_m, new_c = corrected(old_s, a0, state.in_m, state.in_c, v)
         out_m = jnp.where(v[..., None], new_m, state.out_m)
         out_c = jnp.where(v, new_c, state.out_c)
         return out_m, out_c
@@ -172,11 +203,8 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig):
     def body(carry):
         v, running, it = carry
         out_m, out_c = apply_v(v)
-        s2 = stopping.status(
-            state.x_m, state.x_c, out_m, out_c, state.in_m, state.in_c, live
-        )
-        a2 = stopping.agreements(out_m, out_c, state.in_m, state.in_c)
-        w = _violations(decide, s2, a2, live, cfg.eps) & running[:, None] & ~v
+        _, viol2 = status_viol(out_m, out_c)
+        w = viol2 & running[:, None] & ~v
         grew = jnp.any(w, axis=1)
         return v | w, running & grew, it + 1
 
@@ -190,6 +218,10 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig):
     out_m, out_c = apply_v(v)
     did_send = active & jnp.any(v, axis=1)
     return out_m, out_c, v, did_send
+
+
+# Public alias: the engine re-runs the same do-while per shard block.
+correction_loop = _correction_loop
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "decide"))

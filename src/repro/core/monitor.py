@@ -35,10 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import correction, regions as regions_lib, stopping, wvs
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from ..compat import shard_map
 
 __all__ = ["MonitorConfig", "MonitorState", "MeshMonitor"]
 

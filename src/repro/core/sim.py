@@ -57,14 +57,93 @@ def make_problem(spec: ProblemSpec):
     return jnp.asarray(centers), sample, desired, mean
 
 
-def _setup(topo: topology.Topology, spec: ProblemSpec, cfg: lss.LSSConfig):
+def _setup(topo: topology.Topology, spec: ProblemSpec):
+    """Problem + inputs only — the engine path never builds the
+    single-device state arrays (at 10^6 peers they are ~100MB of waste)."""
     centers, sample, desired, mean = make_problem(spec)
     rng = np.random.default_rng(spec.seed + 1)
     x = sample(rng, topo.n)
-    ta = lss.TopoArrays.from_topology(topo)
     inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((topo.n,), jnp.float32))
-    state = lss.init_state(ta, inputs, seed=spec.seed)
-    return ta, centers, state, sample, rng
+    return centers, sample, rng, inputs
+
+
+def _core_state(topo: topology.Topology, inputs: wvs.WV, seed: int):
+    ta = lss.TopoArrays.from_topology(topo)
+    return ta, lss.init_state(ta, inputs, seed=seed)
+
+
+def _drain_msgs(state: lss.LSSState):
+    """Read-and-reset the device send counter (exact host accumulation)."""
+    return state._replace(msgs=jnp.zeros_like(state.msgs)), int(state.msgs)
+
+
+def _make_engine(topo, centers, cfg, engine):
+    """Resolve the ``engine=`` argument (shard count or EngineConfig)."""
+    from repro.engine import EngineConfig, ShardedLSS  # lazy: avoid cycle
+
+    ecfg = EngineConfig(num_shards=engine) if isinstance(engine, int) \
+        else engine
+    return ShardedLSS(topo, centers, cfg, ecfg)
+
+
+class _Driver:
+    """One stepping interface over both execution paths.
+
+    The experiment drivers below are path-agnostic: ``advance``/``observe``
+    /``drain`` (and the dynamic-data edits) dispatch to either the
+    single-device :func:`lss.cycle` loop or the sharded engine, so the
+    cycles-to-accuracy / quiescence / message bookkeeping exists once.
+    """
+
+    def __init__(self, topo, centers, cfg, inputs, spec, engine):
+        self._centers, self._cfg = centers, cfg
+        self.extra: dict = {}
+        if engine is not None:
+            self._eng = _make_engine(topo, centers, cfg, engine)
+            self._st = self._eng.init(inputs, seed=spec.seed)
+            self.chunk = max(1, self._eng.ecfg.cycles_per_dispatch)
+            self.extra = {"engine_shards": self._eng.S,
+                          "cut_edges": self._eng.stopo.cut_edges()}
+        else:
+            self._eng = None
+            self._ta, self._st = _core_state(topo, inputs, spec.seed)
+            self.chunk = 1
+
+    def advance(self, k: int):
+        if self._eng is not None:
+            self._st = self._eng.run(self._st, k)
+        else:
+            for _ in range(k):
+                self._st, _ = lss.cycle(self._st, self._ta, self._centers,
+                                        self._cfg)
+
+    def observe(self):
+        """(accuracy, quiescent) at the current cycle."""
+        if self._eng is not None:
+            acc, quiescent, _ = self._eng.metrics(self._st)
+        else:
+            acc, quiescent, _ = lss.metrics(self._st, self._ta, self._centers)
+        return float(acc), bool(quiescent)
+
+    def drain(self) -> int:
+        """Read-and-reset the device send counter (exact host int)."""
+        if self._eng is not None:
+            self._st, sent = self._eng.drain_msgs(self._st)
+        else:
+            self._st, sent = _drain_msgs(self._st)
+        return sent
+
+    def set_inputs(self, who, vals):
+        if self._eng is not None:
+            self._st = self._eng.set_inputs(self._st, who, vals)
+        else:
+            self._st = self._st._replace(x_m=self._st.x_m.at[who].set(vals))
+
+    def kill_peers(self, who, alive_np):
+        if self._eng is not None:
+            self._st = self._eng.kill_peers(self._st, who)
+        else:
+            self._st = self._st._replace(alive=jnp.asarray(alive_np))
 
 
 def run_static(
@@ -73,35 +152,50 @@ def run_static(
     cfg: lss.LSSConfig = lss.LSSConfig(),
     max_cycles: int = 2_000,
     check_every: int = 1,
+    engine=None,
 ):
-    """Run until quiescence; return the paper's static-data metrics."""
-    ta, centers, state, _, _ = _setup(topo, spec, cfg)
+    """Run until quiescence; return the paper's static-data metrics.
+
+    ``engine``: None runs the single-device :func:`lss.cycle` loop; a shard
+    count (int) or :class:`repro.engine.EngineConfig` routes through the
+    sharded :class:`repro.engine.ShardedLSS`.  The engine dispatches
+    ``cycles_per_dispatch`` cycles per jit call, so accuracy/quiescence are
+    observed every ``max(check_every, cycles_per_dispatch)`` cycles (the
+    cycle counts in the result quantize accordingly).
+    """
+    centers, _, _, inputs = _setup(topo, spec)
+    drv = _Driver(topo, centers, cfg, inputs, spec, engine)
     edges = max(topo.num_edges, 1)
-    c95 = c100 = None
-    quiesced_at = None
-    for t in range(max_cycles):
-        state, _ = lss.cycle(state, ta, centers, cfg)
-        if (t + 1) % check_every:
-            continue
-        acc, quiescent, _ = lss.metrics(state, ta, centers)
-        acc = float(acc)
+    chunk = max(check_every, drv.chunk)
+    c95 = c100 = quiesced_at = None
+    total_msgs = 0  # host-side exact accumulator (drained every check)
+    t = 0
+    acc = quiescent = None
+    while t < max_cycles:
+        step = min(chunk, max_cycles - t)
+        drv.advance(step)
+        t += step
+        acc, quiescent = drv.observe()
+        total_msgs += drv.drain()
         if c95 is None and acc >= 0.95:
-            c95 = t + 1
+            c95 = t
         if c100 is None and acc >= 1.0:
-            c100 = t + 1
-        if bool(quiescent):
-            quiesced_at = t + 1
+            c100 = t
+        if quiescent:
+            quiesced_at = t
             break
-    acc, quiescent, _ = lss.metrics(state, ta, centers)
+    if acc is None:  # max_cycles <= 0: observe the initial state
+        acc, quiescent = drv.observe()
     return {
         "n": topo.n,
         "cycles_95": c95,
         "cycles_100": c100,
         "quiesced_at": quiesced_at,
-        "final_accuracy": float(acc),
-        "quiescent": bool(quiescent),
-        "msgs_per_link": float(state.msgs) / edges,
-        "total_msgs": float(state.msgs),
+        "final_accuracy": acc,
+        "quiescent": quiescent,
+        "msgs_per_link": total_msgs / edges,
+        "total_msgs": float(total_msgs),
+        **drv.extra,
     }
 
 
@@ -113,34 +207,38 @@ def run_dynamic(
     noise_ppmc: float = 0.0,
     churn_ppmc: float = 0.0,
     warmup: int = 100,
+    engine=None,
 ):
-    """Dynamic data / churn run; returns average accuracy + msgs/link/cycle."""
-    ta, centers, state, sample, rng = _setup(topo, spec, cfg)
+    """Dynamic data / churn run; returns average accuracy + msgs/link/cycle.
+
+    ``engine`` routes through :class:`repro.engine.ShardedLSS` (see
+    :func:`run_static`); noise/churn edits land between cycles, so the
+    engine path dispatches one cycle at a time.
+    """
+    centers, sample, rng, inputs = _setup(topo, spec)
+    drv = _Driver(topo, centers, cfg, inputs, spec, engine)
     edges = max(topo.num_edges, 1)
     n = topo.n
     accs, loads = [], []
-    msgs_before = 0.0
     alive_np = np.ones(n, bool)
     for t in range(cycles):
         # Resample a noise_ppmc fraction of inputs.
         n_changes = rng.binomial(n, min(noise_ppmc * 1e-6, 1.0))
         if n_changes:
             who = rng.choice(n, size=n_changes, replace=False)
-            new_vals = sample(rng, n_changes)
-            x_m = state.x_m.at[who].set(jnp.asarray(new_vals))
-            state = state._replace(x_m=x_m)
+            drv.set_inputs(who, jnp.asarray(sample(rng, n_changes)))
         # Churn: kill peers permanently.
         n_dead = rng.binomial(n, min(churn_ppmc * 1e-6, 1.0))
         if n_dead:
             cand = rng.choice(n, size=n_dead, replace=False)
             alive_np[cand] = False
-            state = state._replace(alive=jnp.asarray(alive_np))
-        state, sent = lss.cycle(state, ta, centers, cfg)
+            drv.kill_peers(cand, alive_np)
+        drv.advance(1)
+        sent = drv.drain()
         if t >= warmup:
-            acc, _, _ = lss.metrics(state, ta, centers)
-            accs.append(float(acc))
-            loads.append((float(state.msgs) - msgs_before) / edges)
-        msgs_before = float(state.msgs)
+            acc, _ = drv.observe()
+            accs.append(acc)
+            loads.append(sent / edges)
     return {
         "n": n,
         "avg_accuracy": float(np.mean(accs)) if accs else float("nan"),

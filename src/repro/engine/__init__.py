@@ -1,0 +1,13 @@
+"""Sharded simulation engine: partitioned multi-device LSS.
+
+Modules:
+  partition — BFS/greedy edge-cut partitioner + per-shard halo tables
+  exchange  — boundary-message halo exchange (all_to_all / gather fallback)
+  engine    — ShardedLSS: K-cycles-per-dispatch sharded simulator
+  sweep     — vmapped multi-seed / multi-config scenario sweeps
+"""
+
+from .engine import EngineConfig, ShardedLSS, ShardedState  # noqa: F401
+from .partition import (Partition, ShardedTopo, make_partition,  # noqa: F401
+                        shard_topology)
+from .sweep import sweep_configs, sweep_static  # noqa: F401

@@ -1,0 +1,442 @@
+"""ShardedLSS — the exact :mod:`repro.core.lss` semantics on a device mesh.
+
+The peer population is partitioned into ``S`` blocks (:mod:`.partition`);
+every state array carries a leading shard axis ``(S, B, ...)``.  One engine
+cycle is::
+
+    1. deliver   — pending out-messages land in in-slots: shard-local edges
+                   by the same reverse-slot scatter the core simulator uses,
+                   cross-shard edges through the halo exchange
+                   (:mod:`.exchange`);
+    2. update    — status / violation / selective-correction math, reused
+                   VERBATIM from the core (``stopping``, ``correction``,
+                   ``lss.correction_loop``), or routed through the fused
+                   Pallas kernels (:mod:`repro.kernels.ops`) per shard.
+
+Because step 2 is peer-local and step 1 reproduces exactly the core's
+"message (i, k) lands at (nbr[i,k], rev[i,k])" delivery, the engine is
+cycle-for-cycle equivalent to :func:`repro.core.lss.cycle` (bitwise, up to
+the RNG stream when ``drop_rate > 0`` — the engine draws per-shard drop
+keys where the core draws one global key).
+
+Host-sync amortization: :meth:`ShardedLSS.run` dispatches
+``cycles_per_dispatch`` cycles per jit call through a ``lax.fori_loop``
+with donated state buffers, so a million-peer run costs one dispatch +
+one device-sync per K cycles instead of per cycle.
+
+Transports: on a single device the halo exchange is a transpose (gather
+fallback); given a mesh axis of size ``S`` the same per-shard code runs
+under ``shard_map`` with ``lax.all_to_all`` (:meth:`use_mesh`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import shard_map
+from repro.core import lss, regions, stopping, topology, wvs
+from repro.kernels import ops as kernel_ops
+
+from . import exchange, partition
+
+__all__ = ["EngineConfig", "ShardedState", "ShardedLSS"]
+
+
+class _LocalTables(NamedTuple):
+    """One shard's view of the topology tables inside shard_map."""
+
+    mask: jax.Array  # (B, D)
+    rev: jax.Array  # (B, D)
+    tgt_row: jax.Array  # (B, D)
+    tgt_pos: jax.Array  # (B, D) flattened global target positions
+    intra: jax.Array  # (B, D)
+    halo: partition.HaloTables  # (S, H) local rows
+
+
+class EngineConfig(NamedTuple):
+    num_shards: int = 2
+    cycles_per_dispatch: int = 8  # K cycles fused per jit dispatch
+    method: str = "bfs"  # partitioner: "bfs" | "stride"
+    use_kernels: Optional[bool] = None  # None = auto (Pallas on TPU only)
+
+
+class ShardedState(NamedTuple):
+    """:class:`repro.core.lss.LSSState`, blocked ``(S, B, ...)`` per shard."""
+
+    out_m: jax.Array  # (S, B, D, d)
+    out_c: jax.Array  # (S, B, D)
+    in_m: jax.Array  # (S, B, D, d)
+    in_c: jax.Array  # (S, B, D)
+    x_m: jax.Array  # (S, B, d)
+    x_c: jax.Array  # (S, B)
+    pending: jax.Array  # (S, B, D) bool
+    last_send: jax.Array  # (S, B) int32
+    alive: jax.Array  # (S, B) bool — padding rows stay False
+    t: jax.Array  # ()  current cycle, replicated
+    msgs: jax.Array  # (S,) per-shard cumulative sends (exact int)
+    rng: jax.Array  # (S, 2) per-shard PRNG keys
+
+
+class ShardedLSS:
+    """Partitioned multi-shard LSS engine with halo exchange.
+
+    Args:
+      topo: host-side :class:`~repro.core.topology.Topology`.
+      centers: (k, d) Voronoi option points.
+      cfg: the simulator :class:`~repro.core.lss.LSSConfig` (semantics).
+      ecfg: :class:`EngineConfig` (execution: shards, dispatch fusion).
+      decide: optional region decision fn; default Voronoi on ``centers``.
+    """
+
+    def __init__(self, topo: topology.Topology, centers,
+                 cfg: lss.LSSConfig = lss.LSSConfig(),
+                 ecfg: EngineConfig = EngineConfig(), decide=None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.centers = jnp.asarray(centers)
+        custom_decide = decide is not None
+        self.decide = decide or (
+            lambda v: regions.decide_voronoi(v, self.centers))
+        part = partition.make_partition(topo, ecfg.num_shards, ecfg.method)
+        st = partition.shard_topology(topo, part)
+        self.stopo = st
+        self.part = part
+        self.S, self.B, self.D = part.num_shards, part.block, st.D
+        self.n, self.num_edges = st.n, st.num_edges
+        j = jnp.asarray
+        self._mask = j(st.mask)
+        self._rev = j(st.rev)
+        self._tgt_row = j(st.tgt_row)
+        self._tgt_pos = j(st.tgt_pos)
+        self._intra = j(st.intra)
+        self._halo = partition.HaloTables(*(j(a) for a in st.halo))
+        self._pos = j(part.new_of_old)  # (n,) original -> flattened
+        use_kernels = ecfg.use_kernels
+        if use_kernels is None:
+            # The fused kernels hardwire Voronoi-on-centers; a custom
+            # decide function must stay on the reference formulas.
+            use_kernels = (jax.default_backend() == "tpu"
+                           and not custom_decide)
+        elif use_kernels and custom_decide:
+            raise ValueError(
+                "use_kernels=True routes decisions through the Voronoi "
+                "Pallas kernel and cannot honor a custom `decide`")
+        self.use_kernels = bool(use_kernels)
+        self._mesh = None
+        self._axis = None
+        # Donation lets XLA reuse the K-cycle block's state buffers in
+        # place; CPU does not support it and warns, so gate on backend.
+        self._donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._run_jit = jax.jit(self._run_block, static_argnames=("k",),
+                                donate_argnums=self._donate)
+        self._metrics_jit = jax.jit(self._metrics_impl,
+                                    static_argnames=("eps",))
+
+    # -- mesh attachment ---------------------------------------------------
+    def use_mesh(self, mesh, axis_name: str) -> "ShardedLSS":
+        """Route the halo exchange through shard_map + all_to_all.
+
+        The mesh axis size must equal ``num_shards``; state arrays should be
+        device_put with the shard axis over ``axis_name``.
+        """
+        if mesh.shape[axis_name] != self.S:
+            raise ValueError(
+                f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]}, "
+                f"engine has {self.S} shards")
+        self._mesh = mesh
+        self._axis = axis_name
+        self._run_jit = jax.jit(self._run_block_collective,
+                                static_argnames=("k",),
+                                donate_argnums=self._donate)
+        return self
+
+    # -- state -------------------------------------------------------------
+    def init(self, inputs: wvs.WV, seed: int = 0) -> ShardedState:
+        """Build sharded state from inputs in ORIGINAL peer order."""
+        S, B, D = self.S, self.B, self.D
+        d = inputs.m.shape[-1]
+        dt = inputs.m.dtype
+        x_m = jnp.zeros((S * B, d), dt).at[self._pos].set(inputs.m)
+        x_c = jnp.zeros((S * B,), dt).at[self._pos].set(inputs.c)
+        alive = jnp.zeros((S * B,), bool).at[self._pos].set(True)
+        state = ShardedState(
+            out_m=jnp.zeros((S, B, D, d), dt),
+            out_c=jnp.zeros((S, B, D), dt),
+            in_m=jnp.zeros((S, B, D, d), dt),
+            in_c=jnp.zeros((S, B, D), dt),
+            x_m=x_m.reshape(S, B, d),
+            x_c=x_c.reshape(S, B),
+            pending=jnp.zeros((S, B, D), bool),
+            last_send=jnp.full((S, B), -(10**6), jnp.int32),
+            alive=alive.reshape(S, B),
+            t=jnp.zeros((), jnp.int32),
+            msgs=jnp.zeros((S,), lss.counter_dtype()),
+            rng=jax.random.split(jax.random.PRNGKey(seed), S),
+        )
+        if self._mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            shard = NamedSharding(self._mesh, P(self._axis))
+            repl = NamedSharding(self._mesh, P())
+            state = ShardedState(*(
+                jax.device_put(a, repl if a.ndim == 0 else shard)
+                for a in state))
+        return state
+
+    # -- dynamic-data hooks (original peer ids) ------------------------------
+    def set_inputs(self, state: ShardedState, who, new_x) -> ShardedState:
+        """Resample inputs: ``x_m[who] = new_x`` (moment form, weight kept)."""
+        pos = self._pos[jnp.asarray(who)]
+        flat = state.x_m.reshape(self.S * self.B, -1)
+        flat = flat.at[pos].set(jnp.asarray(new_x, flat.dtype))
+        return state._replace(x_m=flat.reshape(state.x_m.shape))
+
+    def kill_peers(self, state: ShardedState, who) -> ShardedState:
+        """Churn: permanently mark original ids ``who`` dead."""
+        pos = self._pos[jnp.asarray(who)]
+        flat = state.alive.reshape(self.S * self.B)
+        flat = flat.at[pos].set(False)
+        return state._replace(alive=flat.reshape(state.alive.shape))
+
+    # -- per-peer update (flattened), shared with the collective path ------
+    def _peer_update(self, out_m, out_c, in_m, in_c, x_m, x_c, live,
+                     last_send, alive, t):
+        """Violation test + selective correction on flattened (N, ...) rows.
+
+        This is exactly the post-delivery half of :func:`repro.core.lss.
+        cycle`; ``lss.correction_loop`` is the same do-while object.
+        """
+        cfg, decide = self.cfg, self.decide
+        if self.use_kernels:
+            s, viol = self._status_viol_kernel(x_m, x_c, out_m, out_c,
+                                               in_m, in_c, live)
+        else:
+            s = stopping.status(x_m, x_c, out_m, out_c, in_m, in_c, live)
+            a = stopping.agreements(out_m, out_c, in_m, in_c)
+            viol = stopping.violations_alg1(decide, s, a, live, cfg.eps)
+        timer_ok = (t - last_send) >= cfg.ell
+        active = alive & timer_ok & jnp.any(viol, axis=1)
+
+        flat_state = lss.LSSState(
+            out_m=out_m, out_c=out_c, in_m=in_m, in_c=in_c,
+            x_m=x_m, x_c=x_c, pending=live, last_send=last_send,
+            alive=alive, t=t, msgs=t, rng=t)
+        flat_topo = lss.TopoArrays(nbr=jnp.zeros(live.shape, jnp.int32),
+                                   mask=live, rev=jnp.zeros_like(live, jnp.int32))
+        status_viol = corrected = None
+        if self.use_kernels:
+            # Same do-while, fused Pallas paths for the per-peer math.
+            def status_viol(om, oc):
+                return self._status_viol_kernel(x_m, x_c, om, oc,
+                                                in_m, in_c, live)
+
+            def corrected(old_s, a0, i_m, i_c, v):
+                return kernel_ops.correction(
+                    old_s.m, old_s.c, a0.m, a0.c, i_m, i_c, v,
+                    beta=cfg.beta, eps=cfg.eps)
+        out_m2, out_c2, v, did_send = lss.correction_loop(
+            decide, flat_state, flat_topo, live, active, cfg,
+            status_viol=status_viol, corrected=corrected)
+        pending = v & did_send[:, None]
+        new_last = jnp.where(did_send, t, last_send)
+        return out_m2, out_c2, pending, new_last
+
+    def _status_viol_kernel(self, x_m, x_c, out_m, out_c, in_m, in_c, live):
+        s_m, s_c, viol, _ = kernel_ops.lss_state(
+            x_m, x_c, out_m, out_c, in_m, in_c, live, self.centers,
+            eps=self.cfg.eps)
+        return wvs.WV(s_m, s_c), viol
+
+    # -- one cycle, gather-fallback (full arrays, one device) --------------
+    def _cycle_full(self, state: ShardedState) -> ShardedState:
+        cfg = self.cfg
+        S, B, D = self.S, self.B, self.D
+        keys = jax.vmap(jax.random.split)(state.rng)  # (S, 2, 2)
+        rng, kdrop = keys[:, 0], keys[:, 1]
+
+        nbr_alive = state.alive.reshape(S * B)[self._tgt_pos]
+        live = self._mask & state.alive[..., None] & nbr_alive
+        send = state.pending & live
+        if cfg.drop_rate > 0.0:
+            keep = jax.vmap(
+                lambda k: jax.random.uniform(k, (B, D)))(kdrop)
+            delivered = send & (keep >= cfg.drop_rate)
+        else:
+            delivered = send
+        sent = jnp.sum(send, axis=(1, 2))
+
+        # Shard-local edges: the core's reverse-slot scatter, per shard.
+        idx = jnp.where(delivered & self._intra,
+                        self._tgt_row * D + self._rev, B * D)
+
+        def scat(buf, upd, idx_s):
+            flat = buf.reshape(B * D, *buf.shape[2:])
+            return flat.at[idx_s.reshape(B * D)].set(
+                upd.reshape(B * D, *upd.shape[2:]), mode="drop"
+            ).reshape(buf.shape)
+
+        in_m = jax.vmap(scat)(state.in_m, state.out_m, idx)
+        in_c = jax.vmap(scat)(state.in_c, state.out_c, idx)
+
+        # Cross-shard edges: halo gather -> transpose -> scatter.
+        buf_m, buf_c, flag = exchange.gather_halo(
+            state.out_m, state.out_c, delivered, self._halo)
+        buf_m, buf_c, flag = (exchange.transpose_all_to_all(b)
+                              for b in (buf_m, buf_c, flag))
+        in_m, in_c = exchange.scatter_halo(in_m, in_c, buf_m, buf_c, flag,
+                                           self._halo)
+
+        # Peer-local update on flattened rows.
+        fl = lambda a: a.reshape(S * B, *a.shape[2:])
+        out_m, out_c, pending, last_send = self._peer_update(
+            fl(state.out_m), fl(state.out_c), fl(in_m), fl(in_c),
+            fl(state.x_m), fl(state.x_c), fl(live), fl(state.last_send),
+            fl(state.alive), state.t)
+        sh = lambda a: a.reshape(S, B, *a.shape[1:])
+        return state._replace(
+            out_m=sh(out_m), out_c=sh(out_c), in_m=in_m, in_c=in_c,
+            pending=sh(pending), last_send=sh(last_send),
+            t=state.t + 1, msgs=state.msgs + sent.astype(state.msgs.dtype),
+            rng=rng)
+
+    def _run_block(self, state: ShardedState, k: int) -> ShardedState:
+        return jax.lax.fori_loop(0, k, lambda _, st: self._cycle_full(st),
+                                 state)
+
+    # -- one cycle, collective (per-shard block inside shard_map) ----------
+    def _cycle_block(self, state: ShardedState,
+                     tables: "_LocalTables") -> ShardedState:
+        """Body on LOCAL (1, B, ...) blocks; comms via all_gather/all_to_all."""
+        cfg, axis = self.cfg, self._axis
+        B, D = self.B, self.D
+        mask, rev, tgt_row, tgt_pos, intra, halo = tables
+        sq = lambda a: a[0]  # local blocks carry a leading (1, ...) axis
+
+        key2 = jax.random.split(state.rng[0])
+        rng, kdrop = key2[0][None], key2[1]
+        alive = sq(state.alive)
+        alive_all = jax.lax.all_gather(alive, axis, tiled=True)  # (S*B,)
+        nbr_alive = alive_all[tgt_pos]
+        live = mask & alive[:, None] & nbr_alive
+        send = sq(state.pending) & live
+        if cfg.drop_rate > 0.0:
+            keep = jax.random.uniform(kdrop, (B, D))
+            delivered = send & (keep >= cfg.drop_rate)
+        else:
+            delivered = send
+        sent = jnp.sum(send)
+
+        out_m, out_c = sq(state.out_m), sq(state.out_c)
+        idx = jnp.where(delivered & intra, tgt_row * D + rev, B * D)
+        flat_idx = idx.reshape(B * D)
+        in_m = (sq(state.in_m).reshape(B * D, -1)
+                .at[flat_idx].set(out_m.reshape(B * D, -1), mode="drop")
+                .reshape(B, D, -1))
+        in_c = (sq(state.in_c).reshape(B * D)
+                .at[flat_idx].set(out_c.reshape(B * D), mode="drop")
+                .reshape(B, D))
+
+        buf_m, buf_c, flag = exchange.gather_block(
+            out_m, out_c, delivered, halo.send_row, halo.send_slot,
+            halo.send_ok)
+        buf_m = exchange.collective_all_to_all(buf_m, axis)
+        buf_c = exchange.collective_all_to_all(buf_c, axis)
+        flag = exchange.collective_all_to_all(flag, axis)
+        in_m, in_c = exchange.scatter_block(in_m, in_c, buf_m, buf_c, flag,
+                                            halo.recv_row, halo.recv_slot)
+
+        out_m2, out_c2, pending, last_send = self._peer_update(
+            out_m, out_c, in_m, in_c, sq(state.x_m), sq(state.x_c), live,
+            sq(state.last_send), alive, state.t)
+        ex = lambda a: a[None]
+        return state._replace(
+            out_m=ex(out_m2), out_c=ex(out_c2), in_m=ex(in_m), in_c=ex(in_c),
+            pending=ex(pending), last_send=ex(last_send),
+            t=state.t + 1,
+            msgs=state.msgs + sent.astype(state.msgs.dtype)[None],
+            rng=rng)
+
+    def _run_block_collective(self, state: ShardedState, k: int):
+        from jax.sharding import PartitionSpec as P
+        sh, repl = P(self._axis), P()
+        spec = ShardedState(sh, sh, sh, sh, sh, sh, sh, sh, sh, repl, sh, sh)
+
+        def local(state, mask, rev, tgt_row, tgt_pos, intra, *halo):
+            tables = _LocalTables(mask[0], rev[0], tgt_row[0], tgt_pos[0],
+                                  intra[0],
+                                  partition.HaloTables(*(a[0] for a in halo)))
+            return jax.lax.fori_loop(
+                0, k, lambda _, st: self._cycle_block(st, tables), state)
+
+        f = shard_map(
+            local, mesh=self._mesh,
+            in_specs=(spec,) + (sh,) * 10,
+            out_specs=spec, check_vma=False)
+        return f(state, self._mask, self._rev, self._tgt_row, self._tgt_pos,
+                 self._intra, *self._halo)
+
+    # -- driver ------------------------------------------------------------
+    def run(self, state: ShardedState, cycles: int) -> ShardedState:
+        """Advance ``cycles`` cycles, ``cycles_per_dispatch`` per jit call."""
+        k = max(1, self.ecfg.cycles_per_dispatch)
+        done = 0
+        while done < cycles:
+            step = min(k, cycles - done)
+            state = self._run_jit(state, k=step)
+            done += step
+        return state
+
+    def drain_msgs(self, state: ShardedState):
+        """Read-and-reset the device send counter: (state', exact int).
+
+        The per-shard counter is int32 without x64; draining at every
+        metrics check keeps the device-side count within one check
+        interval (bounded by n*D*interval) while the host total stays
+        exact at any run length.
+        """
+        total = int(jnp.sum(state.msgs))
+        return state._replace(msgs=jnp.zeros_like(state.msgs)), total
+
+    # -- observers ---------------------------------------------------------
+    def _metrics_impl(self, state: ShardedState, eps: float = 1e-9):
+        S, B = self.S, self.B
+        fl = lambda a: a.reshape(S * B, *a.shape[2:])
+        nbr_alive = state.alive.reshape(S * B)[self._tgt_pos]
+        live = fl(self._mask & state.alive[..., None] & nbr_alive)
+        x_m, x_c = fl(state.x_m), fl(state.x_c)
+        alive = fl(state.alive)
+        s = stopping.status(x_m, x_c, fl(state.out_m), fl(state.out_c),
+                            fl(state.in_m), fl(state.in_c), live)
+        gx = wvs.WV(jnp.sum(jnp.where(alive[:, None], x_m, 0.0), axis=0),
+                    jnp.sum(jnp.where(alive, x_c, 0.0), axis=0))
+        want = self.decide(wvs.vec(gx, eps)[None])[0]
+        got = self.decide(wvs.vec(s, eps))
+        correct = (got == want) & alive
+        acc = jnp.sum(correct) / jnp.maximum(jnp.sum(alive), 1)
+        a = stopping.agreements(fl(state.out_m), fl(state.out_c),
+                                fl(state.in_m), fl(state.in_c))
+        viol = stopping.violations_alg1(self.decide, s, a, live, eps)
+        quiescent = ~jnp.any(fl(state.pending) & live) & ~jnp.any(viol)
+        return acc, quiescent, correct[self._pos]  # original peer order
+
+    def metrics(self, state: ShardedState, eps: float = 1e-9):
+        """(accuracy, quiescent, correct-mask in original order) — the same
+        numbers :func:`repro.core.lss.metrics` reports."""
+        return self._metrics_jit(state, eps=eps)
+
+    def total_msgs(self, state: ShardedState):
+        return jnp.sum(state.msgs)
+
+    def to_lss_state(self, state: ShardedState) -> lss.LSSState:
+        """Unpermute into a core :class:`LSSState` (parity tests, debug)."""
+        S, B = self.S, self.B
+        take = lambda a: a.reshape(S * B, *a.shape[2:])[self._pos]
+        return lss.LSSState(
+            out_m=take(state.out_m), out_c=take(state.out_c),
+            in_m=take(state.in_m), in_c=take(state.in_c),
+            x_m=take(state.x_m), x_c=take(state.x_c),
+            pending=take(state.pending), last_send=take(state.last_send),
+            alive=take(state.alive), t=state.t,
+            msgs=jnp.sum(state.msgs), rng=state.rng[0])

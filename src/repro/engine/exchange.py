@@ -1,0 +1,94 @@
+"""Halo exchange of boundary out-messages between shards.
+
+The sender gathers its boundary slots into a dense ``(S, S, H)`` buffer
+(src-major: ``buf[s, t, h]`` = h-th message from shard ``s`` to shard
+``t``), the buffer is transposed across the (src, dst) axes, and the
+receiver scatters ``buf[t, s, h]`` into its in-slots via the dst-major
+``recv_*`` tables.  Messages whose ``delivered`` flag is False (not
+pending, dead endpoint, dropped in flight, or table padding) scatter to an
+out-of-bounds index and are silently discarded — the same ``mode="drop"``
+trick :func:`repro.core.lss._deliver` uses.
+
+Two transports realize the transpose:
+
+* :func:`transpose_all_to_all` — the single-device gather fallback: the
+  whole ``(S, S, H)`` buffer lives on one device and the "exchange" is a
+  ``jnp.swapaxes``.  This is the path the parity tests exercise.
+* :func:`collective_all_to_all` — inside ``shard_map`` over a mesh axis of
+  size S each shard holds one ``(S, H)`` row and ``jax.lax.all_to_all``
+  performs the same transpose over the interconnect.
+
+Both produce identical results by construction; the engine picks per the
+available mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .partition import HaloTables
+
+__all__ = [
+    "gather_halo",
+    "scatter_halo",
+    "transpose_all_to_all",
+    "collective_all_to_all",
+    "gather_block",
+    "scatter_block",
+]
+
+
+# -- per-shard (block-local) halves, shared by both transports -------------
+
+def gather_block(out_m, out_c, delivered, send_row, send_slot, send_ok):
+    """Boundary slots of ONE shard -> (S, H) send buffers.
+
+    ``out_m (B, D, d)``, ``out_c/delivered (B, D)``; tables ``(S, H)``.
+    """
+    buf_m = out_m[send_row, send_slot]  # (S, H, d)
+    buf_c = out_c[send_row, send_slot]  # (S, H)
+    flag = delivered[send_row, send_slot] & send_ok
+    return buf_m, buf_c, flag
+
+
+def scatter_block(in_m, in_c, buf_m, buf_c, flag, recv_row, recv_slot):
+    """Received (S, H) buffers -> in-slots of ONE shard (B, D, ...)."""
+    B, D = in_c.shape
+    idx = jnp.where(flag, recv_row * D + recv_slot, B * D).reshape(-1)
+    new_m = (in_m.reshape(B * D, -1)
+             .at[idx].set(buf_m.reshape(idx.size, -1), mode="drop")
+             .reshape(in_m.shape))
+    new_c = (in_c.reshape(B * D)
+             .at[idx].set(buf_c.reshape(-1), mode="drop")
+             .reshape(in_c.shape))
+    return new_m, new_c
+
+
+# -- full-array (fallback) wrappers ----------------------------------------
+
+def gather_halo(out_m, out_c, delivered, halo: HaloTables):
+    """vmap of :func:`gather_block` over the leading shard axis."""
+    return jax.vmap(gather_block)(out_m, out_c, delivered, halo.send_row,
+                                  halo.send_slot, halo.send_ok)
+
+
+def scatter_halo(in_m, in_c, buf_m, buf_c, flag, halo: HaloTables):
+    """vmap of :func:`scatter_block`; buffers must already be dst-major."""
+    return jax.vmap(scatter_block)(in_m, in_c, buf_m, buf_c, flag,
+                                   halo.recv_row, halo.recv_slot)
+
+
+def transpose_all_to_all(buf):
+    """Single-device transport: (src, dst, ...) -> (dst, src, ...)."""
+    return jnp.swapaxes(buf, 0, 1)
+
+
+def collective_all_to_all(buf, axis_name: str):
+    """shard_map transport: local (S, H, ...) rows, exchanged over ICI/DCN.
+
+    ``all_to_all(split=0, concat=0)`` sends chunk ``t`` of this shard's
+    buffer to shard ``t`` — after it, local entry ``[s]`` is what shard
+    ``s`` sent here: exactly the dst-major layout ``scatter_block`` wants.
+    """
+    return jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)

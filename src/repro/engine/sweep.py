@@ -1,0 +1,118 @@
+"""Vmapped scenario sweeps: whole experiments batched on one accelerator.
+
+The paper's figures average dozens of independent trials per data point
+(seeds x configurations).  Running them as a Python loop redispatches the
+simulator per trial; here the *trial axis* becomes a batch axis instead:
+
+* :func:`sweep_static` — vmap over seeds of the full static-data
+  experiment (fresh inputs per seed, same topology), scanned over cycles
+  inside ONE jit dispatch.  Returns per-seed, per-cycle accuracy /
+  quiescence / message trajectories, from which the paper's "cycles to
+  95% / 100%" statistics are read off with a single argmax.
+* :func:`sweep_configs` — the multi-config axis.  ``LSSConfig`` fields are
+  compile-time constants (they change the traced program: drop branches,
+  loop bounds, policy), so configs batch as a Python loop of vmapped
+  sweeps — still one dispatch per config for *all* seeds.
+
+The sweep runs the single-device :func:`repro.core.lss.cycle` under
+``vmap`` — the engine's sharding composes with it by putting the sweep on
+top of per-shard blocks, but for the paper-size graphs (<= 100k peers) a
+batch of whole experiments is the better use of one chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lss, sim, topology, wvs
+
+__all__ = ["sweep_static", "sweep_configs", "cycles_to_accuracy"]
+
+
+def _stack_states(states):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def sweep_static(
+    topo: topology.Topology,
+    spec: sim.ProblemSpec,
+    seeds: Sequence[int],
+    cfg: lss.LSSConfig = lss.LSSConfig(),
+    cycles: int = 200,
+):
+    """Run ``len(seeds)`` independent static experiments, batched.
+
+    Each seed re-derives the problem (fresh centers + inputs via
+    ``sim.make_problem``) exactly as a sequential ``sim.run_static`` with
+    ``ProblemSpec(seed=s)`` would.  Returns a dict of arrays:
+
+      accuracy   (n_seeds, cycles)  float
+      quiescent  (n_seeds, cycles)  bool
+      msgs       (n_seeds, cycles)  cumulative sends
+    """
+    ta = lss.TopoArrays.from_topology(topo)
+    states, centers = [], []
+    for s in seeds:
+        sp = dataclasses.replace(spec, seed=int(s))
+        c, sample, _, _ = sim.make_problem(sp)
+        rng = np.random.default_rng(sp.seed + 1)
+        x = sample(rng, topo.n)
+        inputs = wvs.from_vector(jnp.asarray(x),
+                                 jnp.ones((topo.n,), jnp.float32))
+        states.append(lss.init_state(ta, inputs, seed=sp.seed))
+        centers.append(c)
+    batched = _stack_states(states)
+    centers = jnp.stack(centers)  # (n_seeds, k, d)
+
+    def one_cycle(state, _):
+        state, _sent = jax.vmap(
+            lambda st, ce: lss.cycle(st, ta, ce, cfg))(state, centers)
+        acc, quiescent, _ = jax.vmap(
+            lambda st, ce: lss.metrics(st, ta, ce))(state, centers)
+        # Emit the per-cycle count and reset the device counter: one cycle
+        # is bounded by n*D < 2^31, so the int64 host cumsum below stays
+        # exact however long/large the sweep (see lss.counter_dtype).
+        sent = state.msgs
+        state = state._replace(msgs=jnp.zeros_like(state.msgs))
+        return state, (acc, quiescent, sent)
+
+    @jax.jit
+    def run(state):
+        return jax.lax.scan(one_cycle, state, None, length=cycles)
+
+    _, (acc, quiescent, sent) = run(batched)
+    msgs = np.cumsum(np.asarray(sent, dtype=np.int64), axis=0)
+    return {
+        "accuracy": np.asarray(acc).T,  # (n_seeds, cycles)
+        "quiescent": np.asarray(quiescent).T,
+        "msgs": msgs.T,  # cumulative sends, exact
+        "num_edges": topo.num_edges,
+    }
+
+
+def cycles_to_accuracy(accuracy: np.ndarray, level: float) -> np.ndarray:
+    """Per-seed first cycle (1-based) reaching ``level``; -1 if never."""
+    hit = accuracy >= level
+    first = hit.argmax(axis=1) + 1
+    return np.where(hit.any(axis=1), first, -1)
+
+
+def sweep_configs(
+    topo: topology.Topology,
+    spec: sim.ProblemSpec,
+    seeds: Sequence[int],
+    cfgs: Sequence[lss.LSSConfig],
+    cycles: int = 200,
+    names: Optional[Sequence[str]] = None,
+):
+    """Sweep seeds (vmapped) x configs (looped): one dispatch per config."""
+    out = {}
+    for i, cfg in enumerate(cfgs):
+        key = names[i] if names else f"cfg{i}"
+        out[key] = sweep_static(topo, spec, seeds, cfg, cycles)
+    return out

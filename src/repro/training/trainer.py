@@ -90,10 +90,10 @@ class Trainer:
                 # Failure path: restore from the latest checkpoint and
                 # continue (elastic remesh would slot in here for real
                 # device loss — see repro.distributed.elastic).
+                checkpoint.wait_pending()  # async saves may still be in flight
                 latest = checkpoint.latest_step(cfg.ckpt_dir)
                 if latest is None:
                     raise
-                checkpoint.wait_pending()
                 params, opt = checkpoint.load(cfg.ckpt_dir, latest,
                                               (params, opt))
                 step = latest

@@ -1,0 +1,304 @@
+"""Sharded engine: partition invariants + cycle-for-cycle parity with core.
+
+The engine's contract is *exact* reproduction of ``repro.core.lss`` — the
+same messages on the same cycles — with the peer population split across
+shards and boundary messages moved by halo exchange.  Parity is asserted
+on the full unpermuted state arrays, not just summary metrics.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import lss, sim, topology
+from repro.engine import (EngineConfig, ShardedLSS, make_partition,
+                          shard_topology, sweep_static)
+from repro.engine.sweep import cycles_to_accuracy
+
+
+def _problem(topo, seed=0):
+    """The exact problem sim.run_static poses (shared via sim._setup)."""
+    centers, _, _, inputs = sim._setup(
+        topo, sim.ProblemSpec(n=topo.n, seed=seed))
+    return centers, inputs
+
+
+def _assert_state_close(a: lss.LSSState, b: lss.LSSState, atol=1e-6):
+    np.testing.assert_allclose(a.out_m, b.out_m, atol=atol)
+    np.testing.assert_allclose(a.out_c, b.out_c, atol=atol)
+    np.testing.assert_allclose(a.in_m, b.in_m, atol=atol)
+    np.testing.assert_allclose(a.in_c, b.in_c, atol=atol)
+    assert np.array_equal(np.asarray(a.pending), np.asarray(b.pending))
+    assert np.array_equal(np.asarray(a.last_send), np.asarray(b.last_send))
+    assert np.array_equal(np.asarray(a.alive), np.asarray(b.alive))
+    assert int(a.msgs) == int(b.msgs)
+
+
+# ---------------------------------------------------------------------------
+# partition invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo_fn,shards,method", [
+    (lambda: topology.grid(64), 2, "bfs"),
+    (lambda: topology.grid(49), 7, "bfs"),
+    (lambda: topology.barabasi_albert(80, m=2, seed=3), 4, "bfs"),
+    (lambda: topology.chord(60), 3, "bfs"),
+    (lambda: topology.grid(64), 4, "stride"),
+])
+def test_partition_invariants(topo_fn, shards, method):
+    topo = topo_fn()
+    part = make_partition(topo, shards, method)
+    st = shard_topology(topo, part)
+    S, B, D = part.num_shards, part.block, topo.max_deg
+
+    # Renumbering is a bijection onto occupied rows, respecting capacity.
+    assert part.sizes.sum() == topo.n and part.sizes.max() <= B
+    occupied = part.old_of_new[part.old_of_new >= 0]
+    assert sorted(occupied) == list(range(topo.n))
+    assert np.array_equal(part.old_of_new[part.new_of_old],
+                          np.arange(topo.n))
+    assert np.array_equal(part.assignment, part.new_of_old // B)
+
+    # Every valid slot is exactly one of: intra, or a halo send entry.
+    cross = st.mask & ~st.intra
+    assert np.sum(st.mask) == np.sum(st.intra) + np.sum(cross)
+    assert np.sum(st.halo.send_ok) == np.sum(cross)
+
+    # Each halo entry routes its message to exactly the core's target:
+    # slot (i, k) must land at (nbr[i, k], rev[i, k]).
+    for s, t, h in zip(*np.nonzero(st.halo.send_ok)):
+        r, k = st.halo.send_row[s, t, h], st.halo.send_slot[s, t, h]
+        old_i = part.old_of_new[s * B + r]
+        old_j = topo.nbr[old_i, k]
+        assert topo.mask[old_i, k]
+        assert part.assignment[old_j] == t != s
+        assert part.new_of_old[old_j] == t * B + st.halo.recv_row[t, s, h]
+        assert topo.rev[old_i, k] == st.halo.recv_slot[t, s, h]
+
+    # Intra slots resolve inside the shard, to the right (row, slot).
+    for s, r, k in zip(*np.nonzero(st.intra)):
+        old_i = part.old_of_new[s * B + r]
+        old_j = topo.nbr[old_i, k]
+        assert part.new_of_old[old_j] == s * B + st.tgt_row[s, r, k]
+    # Undirected consistency: each cut edge contributes two halo entries.
+    assert st.cut_edges() * 2 == np.sum(cross)
+
+
+def test_partition_rejects_bad_args():
+    topo = topology.grid(16)
+    with pytest.raises(ValueError):
+        make_partition(topo, 0)
+    with pytest.raises(ValueError):
+        make_partition(topo, 17)
+    with pytest.raises(KeyError):
+        make_partition(topo, 2, method="metis")
+
+
+def test_use_kernels_rejects_custom_decide():
+    """The fused kernels hardwire Voronoi; a custom decide must not be
+    silently ignored."""
+    topo = topology.grid(16)
+    centers, _ = _problem(topo)
+    custom = lambda v: (v[..., 0] > 0).astype(np.int32)  # noqa: E731
+    with pytest.raises(ValueError):
+        ShardedLSS(topo, centers, lss.LSSConfig(),
+                   EngineConfig(num_shards=2, use_kernels=True),
+                   decide=custom)
+    # Auto mode quietly stays on the reference formulas instead.
+    eng = ShardedLSS(topo, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=2), decide=custom)
+    assert not eng.use_kernels
+
+
+# ---------------------------------------------------------------------------
+# cycle-for-cycle parity with core.lss
+# ---------------------------------------------------------------------------
+
+
+def test_two_shard_parity_cycle_for_cycle():
+    """The acceptance gate: seeded 2-shard grid matches core.lss on every
+    cycle — accuracy, quiescence, message counts, and full state."""
+    topo = topology.grid(64)
+    centers, inputs = _problem(topo)
+    ta = lss.TopoArrays.from_topology(topo)
+    cfg = lss.LSSConfig()
+    core = lss.init_state(ta, inputs, seed=0)
+    eng = ShardedLSS(topo, centers, cfg,
+                     EngineConfig(num_shards=2, cycles_per_dispatch=1))
+    est = eng.init(inputs, seed=0)
+
+    quiesced = False
+    for _ in range(40):
+        core, _ = lss.cycle(core, ta, centers, cfg)
+        est = eng.run(est, 1)
+        acc_c, q_c, cm_c = lss.metrics(core, ta, centers)
+        acc_e, q_e, cm_e = eng.metrics(est)
+        assert float(acc_c) == float(acc_e)
+        assert bool(q_c) == bool(q_e)
+        assert np.array_equal(np.asarray(cm_c), np.asarray(cm_e))
+        _assert_state_close(eng.to_lss_state(est), core)
+        quiesced = bool(q_c)
+    assert quiesced  # the run reached a genuine stopping state
+
+
+@pytest.mark.parametrize("topo_fn,shards", [
+    (lambda: topology.barabasi_albert(80, m=2, seed=3), 4),
+    (lambda: topology.chord(60), 3),
+])
+def test_multi_cycle_dispatch_parity(topo_fn, shards):
+    """K cycles fused per dispatch (lax.fori_loop) changes nothing."""
+    topo = topo_fn()
+    centers, inputs = _problem(topo)
+    ta = lss.TopoArrays.from_topology(topo)
+    cfg = lss.LSSConfig()
+    core = lss.init_state(ta, inputs, seed=0)
+    eng = ShardedLSS(topo, centers, cfg,
+                     EngineConfig(num_shards=shards, cycles_per_dispatch=7))
+    est = eng.init(inputs, seed=0)
+    for _ in range(42):
+        core, _ = lss.cycle(core, ta, centers, cfg)
+    est = eng.run(est, 42)
+    _assert_state_close(eng.to_lss_state(est), core)
+
+
+def test_single_shard_degenerates_to_core():
+    topo = topology.grid(36)
+    centers, inputs = _problem(topo)
+    ta = lss.TopoArrays.from_topology(topo)
+    cfg = lss.LSSConfig()
+    core = lss.init_state(ta, inputs, seed=0)
+    eng = ShardedLSS(topo, centers, cfg,
+                     EngineConfig(num_shards=1, cycles_per_dispatch=4))
+    est = eng.init(inputs, seed=0)
+    for _ in range(20):
+        core, _ = lss.cycle(core, ta, centers, cfg)
+    est = eng.run(est, 20)
+    _assert_state_close(eng.to_lss_state(est), core)
+
+
+def test_engine_kernel_path_parity():
+    """use_kernels routes status/violations/correction through the fused
+    Pallas kernels (interpret mode on CPU) — same messages, same cycles."""
+    topo = topology.grid(36)
+    centers, inputs = _problem(topo)
+    ta = lss.TopoArrays.from_topology(topo)
+    cfg = lss.LSSConfig()
+    core = lss.init_state(ta, inputs, seed=0)
+    eng = ShardedLSS(topo, centers, cfg,
+                     EngineConfig(num_shards=2, cycles_per_dispatch=1,
+                                  use_kernels=True))
+    est = eng.init(inputs, seed=0)
+    for _ in range(5):
+        core, _ = lss.cycle(core, ta, centers, cfg)
+    est = eng.run(est, 5)
+    un = eng.to_lss_state(est)
+    np.testing.assert_allclose(un.out_m, core.out_m, atol=1e-5)
+    np.testing.assert_allclose(un.out_c, core.out_c, atol=1e-5)
+    assert np.array_equal(np.asarray(un.pending), np.asarray(core.pending))
+    assert int(un.msgs) == int(core.msgs)
+
+
+def test_collective_exchange_parity(subproc):
+    """shard_map + all_to_all transport on a real 4-device mesh."""
+    out = subproc("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import lss, sim, topology, wvs
+from repro.engine import ShardedLSS, EngineConfig
+
+topo = topology.grid(64)
+spec = sim.ProblemSpec(n=64, seed=0)
+centers, sample, _, _ = sim.make_problem(spec)
+rng = np.random.default_rng(1)
+inputs = wvs.from_vector(jnp.asarray(sample(rng, topo.n)),
+                         jnp.ones((topo.n,), jnp.float32))
+ta = lss.TopoArrays.from_topology(topo)
+cfg = lss.LSSConfig()
+core = lss.init_state(ta, inputs, seed=0)
+mesh = jax.make_mesh((4,), ("shards",))
+eng = ShardedLSS(topo, centers, cfg,
+                 EngineConfig(num_shards=4, cycles_per_dispatch=4)
+                 ).use_mesh(mesh, "shards")
+est = eng.init(inputs, seed=0)
+for _ in range(40):
+    core, _ = lss.cycle(core, ta, centers, cfg)
+est = eng.run(est, 40)
+un = eng.to_lss_state(est)
+assert np.allclose(un.out_m, core.out_m, atol=1e-6)
+assert np.allclose(un.in_m, core.in_m, atol=1e-6)
+assert np.array_equal(np.asarray(un.pending), np.asarray(core.pending))
+assert int(un.msgs) == int(core.msgs)
+acc_c, q_c, _ = lss.metrics(core, ta, centers)
+acc_e, q_e, _ = eng.metrics(est)
+assert float(acc_c) == float(acc_e) and bool(q_c) == bool(q_e)
+print("COLLECTIVE_PARITY_OK")
+""", n_devices=4)
+    assert "COLLECTIVE_PARITY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# sim.py routing + sweeps
+# ---------------------------------------------------------------------------
+
+
+def test_run_static_engine_route_matches_core():
+    topo = topology.grid(49)
+    spec = sim.ProblemSpec(n=49, seed=2)
+    res_core = sim.run_static(topo, spec, max_cycles=120)
+    res_eng = sim.run_static(topo, spec, max_cycles=120,
+                             engine=EngineConfig(num_shards=2,
+                                                 cycles_per_dispatch=1))
+    assert res_eng["engine_shards"] == 2
+    assert res_eng["final_accuracy"] == res_core["final_accuracy"]
+    assert res_eng["quiescent"] == res_core["quiescent"]
+    assert res_eng["total_msgs"] == res_core["total_msgs"]
+    assert res_eng["quiesced_at"] == res_core["quiesced_at"]
+
+
+def test_run_dynamic_engine_route_matches_core():
+    """Same host RNG stream -> identical noise/churn edits -> identical
+    dynamics through the sharded path."""
+    topo = topology.grid(64)
+    spec = sim.ProblemSpec(n=64, k=3, d=2, bias=0.2, std=1.0, seed=6)
+    kw = dict(cycles=120, noise_ppmc=2000.0, churn_ppmc=500.0, warmup=40)
+    res_core = sim.run_dynamic(topo, spec, lss.LSSConfig(), **kw)
+    res_eng = sim.run_dynamic(topo, spec, lss.LSSConfig(), engine=2, **kw)
+    assert res_eng["alive_frac"] == res_core["alive_frac"]
+    assert np.isclose(res_eng["avg_accuracy"], res_core["avg_accuracy"])
+    assert np.isclose(res_eng["msgs_per_link_per_cycle"],
+                      res_core["msgs_per_link_per_cycle"])
+
+
+def test_sweep_matches_sequential_runs():
+    topo = topology.grid(49)
+    spec = sim.ProblemSpec(n=49)
+    seeds = [0, 1, 2]
+    res = sweep_static(topo, spec, seeds, cycles=80)
+    assert res["accuracy"].shape == (3, 80)
+    for i, s in enumerate(seeds):
+        seq = sim.run_static(topo, dataclasses.replace(spec, seed=s),
+                             max_cycles=80)
+        assert res["accuracy"][i, -1] == seq["final_accuracy"]
+        assert res["msgs"][i, -1] == seq["total_msgs"]
+        if seq["quiesced_at"] is not None:
+            assert bool(res["quiescent"][i, seq["quiesced_at"] - 1])
+    c95 = cycles_to_accuracy(res["accuracy"], 0.95)
+    assert (c95 > 0).all()
+
+
+def test_dynamic_hooks_permute_correctly():
+    """set_inputs / kill_peers address ORIGINAL peer ids."""
+    topo = topology.grid(36)
+    centers, inputs = _problem(topo)
+    eng = ShardedLSS(topo, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=3))
+    est = eng.init(inputs, seed=0)
+    who = np.array([0, 7, 35])
+    vals = np.full((3, 2), 9.5, np.float32)
+    est = eng.set_inputs(est, who, vals)
+    est = eng.kill_peers(est, np.array([5, 11]))
+    un = eng.to_lss_state(est)
+    np.testing.assert_allclose(np.asarray(un.x_m)[who], vals)
+    alive = np.asarray(un.alive)
+    assert not alive[5] and not alive[11] and alive.sum() == 34

@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: verify test bench bench-full dev-deps
+.PHONY: verify test bench bench-full bench-smoke dev-deps
 
 # The tier-1 gate (ROADMAP.md): full suite, fail fast.
 verify:
@@ -13,9 +13,13 @@ test: verify
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
 
-# CI-budget benchmark sweep (CSV to stdout); bench-full = paper scale.
+# CI-budget benchmark sweep (CSV to stdout); bench-full = paper scale;
+# bench-smoke = toy sizes (CI gate: benchmark scripts must still run).
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 bench-full:
 	PYTHONPATH=src $(PY) -m benchmarks.run --full
+
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --smoke

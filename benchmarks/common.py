@@ -2,7 +2,13 @@
 
 Every fig*.py exposes ``run(full: bool) -> list[Row]``; ``run.py`` drives
 them all and prints ``name,us_per_call,derived`` CSV (us_per_call = wall
-time per simulator cycle; derived = the figure's own metric).
+time per simulator cycle; derived = the figure's own metric).  A row's
+``extra`` dict carries machine-readable fields — ``run.py`` aggregates
+them into the ``BENCH_*.json`` artifacts.
+
+``SMOKE`` (set by ``run.py --smoke``) clamps every suite to tiny sizes so
+CI can execute each benchmark script end-to-end in seconds — a
+does-it-still-run gate, not a measurement.
 """
 
 from __future__ import annotations
@@ -13,18 +19,38 @@ from typing import Any
 
 from repro.core import lss, sim, topology
 
+# CI smoke mode: benchmark scripts run end-to-end at toy sizes.
+SMOKE = False
+
+_SMOKE_N = 256
+_SMOKE_CYCLES = 30
+
+
+def clamp_n(n: int) -> int:
+    return min(n, _SMOKE_N) if SMOKE else n
+
+
+def clamp_cycles(c: int) -> int:
+    return min(c, _SMOKE_CYCLES) if SMOKE else c
+
 
 @dataclasses.dataclass
 class Row:
     name: str
     us_per_call: float
     derived: Any
+    extra: dict = dataclasses.field(default_factory=dict)
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
 
+    def json(self) -> dict:
+        return {"name": self.name, "us_per_call": self.us_per_call,
+                "derived": str(self.derived), **self.extra}
+
 
 def topo_factory(kind: str, n: int, conn: int = 2):
+    n = clamp_n(n)
     if kind == "grid":
         side = int(round(n ** 0.5))
         return topology.grid(side * side, diag=conn > 2)
@@ -40,7 +66,7 @@ def timed_static(kind: str, n: int, spec_kw=None, cfg=lss.LSSConfig(),
     topo = topo_factory(kind, n)
     spec = sim.ProblemSpec(n=topo.n, **(spec_kw or {}))
     t0 = time.perf_counter()
-    res = sim.run_static(topo, spec, cfg, max_cycles=max_cycles,
+    res = sim.run_static(topo, spec, cfg, max_cycles=clamp_cycles(max_cycles),
                          engine=engine)
     dt = time.perf_counter() - t0
     cycles = res["quiesced_at"] or max_cycles
@@ -52,6 +78,10 @@ def timed_dynamic(kind: str, n: int, cycles=400, spec_kw=None,
                   cfg=lss.LSSConfig(), engine=None, **dyn_kw):
     topo = topo_factory(kind, n)
     spec = sim.ProblemSpec(n=topo.n, **(spec_kw or {}))
+    cycles = clamp_cycles(cycles)
+    if SMOKE:
+        dyn_kw = {**dyn_kw, "warmup": min(dyn_kw.get("warmup", 100),
+                                          cycles // 2)}
     t0 = time.perf_counter()
     res = sim.run_dynamic(topo, spec, cfg, cycles=cycles, engine=engine,
                           **dyn_kw)

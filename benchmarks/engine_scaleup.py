@@ -53,10 +53,13 @@ def _time_engine(topo, centers, inputs, cycles=CYCLES, shards=SHARDS, k=K):
     state = eng.init(inputs, seed=0)
     state = eng.run(state, k)  # compile
     jax.block_until_ready(state)
+    state, _ = eng.drain_msgs(state)  # count only the timed cycles below
     t0 = time.perf_counter()
     state = eng.run(state, cycles)
     jax.block_until_ready(state)
-    return (time.perf_counter() - t0) / cycles * 1e6, eng, state
+    us = (time.perf_counter() - t0) / cycles * 1e6
+    state, msgs = eng.drain_msgs(state)
+    return us, eng, state, msgs
 
 
 def run(full: bool = False):
@@ -70,23 +73,35 @@ def run(full: bool = False):
         "chord": [10_000] + ([100_000] if full else []),
     }
     for kind, ns in sizes.items():
+        seen = set()
         for n in ns:
-            topo = topo_factory(kind, n)
+            topo = topo_factory(kind, n)  # --smoke clamps n
+            if topo.n in seen:
+                continue  # clamped sizes collapse; measure each n once
+            seen.add(topo.n)
             spec, centers, inputs = _problem(topo)
-            eng_us, eng, est = _time_engine(topo, centers, inputs)
+            eng_us, eng, est, msgs = _time_engine(topo, centers, inputs)
             acc, _, _ = eng.metrics(est)
             cut = eng.stopo.cut_edges() / max(topo.num_edges, 1)
-            if n <= 200_000:  # core loop is dispatch-bound past this
+            edges = max(topo.num_edges, 1)
+            if topo.n <= 200_000:  # core loop is dispatch-bound past this
                 core_us, _ = _time_core(topo, centers, inputs)
                 speedup = core_us / eng_us
-                rows.append(Row(f"engine_scaleup/{kind}/n{topo.n}/core",
-                                core_us, ""))
+                rows.append(Row(
+                    f"engine_scaleup/{kind}/n{topo.n}/core", core_us, "",
+                    {"n": topo.n, "kind": kind, "path": "core",
+                     "peers_per_s": topo.n / core_us * 1e6}))
             else:
                 speedup = float("nan")
             rows.append(Row(
                 f"engine_scaleup/{kind}/n{topo.n}/engine", eng_us,
                 f"speedup={speedup:.2f}x cut={cut:.3f} "
-                f"acc@{CYCLES}={float(acc):.3f}"))
+                f"acc@{CYCLES}={float(acc):.3f}",
+                {"n": topo.n, "kind": kind, "path": "engine",
+                 "shards": SHARDS, "speedup_vs_core": speedup,
+                 "cut_frac": cut, "accuracy": float(acc),
+                 "peers_per_s": topo.n / eng_us * 1e6,
+                 "msgs_per_link": msgs / edges / CYCLES}))
     return rows
 
 

@@ -18,13 +18,14 @@ import numpy as np
 
 from repro.kernels import ref
 
+from . import common
 from .common import Row
 
 
 def run(full: bool = False):
     rows = []
     rng = np.random.default_rng(0)
-    n = 80_000 if full else 20_000
+    n = common.clamp_n(80_000 if full else 20_000)
     D, d, k = 4, 2, 3
     f = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32))
     x_m, x_c = f(n, d), jnp.ones((n,))

@@ -1,25 +1,58 @@
-"""Benchmark driver — one function per paper table/figure.
+"""Benchmark driver — one function per paper table/figure + systems suites.
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs paper-scale
-(slow); default sizes fit the CI budget.  ``--only fig2`` filters.
+(slow); default sizes fit the CI budget; ``--smoke`` clamps every suite
+to toy sizes (a does-it-still-run gate for CI).  ``--only fig2`` filters.
+
+Machine-readable perf tracking: the systems suites ("service", "engine")
+additionally write ``BENCH_service.json`` / ``BENCH_engine.json`` next to
+the working directory (``--json-dir`` to relocate, ``--no-json`` to
+skip) with per-row extras (median wall-time, msgs/link, peers/s) so the
+perf trajectory is diffable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import statistics
 import sys
+
+JSON_SUITES = ("service", "engine")
+
+
+def _summary(rows) -> dict:
+    med = lambda k: (statistics.median(r.extra[k] for r in rows
+                                       if k in r.extra)
+                     if any(k in r.extra for r in rows) else None)
+    return {
+        "median_us_per_call": statistics.median(r.us_per_call for r in rows)
+        if rows else None,
+        "median_msgs_per_link": med("msgs_per_link"),
+        "median_peers_per_s": med("peers_per_s"),
+    }
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: every suite must merely complete")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-dir", default=".")
+    ap.add_argument("--no-json", action="store_true")
     args = ap.parse_args(argv)
+
+    from . import common
+
+    if args.smoke:
+        common.SMOKE = True
 
     from . import (engine_scaleup, fig2_scaleup, fig3_connectivity,
                    fig4_message_loss, fig5_difficulty, fig6_dynamic_data,
                    fig7_loss_dynamic, fig8_churn, figD_ineffective,
-                   kernel_bench)
+                   kernel_bench, service_throughput)
 
     suites = {
         "fig2": fig2_scaleup, "fig3": fig3_connectivity,
@@ -27,17 +60,31 @@ def main(argv=None) -> None:
         "fig6": fig6_dynamic_data, "fig7": fig7_loss_dynamic,
         "fig8": fig8_churn, "figD": figD_ineffective,
         "kernel": kernel_bench, "engine": engine_scaleup,
+        "service": service_throughput,
     }
     print("name,us_per_call,derived")
     for name, mod in suites.items():
         if args.only and args.only not in name:
             continue
         try:
-            for row in mod.run(full=args.full):
-                print(row.csv(), flush=True)
+            rows = list(mod.run(full=args.full))
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{e!r}", flush=True)
             raise
+        for row in rows:
+            print(row.csv(), flush=True)
+        if name in JSON_SUITES and not args.no_json:
+            payload = {
+                "suite": name,
+                "mode": ("smoke" if args.smoke
+                         else "full" if args.full else "default"),
+                "rows": [r.json() for r in rows],
+                "summary": _summary(rows),
+            }
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as fh:
+                json.dump(payload, fh, indent=2, default=str)
+            print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

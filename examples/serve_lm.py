@@ -4,7 +4,7 @@ Exercises the production serve path (KV caches, ring buffers for SWA,
 SSM states for the attention-free archs) on any assigned arch's smoke
 config.
 
-    PYTHONPATH=src python examples/serve.py --arch mixtral-8x7b --tokens 32
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b --tokens 32
 """
 
 import argparse

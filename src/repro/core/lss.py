@@ -38,8 +38,8 @@ import numpy as np
 from . import correction, stopping, topology, wvs
 
 __all__ = [
-    "LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle", "metrics",
-    "counter_dtype",
+    "LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle",
+    "cycle_impl", "metrics", "metrics_impl", "counter_dtype",
 ]
 
 
@@ -58,6 +58,16 @@ def counter_dtype():
 
 
 class LSSConfig(NamedTuple):
+    """Simulator knobs.
+
+    ``beta``/``ell``/``eps`` are *traceable*: they only enter arithmetic,
+    so :func:`cycle_impl` accepts them as jax scalars — this is what lets
+    the service layer vmap a query axis with per-query knobs.  ``policy``,
+    ``drop_rate`` and ``max_corr_iters`` are structural (they change the
+    traced program: branch choice, drop branch, loop bound) and must stay
+    Python values.
+    """
+
     beta: float = 1e-3  # minimum-weight floor on |S_i| (Sec. IV-C)
     ell: int = 1  # min cycles between a peer's sends (Alg. 1)
     drop_rate: float = 0.0  # i.i.d. message-loss probability
@@ -117,7 +127,15 @@ def _live_mask(topo: TopoArrays, alive: jax.Array) -> jax.Array:
 
 
 def _deliver(state: LSSState, topo: TopoArrays, drop_rate: float, key):
-    """Move pending out-messages into the recipients' in-slots."""
+    """Move pending out-messages into the recipients' in-slots.
+
+    Message (i,k) lands at (nbr[i,k], rev[i,k]).  Because ``rev`` makes
+    the slot map an involution (``nbr[nbr[i,k], rev[i,k]] == i``), the
+    same delivery reads as: in-slot (j,r) *receives from* its unique
+    source slot (nbr[j,r], rev[j,r]).  The receive formulation is a
+    gather, which XLA vectorizes where the equivalent scatter serializes
+    — same values in the same slots, bitwise.
+    """
     live = _live_mask(topo, state.alive)
     send = state.pending & live
     if drop_rate > 0.0:
@@ -125,18 +143,14 @@ def _deliver(state: LSSState, topo: TopoArrays, drop_rate: float, key):
         delivered = send & keep
     else:
         delivered = send
-    # Message (i,k) lands at (nbr[i,k], rev[i,k]).
     n, D = topo.nbr.shape
-    flat = (topo.nbr * D + topo.rev).reshape(n * D)  # flat target slot index
-    idx = jnp.where(delivered.reshape(n * D), flat, n * D)  # OOB = dropped
-
-    def scatter(buf, upd):
-        buf_f = buf.reshape(n * D, *buf.shape[2:])
-        upd_f = upd.reshape(n * D, *upd.shape[2:])
-        return buf_f.at[idx].set(upd_f, mode="drop").reshape(buf.shape)
-
-    in_m = scatter(state.in_m, state.out_m)
-    in_c = scatter(state.in_c, state.out_c)
+    src = topo.nbr * D + topo.rev  # flat source slot of each in-slot
+    flat = lambda b: b.reshape(n * D, *b.shape[2:])
+    # Did my source post a message that survived?  (Padding slots alias
+    # arbitrary sources — mask them out on the receiver side.)
+    got = flat(delivered)[src] & topo.mask
+    in_m = jnp.where(got[..., None], flat(state.out_m)[src], state.in_m)
+    in_c = jnp.where(got, flat(state.out_c)[src], state.in_c)
     sent = jnp.sum(send)
     return state._replace(
         in_m=in_m,
@@ -151,7 +165,7 @@ def _violations(decide, s, a, live, eps):
 
 
 def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
-                     status_viol=None, corrected=None):
+                     status_viol=None, corrected=None, entry=None):
     """Alg. 1's do-while, vectorized across peers.
 
     The corrected messages for a violating set V_i are a pure function of
@@ -169,7 +183,11 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
     ``corrected(old_s, a0, in_m, in_c, v) -> (new_m, new_c)`` are pluggable
     so the sharded engine can route the same loop through the fused Pallas
     kernels; the defaults are the reference :mod:`stopping` /
-    :mod:`correction` formulas.
+    :mod:`correction` formulas.  ``entry=(old_s, a0, viol0)`` hands in the
+    loop-entry status/agreements/violations when the caller has already
+    computed them (every caller has — it needed ``viol0`` for the
+    ``active`` test), saving one full status/violation evaluation per
+    cycle.
     """
     n, D = topo.nbr.shape
     if status_viol is None:
@@ -183,8 +201,12 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
             return correction.corrected_messages(
                 old_s, a0, in_m, in_c, v, cfg.beta, cfg.eps)
 
-    old_s, viol0 = status_viol(state.out_m, state.out_c)
-    a0 = stopping.agreements(state.out_m, state.out_c, state.in_m, state.in_c)
+    if entry is not None:
+        old_s, a0, viol0 = entry
+    else:
+        old_s, viol0 = status_viol(state.out_m, state.out_c)
+        a0 = stopping.agreements(state.out_m, state.out_c,
+                                 state.in_m, state.in_c)
     v0 = viol0 & active[:, None]
     if cfg.policy == "uniform":
         # Eq. 5: a violating peer corrects *every* neighbor, not just V_i.
@@ -224,15 +246,23 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
 correction_loop = _correction_loop
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "decide"))
-def cycle(state: LSSState, topo: TopoArrays, centers: jax.Array, cfg: LSSConfig,
-          decide=None):
-    """One synchronous simulator cycle.  Returns (state', sent_this_cycle)."""
-    from . import regions as _regions
+def cycle_impl(state: LSSState, topo: TopoArrays, cfg: LSSConfig, decide,
+               gate=None):
+    """Untraced body of :func:`cycle` — the query-batchable form.
 
-    if decide is None:
-        decide = lambda v: _regions.decide_voronoi(v, centers)
+    Unlike :func:`cycle` this takes ``decide`` explicitly and is not jitted,
+    so it composes with ``vmap``/``scan``: the service layer maps it over a
+    *query axis* where ``cfg.beta``/``cfg.ell``/``cfg.eps`` are traced
+    per-query scalars and ``decide`` closes over per-query (traced) region
+    parameters.  ``cfg.policy``/``cfg.drop_rate``/``cfg.max_corr_iters``
+    must remain Python values (they select the traced program).
 
+    ``gate`` (optional bool, broadcastable to (n,)) implements masked-slot
+    semantics: where False the peer may not *initiate* sends this cycle —
+    a padding query slot whose state starts quiescent therefore never
+    posts a message and its ``msgs`` counter stays exactly zero, while the
+    cycle/RNG bookkeeping still advances in lockstep with the live slots.
+    """
     rng, kdrop = jax.random.split(state.rng)
     state = state._replace(rng=rng)
     state, _ = _deliver(state, topo, cfg.drop_rate, kdrop)
@@ -245,8 +275,11 @@ def cycle(state: LSSState, topo: TopoArrays, centers: jax.Array, cfg: LSSConfig,
     viol = _violations(decide, s, a, live, cfg.eps)
     timer_ok = (state.t - state.last_send) >= cfg.ell
     active = state.alive & timer_ok & jnp.any(viol, axis=1)
+    if gate is not None:
+        active = active & gate
 
-    out_m, out_c, v, did_send = _correction_loop(decide, state, topo, live, active, cfg)
+    out_m, out_c, v, did_send = _correction_loop(
+        decide, state, topo, live, active, cfg, entry=(s, a, viol))
     pending = state.pending | (v & did_send[:, None])
     last_send = jnp.where(did_send, state.t, state.last_send)
     sent_now = jnp.sum(v & did_send[:, None])
@@ -257,12 +290,27 @@ def cycle(state: LSSState, topo: TopoArrays, centers: jax.Array, cfg: LSSConfig,
     ), sent_now
 
 
-def metrics(state: LSSState, topo: TopoArrays, centers: jax.Array,
-            eps: float = 1e-9):
-    """(accuracy, quiescent, correct_mask): fraction of live peers whose
-    f(vec(S_i)) equals f(vec((+)X over live peers)), and quiescence."""
+@functools.partial(jax.jit, static_argnames=("cfg", "decide"))
+def cycle(state: LSSState, topo: TopoArrays, centers: jax.Array, cfg: LSSConfig,
+          decide=None):
+    """One synchronous simulator cycle.  Returns (state', sent_this_cycle)."""
     from . import regions as _regions
 
+    if decide is None:
+        decide = lambda v: _regions.decide_voronoi(v, centers)
+    return cycle_impl(state, topo, cfg, decide)
+
+
+def metrics_impl(state: LSSState, topo: TopoArrays, decide, eps=1e-9):
+    """Unjitted, decide-pluggable body of :func:`metrics`.
+
+    Like :func:`cycle_impl` this is the query-batchable form: ``decide``
+    may close over traced per-query region parameters and ``eps`` may be a
+    traced scalar, so the service layer vmaps it over its query axis.
+    Returns ``(accuracy, quiescent, correct_mask, want)`` — ``want`` is
+    the ground-truth region id ``f(vec((+)X))``, which per-tenant
+    telemetry reports alongside accuracy.
+    """
     live = _live_mask(topo, state.alive)
     s = stopping.status(
         state.x_m, state.x_c, state.out_m, state.out_c, state.in_m, state.in_c, live
@@ -271,13 +319,23 @@ def metrics(state: LSSState, topo: TopoArrays, centers: jax.Array,
         jnp.sum(jnp.where(state.alive[:, None], state.x_m, 0.0), axis=0),
         jnp.sum(jnp.where(state.alive, state.x_c, 0.0), axis=0),
     )
-    want = _regions.decide_voronoi(wvs.vec(gx, eps)[None], centers)[0]
-    got = _regions.decide_voronoi(wvs.vec(s, eps), centers)
+    want = decide(wvs.vec(gx, eps)[None])[0]
+    got = decide(wvs.vec(s, eps))
     correct = (got == want) & state.alive
     acc = jnp.sum(correct) / jnp.maximum(jnp.sum(state.alive), 1)
 
     a = stopping.agreements(state.out_m, state.out_c, state.in_m, state.in_c)
-    decide = lambda v: _regions.decide_voronoi(v, centers)
     viol = stopping.violations_alg1(decide, s, a, live, eps)
     quiescent = ~jnp.any(state.pending & live) & ~jnp.any(viol)
+    return acc, quiescent, correct, want
+
+
+def metrics(state: LSSState, topo: TopoArrays, centers: jax.Array,
+            eps: float = 1e-9):
+    """(accuracy, quiescent, correct_mask): fraction of live peers whose
+    f(vec(S_i)) equals f(vec((+)X over live peers)), and quiescence."""
+    from . import regions as _regions
+
+    decide = lambda v: _regions.decide_voronoi(v, centers)
+    acc, quiescent, correct, _ = metrics_impl(state, topo, decide, eps)
     return acc, quiescent, correct

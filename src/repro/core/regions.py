@@ -27,8 +27,15 @@ import jax.numpy as jnp
 __all__ = [
     "VoronoiRegions",
     "HalfspaceRegions",
+    "PackedRegions",
     "decide_voronoi",
+    "decide_packed",
+    "KIND_VORONOI",
+    "KIND_HALFSPACE",
 ]
+
+KIND_VORONOI = 0
+KIND_HALFSPACE = 1
 
 
 def decide_voronoi(v: jax.Array, centers: jax.Array) -> jax.Array:
@@ -76,3 +83,123 @@ class HalfspaceRegions(NamedTuple):
 
 
 RegionFamily = Callable[[jax.Array], jax.Array]
+
+
+def decide_packed(v: jax.Array, kind, centers, cmask, w, b) -> jax.Array:
+    """Decision function of ONE packed family on batched ``v`` (..., d).
+
+    All parameters may be traced (this is the form the service vmaps over
+    its query axis): ``kind`` scalar int32, ``centers`` (Kmax, d) with
+    validity ``cmask`` (Kmax,), ``w`` (d,) / ``b`` () for the halfspace.
+    Padding center slots are excluded by an +inf score, so a k-center
+    Voronoi family padded to Kmax decides bitwise-identically to
+    :func:`decide_voronoi` on the unpadded centers.
+    """
+    scores = -2.0 * jnp.einsum("...d,kd->...k", v, centers) + jnp.sum(
+        centers * centers, axis=-1
+    )
+    scores = jnp.where(cmask, scores, jnp.inf)
+    vor = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+    half = (jnp.einsum("...d,d->...", v, w) >= b).astype(jnp.int32)
+    return jnp.where(kind == KIND_VORONOI, vor, half)
+
+
+class PackedRegions(NamedTuple):
+    """A stackable, padded batch of Q region families (one per query slot).
+
+    Fixed shapes — (Q, Kmax, d) centers etc. — make the batch a plain
+    pytree: families can be written into / cleared from individual slots
+    between dispatches without changing any traced shape, which is what
+    lets the service admit/retire queries without recompiling.  Unused
+    parameter blocks (e.g. ``w``/``b`` of a Voronoi slot) are zeros.
+    """
+
+    kind: jax.Array  # int32 (Q,)  KIND_VORONOI | KIND_HALFSPACE
+    centers: jax.Array  # (Q, Kmax, d)
+    cmask: jax.Array  # bool (Q, Kmax)
+    w: jax.Array  # (Q, d)
+    b: jax.Array  # (Q,)
+
+    @property
+    def q(self) -> int:
+        return self.kind.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.centers.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.centers.shape[2]
+
+    @classmethod
+    def empty(cls, q: int, k_max: int, d: int,
+              dtype=jnp.float32) -> "PackedRegions":
+        """Q all-padding slots (every slot decides region 0 everywhere)."""
+        return cls(
+            kind=jnp.zeros((q,), jnp.int32),
+            centers=jnp.zeros((q, k_max, d), dtype),
+            cmask=jnp.zeros((q, k_max), bool),
+            w=jnp.zeros((q, d), dtype),
+            b=jnp.zeros((q,), dtype),
+        )
+
+    @classmethod
+    def pack(cls, families, k_max: int | None = None) -> "PackedRegions":
+        """Stack concrete families (Voronoi/Halfspace) into padded slots."""
+        if not families:
+            raise ValueError("pack() needs at least one family")
+        d = families[0].d
+        if k_max is None:
+            k_max = max([f.k for f in families
+                         if isinstance(f, VoronoiRegions)] or [1])
+        out = cls.empty(len(families), k_max, d)
+        for i, fam in enumerate(families):
+            out = out.set(i, fam)
+        return out
+
+    def set(self, slot: int, family) -> "PackedRegions":
+        """Write one family into ``slot`` (host-side, between dispatches)."""
+        if isinstance(family, VoronoiRegions):
+            k = family.k
+            if k > self.k_max:
+                raise ValueError(
+                    f"family has {k} centers, slot capacity is {self.k_max}")
+            if family.d != self.d:
+                raise ValueError(f"family d={family.d} != packed d={self.d}")
+            cent = jnp.zeros((self.k_max, self.d), self.centers.dtype
+                             ).at[:k].set(family.centers)
+            return self._replace(
+                kind=self.kind.at[slot].set(KIND_VORONOI),
+                centers=self.centers.at[slot].set(cent),
+                cmask=self.cmask.at[slot].set(jnp.arange(self.k_max) < k),
+                w=self.w.at[slot].set(0.0),
+                b=self.b.at[slot].set(0.0),
+            )
+        if isinstance(family, HalfspaceRegions):
+            if family.d != self.d:
+                raise ValueError(f"family d={family.d} != packed d={self.d}")
+            return self._replace(
+                kind=self.kind.at[slot].set(KIND_HALFSPACE),
+                centers=self.centers.at[slot].set(0.0),
+                cmask=self.cmask.at[slot].set(False),
+                w=self.w.at[slot].set(family.w),
+                b=self.b.at[slot].set(family.b),
+            )
+        raise TypeError(f"unsupported region family: {type(family)!r}")
+
+    def clear(self, slot: int) -> "PackedRegions":
+        """Reset ``slot`` to padding."""
+        return PackedRegions(
+            kind=self.kind.at[slot].set(KIND_VORONOI),
+            centers=self.centers.at[slot].set(0.0),
+            cmask=self.cmask.at[slot].set(False),
+            w=self.w.at[slot].set(0.0),
+            b=self.b.at[slot].set(0.0),
+        )
+
+    def decide_slot(self, slot: int) -> RegionFamily:
+        """The decision function of one slot (host-side convenience)."""
+        return lambda v: decide_packed(
+            v, self.kind[slot], self.centers[slot], self.cmask[slot],
+            self.w[slot], self.b[slot])

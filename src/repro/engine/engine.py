@@ -202,22 +202,35 @@ class ShardedLSS:
 
     # -- per-peer update (flattened), shared with the collective path ------
     def _peer_update(self, out_m, out_c, in_m, in_c, x_m, x_c, live,
-                     last_send, alive, t):
+                     last_send, alive, t, decide=None, cfg=None, gate=None):
         """Violation test + selective correction on flattened (N, ...) rows.
 
         This is exactly the post-delivery half of :func:`repro.core.lss.
         cycle`; ``lss.correction_loop`` is the same do-while object.
+
+        ``decide``/``cfg``/``gate`` override the engine's own (used by the
+        service layer, which vmaps a query axis of per-query region
+        families, traceable knobs and an active-slot gate over this body).
+        Overrides bypass the fused kernels — those hardwire the engine's
+        Voronoi decide and static knobs.
         """
-        cfg, decide = self.cfg, self.decide
-        if self.use_kernels:
+        use_kernels = (self.use_kernels and decide is None
+                       and (cfg is None or cfg is self.cfg))
+        cfg = cfg if cfg is not None else self.cfg
+        decide = decide if decide is not None else self.decide
+        entry = None
+        if use_kernels:
             s, viol = self._status_viol_kernel(x_m, x_c, out_m, out_c,
                                                in_m, in_c, live)
         else:
             s = stopping.status(x_m, x_c, out_m, out_c, in_m, in_c, live)
             a = stopping.agreements(out_m, out_c, in_m, in_c)
             viol = stopping.violations_alg1(decide, s, a, live, cfg.eps)
+            entry = (s, a, viol)
         timer_ok = (t - last_send) >= cfg.ell
         active = alive & timer_ok & jnp.any(viol, axis=1)
+        if gate is not None:
+            active = active & gate
 
         flat_state = lss.LSSState(
             out_m=out_m, out_c=out_c, in_m=in_m, in_c=in_c,
@@ -226,7 +239,7 @@ class ShardedLSS:
         flat_topo = lss.TopoArrays(nbr=jnp.zeros(live.shape, jnp.int32),
                                    mask=live, rev=jnp.zeros_like(live, jnp.int32))
         status_viol = corrected = None
-        if self.use_kernels:
+        if use_kernels:
             # Same do-while, fused Pallas paths for the per-peer math.
             def status_viol(om, oc):
                 return self._status_viol_kernel(x_m, x_c, om, oc,
@@ -238,7 +251,7 @@ class ShardedLSS:
                     beta=cfg.beta, eps=cfg.eps)
         out_m2, out_c2, v, did_send = lss.correction_loop(
             decide, flat_state, flat_topo, live, active, cfg,
-            status_viol=status_viol, corrected=corrected)
+            status_viol=status_viol, corrected=corrected, entry=entry)
         pending = v & did_send[:, None]
         new_last = jnp.where(did_send, t, last_send)
         return out_m2, out_c2, pending, new_last
@@ -250,8 +263,16 @@ class ShardedLSS:
         return wvs.WV(s_m, s_c), viol
 
     # -- one cycle, gather-fallback (full arrays, one device) --------------
-    def _cycle_full(self, state: ShardedState) -> ShardedState:
-        cfg = self.cfg
+    def _cycle_full(self, state: ShardedState, decide=None, cfg=None,
+                    gate=None) -> ShardedState:
+        """One engine cycle on full ``(S, B, ...)`` arrays.
+
+        ``decide``/``cfg``/``gate`` are per-call overrides (see
+        :meth:`_peer_update`); the service layer vmaps this body over a
+        query axis, composing Q concurrent monitoring queries with the
+        shard axis in a single dispatch.
+        """
+        cfg = cfg if cfg is not None else self.cfg
         S, B, D = self.S, self.B, self.D
         keys = jax.vmap(jax.random.split)(state.rng)  # (S, 2, 2)
         rng, kdrop = keys[:, 0], keys[:, 1]
@@ -267,18 +288,21 @@ class ShardedLSS:
             delivered = send
         sent = jnp.sum(send, axis=(1, 2))
 
-        # Shard-local edges: the core's reverse-slot scatter, per shard.
-        idx = jnp.where(delivered & self._intra,
-                        self._tgt_row * D + self._rev, B * D)
+        # Shard-local edges: the core's receive-side gather (for an intra
+        # slot the (tgt_row, rev) map is an involution, so in-slot (j, r)
+        # reads its unique source slot (tgt_row[j,r], rev[j,r])).
+        src = self._tgt_row * D + self._rev  # (S, B, D) flat source slot
 
-        def scat(buf, upd, idx_s):
-            flat = buf.reshape(B * D, *buf.shape[2:])
-            return flat.at[idx_s.reshape(B * D)].set(
-                upd.reshape(B * D, *upd.shape[2:]), mode="drop"
-            ).reshape(buf.shape)
+        def gat(in_buf, out_buf, deliv, src_s, ok):
+            flat = out_buf.reshape(B * D, *out_buf.shape[2:])
+            got = deliv.reshape(B * D)[src_s] & ok
+            cond = got[..., None] if flat.ndim > 1 else got
+            return jnp.where(cond, flat[src_s], in_buf)
 
-        in_m = jax.vmap(scat)(state.in_m, state.out_m, idx)
-        in_c = jax.vmap(scat)(state.in_c, state.out_c, idx)
+        in_m = jax.vmap(gat)(state.in_m, state.out_m, delivered, src,
+                             self._intra)
+        in_c = jax.vmap(gat)(state.in_c, state.out_c, delivered, src,
+                             self._intra)
 
         # Cross-shard edges: halo gather -> transpose -> scatter.
         buf_m, buf_c, flag = exchange.gather_halo(
@@ -293,7 +317,7 @@ class ShardedLSS:
         out_m, out_c, pending, last_send = self._peer_update(
             fl(state.out_m), fl(state.out_c), fl(in_m), fl(in_c),
             fl(state.x_m), fl(state.x_c), fl(live), fl(state.last_send),
-            fl(state.alive), state.t)
+            fl(state.alive), state.t, decide=decide, cfg=cfg, gate=gate)
         sh = lambda a: a.reshape(S, B, *a.shape[1:])
         return state._replace(
             out_m=sh(out_m), out_c=sh(out_c), in_m=in_m, in_c=in_c,
@@ -329,14 +353,14 @@ class ShardedLSS:
         sent = jnp.sum(send)
 
         out_m, out_c = sq(state.out_m), sq(state.out_c)
-        idx = jnp.where(delivered & intra, tgt_row * D + rev, B * D)
-        flat_idx = idx.reshape(B * D)
-        in_m = (sq(state.in_m).reshape(B * D, -1)
-                .at[flat_idx].set(out_m.reshape(B * D, -1), mode="drop")
-                .reshape(B, D, -1))
-        in_c = (sq(state.in_c).reshape(B * D)
-                .at[flat_idx].set(out_c.reshape(B * D), mode="drop")
-                .reshape(B, D))
+        # Intra edges as the receive-side gather (see _cycle_full).
+        src = (tgt_row * D + rev).reshape(B * D)
+        got = (delivered.reshape(B * D)[src].reshape(B, D)) & intra
+        in_m = jnp.where(got[..., None],
+                         out_m.reshape(B * D, -1)[src].reshape(B, D, -1),
+                         sq(state.in_m))
+        in_c = jnp.where(got, out_c.reshape(B * D)[src].reshape(B, D),
+                         sq(state.in_c))
 
         buf_m, buf_c, flag = exchange.gather_block(
             out_m, out_c, delivered, halo.send_row, halo.send_slot,
@@ -400,7 +424,11 @@ class ShardedLSS:
         return state._replace(msgs=jnp.zeros_like(state.msgs)), total
 
     # -- observers ---------------------------------------------------------
-    def _metrics_impl(self, state: ShardedState, eps: float = 1e-9):
+    def _metrics_impl(self, state: ShardedState, eps=1e-9, decide=None):
+        """Unjitted metrics body; ``decide``/``eps`` may be per-query
+        (traced) overrides when the service vmaps this over its query axis.
+        Returns ``(acc, quiescent, correct-in-original-order, want)``."""
+        decide = decide if decide is not None else self.decide
         S, B = self.S, self.B
         fl = lambda a: a.reshape(S * B, *a.shape[2:])
         nbr_alive = state.alive.reshape(S * B)[self._tgt_pos]
@@ -411,20 +439,20 @@ class ShardedLSS:
                             fl(state.in_m), fl(state.in_c), live)
         gx = wvs.WV(jnp.sum(jnp.where(alive[:, None], x_m, 0.0), axis=0),
                     jnp.sum(jnp.where(alive, x_c, 0.0), axis=0))
-        want = self.decide(wvs.vec(gx, eps)[None])[0]
-        got = self.decide(wvs.vec(s, eps))
+        want = decide(wvs.vec(gx, eps)[None])[0]
+        got = decide(wvs.vec(s, eps))
         correct = (got == want) & alive
         acc = jnp.sum(correct) / jnp.maximum(jnp.sum(alive), 1)
         a = stopping.agreements(fl(state.out_m), fl(state.out_c),
                                 fl(state.in_m), fl(state.in_c))
-        viol = stopping.violations_alg1(self.decide, s, a, live, eps)
+        viol = stopping.violations_alg1(decide, s, a, live, eps)
         quiescent = ~jnp.any(fl(state.pending) & live) & ~jnp.any(viol)
-        return acc, quiescent, correct[self._pos]  # original peer order
+        return acc, quiescent, correct[self._pos], want  # original order
 
     def metrics(self, state: ShardedState, eps: float = 1e-9):
         """(accuracy, quiescent, correct-mask in original order) — the same
         numbers :func:`repro.core.lss.metrics` reports."""
-        return self._metrics_jit(state, eps=eps)
+        return self._metrics_jit(state, eps=eps)[:3]
 
     def total_msgs(self, state: ShardedState):
         return jnp.sum(state.msgs)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lss, sim, topology, wvs
+from repro.core import lss, regions, sim, topology, wvs
 
 __all__ = ["sweep_static", "sweep_configs", "cycles_to_accuracy"]
 
@@ -55,19 +55,7 @@ def sweep_static(
       quiescent  (n_seeds, cycles)  bool
       msgs       (n_seeds, cycles)  cumulative sends
     """
-    ta = lss.TopoArrays.from_topology(topo)
-    states, centers = [], []
-    for s in seeds:
-        sp = dataclasses.replace(spec, seed=int(s))
-        c, sample, _, _ = sim.make_problem(sp)
-        rng = np.random.default_rng(sp.seed + 1)
-        x = sample(rng, topo.n)
-        inputs = wvs.from_vector(jnp.asarray(x),
-                                 jnp.ones((topo.n,), jnp.float32))
-        states.append(lss.init_state(ta, inputs, seed=sp.seed))
-        centers.append(c)
-    batched = _stack_states(states)
-    centers = jnp.stack(centers)  # (n_seeds, k, d)
+    ta, batched, centers = _setup_seed_states(topo, spec, seeds)
 
     def one_cycle(state, _):
         state, _sent = jax.vmap(
@@ -102,6 +90,71 @@ def cycles_to_accuracy(accuracy: np.ndarray, level: float) -> np.ndarray:
     return np.where(hit.any(axis=1), first, -1)
 
 
+def _static_key(cfg: lss.LSSConfig):
+    """The structural fields — configs sharing these can share one trace."""
+    return (cfg.policy, float(cfg.drop_rate), int(cfg.max_corr_iters))
+
+
+def _setup_seed_states(topo, spec, seeds):
+    ta = lss.TopoArrays.from_topology(topo)
+    states, centers = [], []
+    for s in seeds:
+        sp = dataclasses.replace(spec, seed=int(s))
+        c, sample, _, _ = sim.make_problem(sp)
+        rng = np.random.default_rng(sp.seed + 1)
+        x = sample(rng, topo.n)
+        inputs = wvs.from_vector(jnp.asarray(x),
+                                 jnp.ones((topo.n,), jnp.float32))
+        states.append(lss.init_state(ta, inputs, seed=sp.seed))
+        centers.append(c)
+    return ta, _stack_states(states), jnp.stack(centers)
+
+
+def _sweep_knob_group(topo, spec, seeds, cfgs, cycles):
+    """One dispatch for ALL seeds x configs of one structural group.
+
+    ``beta``/``ell``/``eps`` are traceable (:func:`lss.cycle_impl`), so a
+    knob sweep becomes a second vmapped axis instead of a Python loop of
+    dispatches: trials are flattened (config, seed) pairs.
+    """
+    ta, base, centers = _setup_seed_states(topo, spec, seeds)
+    C, S = len(cfgs), len(seeds)
+    tile = lambda a: jnp.broadcast_to(a, (C, *a.shape)).reshape(
+        C * S, *a.shape[1:])
+    trials = jax.tree_util.tree_map(tile, base)
+    cent = tile(centers)
+    rep = lambda xs, dt: jnp.repeat(jnp.asarray(xs, dt), S)
+    beta = rep([c.beta for c in cfgs], jnp.float32)
+    ell = rep([c.ell for c in cfgs], jnp.int32)
+    eps = rep([c.eps for c in cfgs], jnp.float32)
+    cfg0 = cfgs[0]
+
+    def one_cycle(state, _):
+        def step(st, ce, b, e, p):
+            cfg = cfg0._replace(beta=b, ell=e, eps=p)
+            decide = lambda v: regions.decide_voronoi(v, ce)
+            st, _ = lss.cycle_impl(st, ta, cfg, decide)
+            # Metrics at the sweep_static default eps (observation epsilon
+            # is not a per-config knob).
+            acc, quiescent, _, _ = lss.metrics_impl(st, ta, decide)
+            return st, (acc, quiescent)
+        state, (acc, quiescent) = jax.vmap(step)(state, cent, beta, ell, eps)
+        sent = state.msgs
+        state = state._replace(msgs=jnp.zeros_like(state.msgs))
+        return state, (acc, quiescent, sent)
+
+    @jax.jit
+    def run(state):
+        return jax.lax.scan(one_cycle, state, None, length=cycles)
+
+    _, (acc, quiescent, sent) = run(trials)
+    msgs = np.cumsum(np.asarray(sent, dtype=np.int64), axis=0)
+    shape = lambda a: np.asarray(a).T.reshape(C, S, cycles)
+    acc, quiescent, msgs = shape(acc), shape(quiescent), shape(msgs)
+    return [{"accuracy": acc[i], "quiescent": quiescent[i], "msgs": msgs[i],
+             "num_edges": topo.num_edges} for i in range(C)]
+
+
 def sweep_configs(
     topo: topology.Topology,
     spec: sim.ProblemSpec,
@@ -109,10 +162,30 @@ def sweep_configs(
     cfgs: Sequence[lss.LSSConfig],
     cycles: int = 200,
     names: Optional[Sequence[str]] = None,
+    batch_knobs: bool = True,
 ):
-    """Sweep seeds (vmapped) x configs (looped): one dispatch per config."""
+    """Sweep seeds x configs; results keyed per config.
+
+    Configs that share their *structural* fields (policy, drop branch,
+    correction-loop bound) differ only in the traceable knobs
+    ``beta``/``ell``/``eps``, so with ``batch_knobs`` (default) each such
+    group becomes ONE dispatch for all its seeds x configs — the service's
+    query axis applied to experiment sweeps.  Structurally distinct
+    configs still cost one dispatch each.  ``batch_knobs=False`` keeps the
+    legacy one-dispatch-per-config path.
+    """
+    keys = [names[i] if names else f"cfg{i}" for i in range(len(cfgs))]
     out = {}
+    if not batch_knobs:
+        for key, cfg in zip(keys, cfgs):
+            out[key] = sweep_static(topo, spec, seeds, cfg, cycles)
+        return out
+    groups = {}
     for i, cfg in enumerate(cfgs):
-        key = names[i] if names else f"cfg{i}"
-        out[key] = sweep_static(topo, spec, seeds, cfg, cycles)
+        groups.setdefault(_static_key(cfg), []).append(i)
+    for idxs in groups.values():
+        res = _sweep_knob_group(topo, spec, seeds, [cfgs[i] for i in idxs],
+                                cycles)
+        for i, r in zip(idxs, res):
+            out[keys[i]] = r
     return out

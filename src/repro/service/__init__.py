@@ -1,0 +1,41 @@
+"""Multi-tenant streaming monitor service (long-lived serving layer).
+
+The paper's algorithm answers ONE threshold predicate per simulation run.
+This package turns it into a *service*: Q concurrent monitoring queries
+(each its own region family — Voronoi source selection or halfspace
+threshold — plus its own traceable LSS knobs) share one network graph and
+one jit dispatch, batched along a vmapped **query axis** on top of
+:mod:`repro.core.lss` (core backend) or :class:`repro.engine.ShardedLSS`
+(engine backend, query axis x shard axis).
+
+Components:
+
+* :class:`QueryRegistry` — fixed-capacity query slots with an active
+  mask; admit / retire / replace between dispatches never changes a
+  traced shape, so the service never recompiles.
+* :class:`StreamIngest` — queued per-peer data-update batches applied to
+  the local input vectors between dispatches (generalizing
+  ``sim.run_dynamic``'s resampling noise to real update streams).
+* :class:`Service` — the driver: K cycles per jit dispatch over all Q
+  slots (donated state buffers off-CPU), admission + ingest between
+  dispatches, per-tenant telemetry to a :class:`TelemetrySink`.
+"""
+
+from .ingest import StreamIngest, UpdateBatch
+from .query import QueryParams, QuerySpec
+from .registry import QueryRegistry
+from .service import Service, ServiceConfig
+from .telemetry import TelemetrySink
+from .workload import heterogeneous_tenants
+
+__all__ = [
+    "QueryParams",
+    "QueryRegistry",
+    "QuerySpec",
+    "Service",
+    "ServiceConfig",
+    "StreamIngest",
+    "TelemetrySink",
+    "UpdateBatch",
+    "heterogeneous_tenants",
+]

@@ -1,0 +1,104 @@
+"""Query model: user-facing specs and the padded device-side slot arrays.
+
+A :class:`QuerySpec` is what a tenant submits: a concrete region family
+(:class:`~repro.core.regions.VoronoiRegions` or
+:class:`~repro.core.regions.HalfspaceRegions`), the peers' initial local
+inputs for this query's statistic, and optional per-query LSS knob
+overrides (``beta``/``ell``/``eps`` — exactly the knobs
+:func:`repro.core.lss.cycle_impl` accepts as traced scalars).
+
+:class:`QueryParams` is the device-side form: every field is a fixed-shape
+array over Q slots (region families padded via
+:class:`~repro.core.regions.PackedRegions`), so the whole batch is one
+pytree the service vmaps over — and individual slots can be rewritten
+between dispatches without changing any traced shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lss, regions, wvs
+
+__all__ = ["QuerySpec", "QueryParams", "decide_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One tenant's monitoring query.
+
+    ``region``: the convex region family whose containing-region index of
+    the global average the tenant wants every peer to learn.
+    ``inputs``: per-peer local data vectors, shape (n, d) (vector
+    coordinates; weights default to 1 per peer, the paper's setup).
+    ``beta``/``ell``/``eps``: optional per-query overrides of the service
+    defaults.  ``seed`` seeds this query's message-loss RNG stream.
+    """
+
+    region: object  # VoronoiRegions | HalfspaceRegions
+    inputs: np.ndarray  # (n, d) local vectors
+    weights: Optional[np.ndarray] = None  # (n,), default ones
+    beta: Optional[float] = None
+    ell: Optional[int] = None
+    eps: Optional[float] = None
+    seed: int = 0
+
+    def input_wv(self) -> wvs.WV:
+        v = jnp.asarray(self.inputs, jnp.float32)
+        c = (jnp.ones((v.shape[0],), jnp.float32) if self.weights is None
+             else jnp.asarray(self.weights, jnp.float32))
+        return wvs.from_vector(v, c)
+
+
+class QueryParams(NamedTuple):
+    """Per-slot execution parameters, padded to Q fixed slots."""
+
+    regions: regions.PackedRegions  # nested pytree, (Q, ...) leaves
+    beta: jax.Array  # f32 (Q,)
+    ell: jax.Array  # i32 (Q,)
+    eps: jax.Array  # f32 (Q,)
+    active: jax.Array  # bool (Q,) — False = masked no-op padding slot
+
+    @classmethod
+    def empty(cls, q: int, k_max: int, d: int,
+              defaults: lss.LSSConfig) -> "QueryParams":
+        return cls(
+            regions=regions.PackedRegions.empty(q, k_max, d),
+            beta=jnp.full((q,), defaults.beta, jnp.float32),
+            ell=jnp.full((q,), defaults.ell, jnp.int32),
+            eps=jnp.full((q,), defaults.eps, jnp.float32),
+            active=jnp.zeros((q,), bool),
+        )
+
+    def set_slot(self, slot: int, spec: QuerySpec,
+                 defaults: lss.LSSConfig) -> "QueryParams":
+        """Admit ``spec`` into ``slot`` (host-side, between dispatches)."""
+        pick = lambda v, dv: dv if v is None else v
+        return QueryParams(
+            regions=self.regions.set(slot, spec.region),
+            beta=self.beta.at[slot].set(pick(spec.beta, defaults.beta)),
+            ell=self.ell.at[slot].set(pick(spec.ell, defaults.ell)),
+            eps=self.eps.at[slot].set(pick(spec.eps, defaults.eps)),
+            active=self.active.at[slot].set(True),
+        )
+
+    def clear_slot(self, slot: int, defaults: lss.LSSConfig) -> "QueryParams":
+        """Retire ``slot`` back to a masked padding query."""
+        return QueryParams(
+            regions=self.regions.clear(slot),
+            beta=self.beta.at[slot].set(defaults.beta),
+            ell=self.ell.at[slot].set(defaults.ell),
+            eps=self.eps.at[slot].set(defaults.eps),
+            active=self.active.at[slot].set(False),
+        )
+
+
+def decide_fn(pr: regions.PackedRegions):
+    """Decision closure for ONE query's packed slices (traced under vmap)."""
+    return lambda v: regions.decide_packed(v, pr.kind, pr.centers, pr.cmask,
+                                           pr.w, pr.b)

@@ -1,0 +1,331 @@
+"""The service driver: Q query slots, one vmapped jit dispatch per K cycles.
+
+Execution model::
+
+    admit/retire/replace ----+                +--> telemetry (JSONL)
+    stream updates ----------+--> [boundary] -+
+                                   |   ^
+                                   v   |
+                        one jit dispatch: fori_loop of K cycles,
+                        vmap over Q query slots (core backend), or
+                        vmap over Q x ShardedLSS cycle (engine backend)
+
+All Q queries advance in lockstep through ONE compiled program; the query
+axis is a plain ``vmap`` over :func:`repro.core.lss.cycle_impl` (or
+:meth:`repro.engine.ShardedLSS._cycle_full`) with per-query traced region
+parameters, traced ``beta``/``ell``/``eps`` knobs, and the active-slot
+gate.  Masked (free) slots ride along as no-ops that send zero messages.
+State buffers are donated to the dispatch off-CPU, so the K-cycle block
+updates in place like the engine's run loop.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lss, topology, wvs
+
+from . import query as qmod
+from .ingest import StreamIngest, UpdateBatch
+from .registry import QueryRegistry
+from .telemetry import TelemetrySink
+
+__all__ = ["ServiceConfig", "Service"]
+
+
+class ServiceConfig(NamedTuple):
+    """Service shape + the static (structural) simulator knobs.
+
+    ``capacity``/``k_max``/``d`` fix every traced shape at construction;
+    tenant churn then never recompiles.  ``policy``/``drop_rate``/
+    ``max_corr_iters`` are structural LSS knobs shared by all slots;
+    ``beta``/``ell``/``eps`` are the *defaults* for the per-query
+    traceable knobs (each :class:`~repro.service.query.QuerySpec` may
+    override them per tenant).
+    """
+
+    capacity: int = 64  # Q query slots
+    k_max: int = 4  # max Voronoi centers per query
+    d: int = 2  # statistic dimensionality
+    cycles_per_dispatch: int = 8  # K cycles fused per jit dispatch
+    policy: str = "selective"
+    drop_rate: float = 0.0
+    max_corr_iters: int = 0
+    beta: float = 1e-3
+    ell: int = 1
+    eps: float = 1e-9
+    backend: str = "core"  # "core" | "engine"
+    engine_shards: int = 2  # engine backend: shard count
+    engine_method: str = "bfs"  # engine backend: partitioner
+
+
+class _CoreBackend:
+    """Query axis directly over :func:`lss.cycle_impl` on one device."""
+
+    def __init__(self, topo: topology.Topology, scfg: ServiceConfig):
+        self.topo = topo
+        self.ta = lss.TopoArrays.from_topology(topo)
+
+    def zero_inputs(self, n: int, d: int) -> wvs.WV:
+        return wvs.zero(d, batch=(n,))
+
+    def init_slot(self, inputs: wvs.WV, seed: int) -> lss.LSSState:
+        return lss.init_state(self.ta, inputs, seed=seed)
+
+    def cycle(self, st: lss.LSSState, cfg: lss.LSSConfig, decide, gate):
+        st, _ = lss.cycle_impl(st, self.ta, cfg, decide, gate=gate)
+        return st
+
+    def metrics(self, st: lss.LSSState, decide, eps):
+        return lss.metrics_impl(st, self.ta, decide, eps=eps)
+
+    def msgs_of(self, states) -> np.ndarray:
+        return np.asarray(states.msgs)  # (Q,)
+
+    def reset_msgs(self, states):
+        return states._replace(msgs=jnp.zeros_like(states.msgs))
+
+    def x_moments(self, states):
+        return states.x_m, states.x_c, None  # (Q, n, d), (Q, n), identity
+
+    def with_x(self, states, x_m, x_c):
+        return states._replace(x_m=x_m, x_c=x_c)
+
+    def snapshot(self, states, slot: int) -> lss.LSSState:
+        return jax.tree_util.tree_map(lambda a: a[slot], states)
+
+
+class _EngineBackend:
+    """Query axis composed with :class:`ShardedLSS`'s shard axis."""
+
+    def __init__(self, topo: topology.Topology, scfg: ServiceConfig):
+        from repro.engine import EngineConfig, ShardedLSS  # lazy: no cycle
+
+        self.topo = topo
+        base = lss.LSSConfig(beta=scfg.beta, ell=scfg.ell,
+                             drop_rate=scfg.drop_rate, policy=scfg.policy,
+                             max_corr_iters=scfg.max_corr_iters, eps=scfg.eps)
+        # The per-query decide overrides bypass the fused Voronoi kernels,
+        # so the engine is pinned to the reference formulas here.
+        self.eng = ShardedLSS(
+            topo, jnp.zeros((1, scfg.d), jnp.float32), base,
+            EngineConfig(num_shards=scfg.engine_shards,
+                         cycles_per_dispatch=scfg.cycles_per_dispatch,
+                         method=scfg.engine_method, use_kernels=False))
+
+    def zero_inputs(self, n: int, d: int) -> wvs.WV:
+        return wvs.zero(d, batch=(n,))
+
+    def init_slot(self, inputs: wvs.WV, seed: int):
+        return self.eng.init(inputs, seed=seed)
+
+    def cycle(self, st, cfg: lss.LSSConfig, decide, gate):
+        return self.eng._cycle_full(st, decide=decide, cfg=cfg, gate=gate)
+
+    def metrics(self, st, decide, eps):
+        return self.eng._metrics_impl(st, eps=eps, decide=decide)
+
+    def msgs_of(self, states) -> np.ndarray:
+        return np.asarray(states.msgs).sum(axis=-1)  # (Q, S) -> (Q,)
+
+    def reset_msgs(self, states):
+        return states._replace(msgs=jnp.zeros_like(states.msgs))
+
+    def x_moments(self, states):
+        q = states.x_m.shape[0]
+        x_m = states.x_m.reshape(q, -1, states.x_m.shape[-1])
+        x_c = states.x_c.reshape(q, -1)
+        return x_m, x_c, self.eng._pos  # permuted rows
+
+    def with_x(self, states, x_m, x_c):
+        return states._replace(x_m=x_m.reshape(states.x_m.shape),
+                               x_c=x_c.reshape(states.x_c.shape))
+
+    def snapshot(self, states, slot: int) -> lss.LSSState:
+        one = jax.tree_util.tree_map(lambda a: a[slot], states)
+        return self.eng.to_lss_state(one)
+
+
+class Service:
+    """Long-running multi-tenant monitor over one network graph.
+
+    Args:
+      topo: the shared :class:`~repro.core.topology.Topology`.
+      scfg: :class:`ServiceConfig` (slot capacity, dispatch fusion, knobs).
+      telemetry: optional :class:`TelemetrySink` (default: in-memory only).
+    """
+
+    def __init__(self, topo: topology.Topology,
+                 scfg: ServiceConfig = ServiceConfig(),
+                 telemetry: Optional[TelemetrySink] = None):
+        self.topo = topo
+        self.scfg = scfg
+        self.base_cfg = lss.LSSConfig(
+            beta=scfg.beta, ell=scfg.ell, drop_rate=scfg.drop_rate,
+            policy=scfg.policy, max_corr_iters=scfg.max_corr_iters,
+            eps=scfg.eps)
+        if scfg.backend == "core":
+            self.backend = _CoreBackend(topo, scfg)
+        elif scfg.backend == "engine":
+            self.backend = _EngineBackend(topo, scfg)
+        else:
+            raise ValueError(f"unknown backend {scfg.backend!r}")
+        self.registry = QueryRegistry(scfg.capacity, scfg.k_max, scfg.d,
+                                      self.base_cfg)
+        self.ingest = StreamIngest()
+        self.telemetry = telemetry if telemetry is not None else TelemetrySink()
+        self.dispatches = 0
+        self.cycles = 0
+        self._edges = max(topo.num_edges, 1)
+        self._total_msgs = {}  # query_id -> host-side exact total
+
+        q = scfg.capacity
+        blank = self.backend.init_slot(
+            self.backend.zero_inputs(topo.n, scfg.d), seed=0)
+        self.states = jax.tree_util.tree_map(
+            lambda a: jnp.stack([a] * q), blank)
+        # Donation reuses the Q-slot state buffers across dispatches; CPU
+        # does not support it and warns, so gate on backend (as the engine
+        # does for its run loop).
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._step = jax.jit(self._step_impl, static_argnames=("k",),
+                             donate_argnums=donate)
+        self._observe = jax.jit(self._observe_impl)
+
+    # -- the batched step --------------------------------------------------
+    def _one_cycle(self, st, qp: qmod.QueryParams):
+        cfg = self.base_cfg._replace(beta=qp.beta, ell=qp.ell, eps=qp.eps)
+        return self.backend.cycle(st, cfg, qmod.decide_fn(qp.regions),
+                                  qp.active)
+
+    def _step_impl(self, states, params: qmod.QueryParams, k: int):
+        def body(_, sts):
+            return jax.vmap(self._one_cycle)(sts, params)
+        return jax.lax.fori_loop(0, k, body, states)
+
+    def _observe_impl(self, states, params: qmod.QueryParams):
+        def one(st, qp):
+            acc, quiescent, _, want = self.backend.metrics(
+                st, qmod.decide_fn(qp.regions), qp.eps)
+            return acc, quiescent, want
+        return jax.vmap(one)(states, params)
+
+    # -- admission (between dispatches) ------------------------------------
+    def admit(self, spec: qmod.QuerySpec,
+              query_id: Optional[str] = None) -> str:
+        """Admit a tenant's query into a free slot (no recompilation)."""
+        if spec.inputs.shape[0] != self.topo.n:
+            raise ValueError(
+                f"query inputs cover {spec.inputs.shape[0]} peers, "
+                f"graph has {self.topo.n}")
+        qid = self.registry.admit(spec, query_id)
+        self._reset_slot(self.registry.slot_of(qid), spec)
+        self._total_msgs[qid] = 0
+        return qid
+
+    def retire(self, query_id: str) -> None:
+        """Retire a query; its slot becomes a masked no-op padding slot."""
+        slot = self.registry.retire(query_id)
+        self._reset_slot(slot, None)
+
+    def replace(self, query_id: str, spec: qmod.QuerySpec) -> None:
+        """Swap a tenant's predicate/inputs in place (fresh slot state)."""
+        self.registry.replace(query_id, spec)
+        self._reset_slot(self.registry.slot_of(query_id), spec)
+
+    def _reset_slot(self, slot: int, spec: Optional[qmod.QuerySpec]):
+        if spec is None:
+            fresh = self.backend.init_slot(
+                self.backend.zero_inputs(self.topo.n, self.scfg.d), seed=0)
+        else:
+            fresh = self.backend.init_slot(spec.input_wv(), seed=spec.seed)
+        self.states = jax.tree_util.tree_map(
+            lambda all_q, one: all_q.at[slot].set(one.astype(all_q.dtype)),
+            self.states, fresh)
+
+    # -- streaming ingest --------------------------------------------------
+    def push_updates(self, who, values, weights=None, mode: str = "set",
+                     query_ids=None) -> UpdateBatch:
+        """Queue a per-peer update batch (applied at the next boundary)."""
+        return self.ingest.push(who, values, weights, mode, query_ids)
+
+    def _apply_ingest(self) -> int:
+        batches = self.ingest.drain()
+        if not batches:
+            return 0
+        x_m, x_c, pos = self.backend.x_moments(self.states)
+        active = {qid: s for qid, s, _ in self.registry.active_items()}
+        for b in batches:
+            if b.query_ids is None:
+                slots = np.fromiter(active.values(), np.int32,
+                                    count=len(active))
+            else:
+                # Ids retired while the batch sat in the queue are dropped
+                # (their slot may already belong to a new tenant).
+                slots = np.array([active[q] for q in b.query_ids
+                                  if q in active], np.int32)
+            x_m, x_c = self.ingest.apply(x_m, x_c, b, slots, pos=pos)
+        self.states = self.backend.with_x(self.states, x_m, x_c)
+        return len(batches)
+
+    # -- the serving loop --------------------------------------------------
+    def tick(self, cycles: Optional[int] = None) -> list:
+        """One dispatch: apply queued updates, run K cycles over all Q
+        slots in one jit call, observe, emit per-tenant telemetry.
+
+        Returns this dispatch's telemetry records (active slots only).
+        """
+        k = cycles if cycles is not None else self.scfg.cycles_per_dispatch
+        self._apply_ingest()
+        params = self.registry.params
+        self.states = self._step(self.states, params, k=k)
+        self.dispatches += 1
+        self.cycles += k
+        return self._emit_telemetry(params)
+
+    def serve(self, dispatches: int) -> list:
+        """Run ``dispatches`` ticks; returns the final tick's records."""
+        records = []
+        for _ in range(dispatches):
+            records = self.tick()
+        return records
+
+    # -- observation -------------------------------------------------------
+    def _emit_telemetry(self, params: qmod.QueryParams) -> list:
+        acc, quiescent, want = self._observe(self.states, params)
+        msgs = self.backend.msgs_of(self.states)  # per-slot window counts
+        self.states = self.backend.reset_msgs(self.states)
+        acc, quiescent, want = (np.asarray(acc), np.asarray(quiescent),
+                                np.asarray(want))
+        records = []
+        for qid, slot, _spec in self.registry.active_items():
+            sent = int(msgs[slot])
+            self._total_msgs[qid] = self._total_msgs.get(qid, 0) + sent
+            rec = {
+                "dispatch": self.dispatches,
+                "t": self.cycles,
+                "query": qid,
+                "slot": slot,
+                "accuracy": float(acc[slot]),
+                "quiescent": bool(quiescent[slot]),
+                "region": int(want[slot]),
+                "msgs": sent,
+                "msgs_per_link": sent / self._edges,
+            }
+            self.telemetry.emit(rec)
+            records.append(rec)
+        return records
+
+    def total_msgs(self, query_id: str) -> int:
+        """Exact cumulative sends by this query (host-side accumulation)."""
+        return self._total_msgs[query_id]
+
+    def snapshot(self, query_id: str) -> lss.LSSState:
+        """This query's full simulator state (original peer order) — the
+        parity-test / debugging view."""
+        return self.backend.snapshot(self.states,
+                                     self.registry.slot_of(query_id))

@@ -1,0 +1,65 @@
+"""Per-tenant telemetry: one record per (dispatch, active query), JSONL.
+
+The sink is deliberately dumb — the :class:`~repro.service.service.
+Service` computes the numbers (batched, one device round-trip per
+dispatch) and hands plain dicts here; the sink timestamps nothing and
+never touches device arrays, so it can be swapped for a real exporter.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import IO, List, Optional, Union
+
+__all__ = ["TelemetrySink"]
+
+
+class TelemetrySink:
+    """Collects per-query records; optionally streams them as JSONL.
+
+    Record schema (written by the service per dispatch per active query):
+
+    ``dispatch``      int   dispatch ordinal
+    ``t``             int   global cycle count after the dispatch
+    ``query``         str   tenant's query id
+    ``slot``          int   slot index
+    ``accuracy``      float fraction of live peers deciding correctly
+    ``quiescent``     bool  no pending messages / violations for this query
+    ``region``        int   ground-truth region of the global average
+    ``msgs``          int   sends by this query in this dispatch window
+    ``msgs_per_link`` float ditto, normalized per link
+    """
+
+    def __init__(self, path: Optional[Union[str, IO[str]]] = None,
+                 keep: bool = True):
+        self.records: List[dict] = []
+        self._keep = keep
+        self._own_file = isinstance(path, str)
+        self._fh: Optional[IO[str]] = (
+            open(path, "a") if self._own_file else path)
+
+    def emit(self, record: dict) -> None:
+        if self._keep:
+            self.records.append(record)
+        if self._fh is not None:
+            self._fh.write(json.dumps(record) + "\n")
+
+    def flush(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self) -> None:
+        self.flush()
+        if self._own_file and self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- convenience for tests / examples ---------------------------------
+    def for_query(self, query_id: str) -> List[dict]:
+        return [r for r in self.records if r.get("query") == query_id]
+
+    def last_by_query(self) -> dict:
+        out = {}
+        for r in self.records:
+            out[r["query"]] = r
+        return out

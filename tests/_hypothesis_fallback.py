@@ -1,0 +1,96 @@
+"""Minimal seeded stand-in for ``hypothesis`` when it is not installed.
+
+CI installs real hypothesis (requirements-dev.txt); hermetic containers
+without it previously *skipped* the property tests entirely.  This shim
+implements just the surface the two property-test modules use —
+``given`` / ``settings`` / ``strategies.{floats,integers,lists,tuples}``
+with ``.map`` — driving each property with deterministic pseudo-random
+examples (seeded per test name, endpoints first), so the algebraic laws
+are exercised everywhere.  It does no shrinking and no example database;
+with real hypothesis available it is never imported.
+"""
+
+from __future__ import annotations
+
+import random
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    """A generator of example values: ``draw(rng) -> value``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+class strategies:  # mirrors `hypothesis.strategies` as a namespace
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+               allow_infinity=False, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # Bias toward the endpoints — where float laws usually break.
+            r = rng.random()
+            if r < 0.05:
+                return lo
+            if r < 0.10:
+                return hi
+            return rng.uniform(lo, hi)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value=0, max_value=100, **_kw):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        return _Strategy(lambda rng: [
+            elements._draw(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def tuples(*elems):
+        return _Strategy(lambda rng: tuple(e._draw(rng) for e in elems))
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # No functools.wraps: copying fn's signature would make pytest
+        # treat the example parameters as fixtures.  The wrapper is
+        # deliberately zero-argument.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                example = tuple(s._draw(rng) for s in strats)
+                try:
+                    fn(*example)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback shim): "
+                        f"{example!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+
+    return deco

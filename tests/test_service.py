@@ -1,0 +1,387 @@
+"""Multi-tenant monitor service: parity, masked slots, admission, ingest.
+
+The service's contract mirrors the engine's: a query slot must reproduce
+the single-query simulator *exactly* (same messages on the same cycles,
+bitwise-identical decisions), with Q slots advancing through one vmapped
+dispatch; padding slots must be true no-ops (zero effective messages).
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lss, regions, sim, stopping, topology, wvs
+from repro.engine.sweep import sweep_configs, sweep_static
+from repro.service import (QuerySpec, Service, ServiceConfig, StreamIngest,
+                           TelemetrySink)
+
+
+def _problem(topo, seed=0):
+    centers, sample, _, _ = sim.make_problem(
+        sim.ProblemSpec(n=topo.n, seed=seed))
+    rng = np.random.default_rng(seed + 1)
+    return centers, sample(rng, topo.n)
+
+
+def _decisions(state: lss.LSSState, topo_arrays, decide):
+    """Per-peer region decisions f(vec(S_i)) — the service's output."""
+    live = topo_arrays.mask & state.alive[:, None] & \
+        state.alive[topo_arrays.nbr]
+    s = stopping.status(state.x_m, state.x_c, state.out_m, state.out_c,
+                        state.in_m, state.in_c, live)
+    return np.asarray(decide(wvs.vec(s, 1e-9)))
+
+
+def _assert_state_close(a: lss.LSSState, b: lss.LSSState, atol=1e-6):
+    np.testing.assert_allclose(a.out_m, b.out_m, atol=atol)
+    np.testing.assert_allclose(a.out_c, b.out_c, atol=atol)
+    np.testing.assert_allclose(a.in_m, b.in_m, atol=atol)
+    np.testing.assert_allclose(a.in_c, b.in_c, atol=atol)
+    np.testing.assert_allclose(a.x_m, b.x_m, atol=atol)
+    assert np.array_equal(np.asarray(a.pending), np.asarray(b.pending))
+    assert np.array_equal(np.asarray(a.last_send), np.asarray(b.last_send))
+    assert np.array_equal(np.asarray(a.alive), np.asarray(b.alive))
+
+
+# ---------------------------------------------------------------------------
+# packed region families
+# ---------------------------------------------------------------------------
+
+
+def test_packed_regions_decide_bitwise():
+    """Padded Voronoi slots decide bitwise-identically to decide_voronoi;
+    halfspace slots match HalfspaceRegions.decide."""
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(500, 2)).astype(np.float32))
+    fams = [
+        regions.VoronoiRegions(jnp.asarray(
+            rng.normal(size=(k, 2)).astype(np.float32)))
+        for k in (2, 3, 4)
+    ] + [regions.HalfspaceRegions(w=jnp.asarray([1.0, -0.5]),
+                                  b=jnp.asarray(0.25))]
+    packed = regions.PackedRegions.pack(fams)
+    assert packed.k_max == 4 and packed.q == 4
+    for i, fam in enumerate(fams):
+        got = packed.decide_slot(i)(v)
+        want = fam.decide(v)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), i
+    # clear() turns the slot into an everything-is-region-0 padding family.
+    cleared = packed.clear(1)
+    assert (np.asarray(cleared.decide_slot(1)(v)) == 0).all()
+
+
+def test_packed_regions_rejects_oversize_family():
+    packed = regions.PackedRegions.empty(2, 3, 2)
+    big = regions.VoronoiRegions(jnp.zeros((5, 2)))
+    with pytest.raises(ValueError):
+        packed.set(0, big)
+    with pytest.raises(ValueError):
+        packed.set(0, regions.HalfspaceRegions(w=jnp.zeros(3),
+                                               b=jnp.asarray(0.0)))
+
+
+# ---------------------------------------------------------------------------
+# parity: one active query reproduces the single-query simulator
+# ---------------------------------------------------------------------------
+
+
+def test_single_query_parity_with_run_static():
+    """The acceptance gate: a Q-slot service with ONE active query matches
+    the sim.run_static core loop cycle-for-cycle on full state arrays,
+    bitwise on decisions, exactly on message counts."""
+    topo = topology.grid(64)
+    centers, x = _problem(topo, seed=0)
+    ta = lss.TopoArrays.from_topology(topo)
+    cfg = lss.LSSConfig()
+    inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((topo.n,), jnp.float32))
+    core = lss.init_state(ta, inputs, seed=0)
+
+    svc = Service(topo, ServiceConfig(capacity=4, k_max=3, d=2,
+                                      cycles_per_dispatch=1))
+    qid = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                              inputs=x, seed=0))
+    decide = lambda v: regions.decide_voronoi(v, centers)
+
+    quiesced = False
+    for _ in range(40):
+        core, _ = lss.cycle(core, ta, centers, cfg)
+        (rec,) = svc.tick()
+        snap = svc.snapshot(qid)
+        _assert_state_close(snap, core)
+        assert np.array_equal(_decisions(snap, ta, decide),
+                              _decisions(core, ta, decide))  # bitwise
+        acc_c, q_c, _ = lss.metrics(core, ta, centers)
+        assert rec["accuracy"] == float(acc_c)
+        assert rec["quiescent"] == bool(q_c)
+        quiesced = bool(q_c)
+    assert quiesced
+    assert svc.total_msgs(qid) == int(core.msgs)
+
+
+def test_masked_slots_send_zero_messages():
+    """Padding queries are true no-ops: zero sends, no pending, untouched
+    message buffers — while an active slot works beside them."""
+    topo = topology.grid(36)
+    centers, x = _problem(topo, seed=3)
+    svc = Service(topo, ServiceConfig(capacity=5, k_max=3, d=2,
+                                      cycles_per_dispatch=4))
+    svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                        inputs=x, seed=0))
+    for _ in range(5):
+        svc.tick()
+        # msgs counters drain every tick; padding slots must never count.
+        assert all(int(m) == 0 for m in svc.backend.msgs_of(svc.states)[1:])
+    states = svc.states
+    assert not bool(jnp.any(states.pending[1:]))
+    assert float(jnp.abs(states.out_m[1:]).max()) == 0.0
+    assert float(jnp.abs(states.in_m[1:]).max()) == 0.0
+    # The active slot did send.
+    assert svc.total_msgs("q000000") > 0
+
+
+def test_batched_queries_match_sequential_runs():
+    """Q heterogeneous tenants in one dispatch == Q sequential single-query
+    runs (per-query state allclose, decisions bitwise, messages exact)."""
+    topo = topology.grid(49)
+    q = 6
+    svc = Service(topo, ServiceConfig(capacity=q, k_max=4, d=2,
+                                      cycles_per_dispatch=7))
+    ta = lss.TopoArrays.from_topology(topo)
+    tenants = []
+    rng = np.random.default_rng(9)
+    for i in range(q):
+        centers, x = _problem(topo, seed=10 + i)
+        if i % 2 == 0:
+            fam = regions.VoronoiRegions(centers)
+            decide = lambda v, c=centers: regions.decide_voronoi(v, c)
+        else:
+            w = jnp.asarray(rng.normal(size=2).astype(np.float32))
+            fam = regions.HalfspaceRegions(w=w, b=jnp.float32(0.1))
+            decide = lambda v, f=fam: f.decide(v)
+        beta = 1e-3 if i % 3 else 2e-3
+        spec = QuerySpec(region=fam, inputs=x, seed=i, beta=beta,
+                         ell=1 + i % 2)
+        qid = svc.admit(spec)
+        tenants.append((qid, spec, decide, centers))
+
+    svc.serve(4)  # 28 cycles, 4 dispatches
+
+    for qid, spec, decide, centers in tenants:
+        cfg = lss.LSSConfig(beta=spec.beta, ell=spec.ell)
+        st = lss.init_state(ta, spec.input_wv(), seed=spec.seed)
+        for _ in range(28):
+            st, _ = lss.cycle(st, ta, centers, cfg, decide=decide)
+        snap = svc.snapshot(qid)
+        _assert_state_close(snap, st, atol=1e-5)
+        assert np.array_equal(_decisions(snap, ta, decide),
+                              _decisions(st, ta, decide)), qid
+        assert svc.total_msgs(qid) == int(st.msgs), qid
+
+
+def test_engine_backend_parity():
+    """backend='engine' composes the query axis with the shard axis and
+    still reproduces the core loop exactly."""
+    topo = topology.grid(36)
+    centers, x = _problem(topo, seed=5)
+    ta = lss.TopoArrays.from_topology(topo)
+    svc = Service(topo, ServiceConfig(capacity=3, k_max=3, d=2,
+                                      cycles_per_dispatch=5,
+                                      backend="engine", engine_shards=2))
+    qid = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                              inputs=x, seed=0))
+    inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((topo.n,), jnp.float32))
+    core = lss.init_state(ta, inputs, seed=0)
+    cfg = lss.LSSConfig()
+    for _ in range(20):
+        core, _ = lss.cycle(core, ta, centers, cfg)
+    svc.serve(4)
+    _assert_state_close(svc.snapshot(qid), core)
+    assert svc.total_msgs(qid) == int(core.msgs)
+
+
+# ---------------------------------------------------------------------------
+# admission lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_admission_lifecycle_and_no_recompile():
+    topo = topology.grid(25)
+    centers, x = _problem(topo, seed=1)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=2))
+    spec = QuerySpec(region=regions.VoronoiRegions(centers), inputs=x)
+    a = svc.admit(spec)
+    b = svc.admit(QuerySpec(region=regions.HalfspaceRegions(
+        w=jnp.asarray([1.0, 0.0]), b=jnp.asarray(0.0)), inputs=x))
+    with pytest.raises(RuntimeError):
+        svc.admit(spec)  # full
+    svc.tick()
+    compiles_after_warm = None
+    if hasattr(svc._step, "_cache_size"):
+        compiles_after_warm = svc._step._cache_size()
+
+    svc.retire(a)
+    assert svc.registry.num_active == 1
+    # Retired slot's state is wiped back to a quiescent padding slot.
+    slot_msgs = svc.backend.msgs_of(svc.states)
+    assert int(slot_msgs[svc.registry.slot_of(b)]) >= 0  # b's slot intact
+    c = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                            inputs=x, seed=4))
+    assert svc.registry.slot_of(c) == 0  # reused slot
+    svc.replace(b, QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=9))
+    assert svc.snapshot(b).t == 0  # replace resets the slot's timeline
+    svc.tick()
+    if compiles_after_warm is not None:
+        # Admission churn must not have recompiled the batched step.
+        assert svc._step._cache_size() == compiles_after_warm
+    # Unknown ids are rejected.
+    with pytest.raises(KeyError):
+        svc.retire("nope")
+
+
+def test_admission_rejects_bad_shapes():
+    topo = topology.grid(25)
+    centers, x = _problem(topo, seed=1)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2))
+    with pytest.raises(ValueError):
+        svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                            inputs=x[:10]))  # wrong peer count
+    with pytest.raises(ValueError):
+        svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                            inputs=np.zeros((topo.n, 5), np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# streaming ingest
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_set_and_delta_modes():
+    topo = topology.grid(25)
+    centers, x = _problem(topo, seed=2)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=1))
+    qa = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=0))
+    svc.push_updates([0, 3], [[2.0, 2.0], [4.0, 4.0]], mode="set")
+    svc.tick()
+    snap = svc.snapshot(qa)
+    np.testing.assert_allclose(np.asarray(snap.x_m)[[0, 3]],
+                               [[2, 2], [4, 4]])
+    np.testing.assert_allclose(np.asarray(snap.x_c)[[0, 3]], [1, 1])
+    svc.push_updates([0], [[1.0, -1.0]], mode="delta")
+    svc.tick()
+    snap = svc.snapshot(qa)
+    np.testing.assert_allclose(np.asarray(snap.x_m)[0], [3, 1])
+
+
+def test_ingest_targets_specific_queries():
+    topo = topology.grid(25)
+    centers, x = _problem(topo, seed=2)
+    svc = Service(topo, ServiceConfig(capacity=3, k_max=3, d=2,
+                                      cycles_per_dispatch=1))
+    qa = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=0))
+    qb = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=1))
+    svc.push_updates([7], [[5.0, 5.0]], mode="set", query_ids=[qb])
+    svc.tick()
+    np.testing.assert_allclose(np.asarray(svc.snapshot(qa).x_m)[7], x[7])
+    np.testing.assert_allclose(np.asarray(svc.snapshot(qb).x_m)[7], [5, 5])
+
+
+def test_ingest_skips_queries_retired_while_queued():
+    """A batch targeting a query retired before the next dispatch is
+    dropped (not crashed on, and never applied to the slot's new tenant);
+    later queued batches still apply."""
+    topo = topology.grid(25)
+    centers, x = _problem(topo, seed=2)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=1))
+    qa = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=0))
+    qb = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=1))
+    svc.push_updates([4], [[7.0, 7.0]], mode="set", query_ids=[qb])
+    svc.push_updates([5], [[8.0, 8.0]], mode="set", query_ids=[qa])
+    svc.retire(qb)
+    qc = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=2))  # reuses qb's slot
+    svc.tick()
+    np.testing.assert_allclose(np.asarray(svc.snapshot(qa).x_m)[5], [8, 8])
+    np.testing.assert_allclose(np.asarray(svc.snapshot(qc).x_m)[4], x[4])
+
+
+def test_ingest_empty_query_ids_targets_nothing():
+    """query_ids=[] means 'no tenants', not 'all tenants'."""
+    topo = topology.grid(25)
+    centers, x = _problem(topo, seed=2)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=1))
+    qa = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=0))
+    svc.push_updates([3], [[9.0, 9.0]], mode="set", query_ids=[])
+    svc.tick()
+    np.testing.assert_allclose(np.asarray(svc.snapshot(qa).x_m)[3], x[3])
+
+
+def test_ingest_queue_bounds_and_validation():
+    ing = StreamIngest(max_pending=2)
+    ing.push([0], [[1.0, 1.0]])
+    ing.push([1], [[1.0, 1.0]])
+    with pytest.raises(RuntimeError):
+        ing.push([2], [[1.0, 1.0]])
+    assert len(ing.drain()) == 2 and len(ing) == 0
+    with pytest.raises(ValueError):
+        ing.push([0], [[1.0, 1.0]], mode="merge")
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_jsonl_roundtrip(tmp_path):
+    topo = topology.grid(25)
+    centers, x = _problem(topo, seed=4)
+    path = tmp_path / "telemetry.jsonl"
+    sink = TelemetrySink(path=str(path))
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=3),
+                  telemetry=sink)
+    qa = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                             inputs=x, seed=0))
+    svc.serve(3)
+    sink.close()
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(lines) == 3  # one active query x three dispatches
+    for i, rec in enumerate(lines):
+        assert rec["query"] == qa and rec["dispatch"] == i + 1
+        assert rec["t"] == (i + 1) * 3
+        assert 0.0 <= rec["accuracy"] <= 1.0
+        assert rec["msgs"] >= 0 and "msgs_per_link" in rec
+    assert sink.for_query(qa)[-1]["t"] == 9
+
+
+# ---------------------------------------------------------------------------
+# knob-batched config sweeps (the query axis applied to experiments)
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_configs_knob_batch_matches_sequential():
+    topo = topology.grid(36)
+    spec = sim.ProblemSpec(n=36, seed=3)
+    seeds = [0, 1]
+    cfgs = [lss.LSSConfig(), lss.LSSConfig(beta=4e-3, ell=2),
+            lss.LSSConfig(policy="uniform")]
+    res = sweep_configs(topo, spec, seeds, cfgs, cycles=40)
+    assert set(res) == {"cfg0", "cfg1", "cfg2"}
+    for i, cfg in enumerate(cfgs):
+        ref = sweep_static(topo, spec, seeds, cfg, cycles=40)
+        got = res[f"cfg{i}"]
+        np.testing.assert_allclose(got["accuracy"], ref["accuracy"])
+        assert np.array_equal(got["quiescent"], ref["quiescent"]), i
+        assert np.array_equal(got["msgs"], ref["msgs"]), i

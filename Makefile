@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: verify test bench bench-full bench-smoke dev-deps
+.PHONY: verify test bench bench-full bench-smoke bench-check dev-deps
 
 # The tier-1 gate (ROADMAP.md): full suite, fail fast.
 verify:
@@ -23,3 +23,8 @@ bench-full:
 
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --smoke
+
+# Regression gate: fresh BENCH_engine/BENCH_service medians vs the
+# committed baselines (default mode, wall tolerance 3x, msgs/link 1%).
+bench-check:
+	PYTHONPATH=src $(PY) -m benchmarks.run --check

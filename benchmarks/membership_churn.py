@@ -1,0 +1,178 @@
+"""Dynamic membership under sustained churn: repair cost + serving cost.
+
+Two questions, two row families:
+
+* ``repair/*`` — how much does the *incremental* halo repair
+  (:func:`repro.engine.partition.repair_sharded_topo`) save over a full
+  ``make_partition`` + ``shard_topology`` rebuild per membership event?
+  ``derived`` reports the measured speedup (events are single join+link /
+  leave / rewire deltas, the steady-state shape of overlay churn).
+* ``serve/*`` — what does a sustained join/leave/rewire rate cost a
+  DynTopology-backed :class:`repro.service.Service` end to end?  Each
+  dispatch applies R membership events at the boundary and runs K cycles;
+  rows report wall time per cycle, msgs/link per cycle, and peers/s,
+  versus the churn-free baseline of the same service.
+
+Event application is host-side by construction (tables are data, not
+compiled constants), so the serve rows also implicitly assert the
+zero-recompile property: a recompile per event would show up as a
+100-1000x wall-time blowup.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import sim, topology
+from repro.engine import make_partition, repair_sharded_topo, shard_topology
+from repro.service import QuerySpec, Service, ServiceConfig
+
+from . import common
+from .common import Row
+
+
+def _dyn_grid(n: int, spare_frac: float = 0.1):
+    side = int(round(n ** 0.5))
+    base = topology.grid(side * side)
+    n_cap = base.n + max(4, int(base.n * spare_frac))
+    return topology.DynTopology.from_topology(base, n_cap=n_cap,
+                                              deg_cap=base.max_deg + 2)
+
+
+def _churn_events(dyn, rng, count):
+    """Apply ``count`` random in-capacity join/leave/rewire events."""
+    applied = 0
+    while applied < count:
+        op = rng.integers(3)
+        try:
+            if op == 0:
+                if dyn.num_present < dyn.n_cap:
+                    p = dyn.add_peer()
+                    cand = np.flatnonzero(dyn.present)
+                    cand = cand[cand != p]
+                    dyn.add_edge(int(p), int(rng.choice(cand)))
+                else:
+                    dyn.remove_peer(int(rng.choice(
+                        np.flatnonzero(dyn.present))))
+            elif op == 1:
+                dyn.remove_peer(int(rng.choice(np.flatnonzero(dyn.present))))
+            else:
+                edges = dyn.edge_list()
+                if not edges:
+                    continue
+                dyn.remove_edge(*edges[rng.integers(len(edges))])
+                cand = np.flatnonzero(dyn.present)
+                i, j = rng.choice(cand, size=2, replace=False)
+                if not dyn.has_edge(int(i), int(j)):
+                    dyn.add_edge(int(i), int(j))
+        except ValueError:
+            continue
+        applied += 1
+    return applied
+
+
+def _bench_repair(n: int, shards: int, events: int):
+    rng = np.random.default_rng(0)
+    dyn = _dyn_grid(n)
+    part = make_partition(dyn, shards)
+    st = shard_topology(dyn, part)
+    st = shard_topology(dyn, part, halo_width=st.halo_width * 2)
+
+    ver = dyn.version
+    t_inc = 0.0
+    t_full = 0.0
+    for _ in range(events):
+        _churn_events(dyn, rng, 1)
+        rows = dyn.changed_rows_since(ver)
+        ver = dyn.version
+        t0 = time.perf_counter()
+        st = repair_sharded_topo(st, dyn, rows)
+        t_inc += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        part2 = make_partition(dyn, shards)
+        shard_topology(dyn, part2)
+        t_full += time.perf_counter() - t0
+    return t_inc / events * 1e6, t_full / events * 1e6
+
+
+def _bench_serve(n: int, q: int, dispatches: int, rate: int, k: int = 8):
+    """Wall/msgs for a Q-tenant service under `rate` events/dispatch."""
+    dyn = _dyn_grid(n)
+    spec = sim.ProblemSpec(n=dyn.n, seed=0)
+    centers, sample, _, _ = sim.make_problem(spec)
+    rng_x = np.random.default_rng(1)
+    svc = Service(dyn, ServiceConfig(capacity=q, k_max=3, d=2,
+                                     cycles_per_dispatch=k))
+    from repro.core import regions
+    import jax.numpy as jnp
+    for i in range(q):
+        svc.admit(QuerySpec(region=regions.VoronoiRegions(
+            jnp.asarray(centers)), inputs=sample(rng_x, dyn.n), seed=i))
+    svc.tick()  # warm the compile before timing
+
+    rng = np.random.default_rng(2)
+    msgs = 0
+    t0 = time.perf_counter()
+    for _ in range(dispatches):
+        for _ in range(rate):
+            op = rng.integers(3)
+            try:
+                if op == 0 and dyn.num_present < dyn.n_cap:
+                    free = int(np.flatnonzero(~dyn.present)[0])
+                    p = svc.join_peer(free)
+                    svc.link_peers(p, int(rng.choice(
+                        np.flatnonzero(dyn.present))))
+                elif op == 1:
+                    svc.leave_peer(int(rng.choice(
+                        np.flatnonzero(dyn.present))))
+                else:
+                    edges = dyn.edge_list()
+                    if edges:
+                        svc.unlink_peers(*edges[rng.integers(len(edges))])
+            except (ValueError, RuntimeError):
+                continue
+        records = svc.tick()
+        msgs += sum(r["msgs"] for r in records)
+    dt = time.perf_counter() - t0
+    cycles = dispatches * k
+    return {
+        "us_per_cycle": dt / cycles * 1e6,
+        "msgs_per_link_per_cycle": msgs / max(dyn.num_edges, 1) / cycles
+        / max(q, 1),
+        "peers_per_s": dyn.num_present * q * cycles / dt,
+        "topo_version": dyn.version,
+    }
+
+
+def run(full: bool = False):
+    rows = []
+    # -- incremental repair vs full repartition ---------------------------
+    sizes = [2_500, 10_000] + ([102_400] if full else [])
+    for n in sizes:
+        n = common.clamp_n(n)
+        events = 10 if common.SMOKE else 30
+        inc_us, full_us = _bench_repair(n, shards=8, events=events)
+        rows.append(Row(
+            f"membership/repair/n{n}", inc_us,
+            f"incremental={inc_us:.0f}us full={full_us:.0f}us "
+            f"speedup={full_us / max(inc_us, 1e-9):.1f}x",
+            extra={"n": n, "events": events, "inc_us": inc_us,
+                   "full_us": full_us,
+                   "speedup": full_us / max(inc_us, 1e-9)}))
+        if len({r.name for r in rows}) != len(rows):
+            rows.pop()  # clamped sizes collapse; measure each n once
+
+    # -- sustained churn through the service ------------------------------
+    n = common.clamp_n(2_500)
+    q = 4 if common.SMOKE else 16
+    dispatches = 4 if common.SMOKE else 12
+    for rate in (0, 2, 8):
+        res = _bench_serve(n, q, dispatches, rate)
+        rows.append(Row(
+            f"membership/serve/n{n}/rate{rate}", res["us_per_cycle"],
+            f"msgs/link/cyc={res['msgs_per_link_per_cycle']:.4f} "
+            f"peers/s={res['peers_per_s']:.0f}",
+            extra={"n": n, "q": q, "rate": rate, **res}))
+    return rows

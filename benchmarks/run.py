@@ -9,6 +9,16 @@ additionally write ``BENCH_service.json`` / ``BENCH_engine.json`` next to
 the working directory (``--json-dir`` to relocate, ``--no-json`` to
 skip) with per-row extras (median wall-time, msgs/link, peers/s) so the
 perf trajectory is diffable across PRs.
+
+``--check`` turns the committed baselines into a regression gate: it runs
+only the JSON suites, compares the fresh summary medians against the
+``BENCH_*.json`` files in ``--json-dir`` (never overwriting them), and
+exits non-zero on regression.  Wall-clock medians tolerate a
+``--check-tolerance`` factor (default 3x — CI hosts vary); msgs/link is
+deterministic for a fixed mode and compares at 1%, so a *semantic*
+regression (the algorithm sending more messages) fails even when timing
+noise would hide it.  Baselines must have been recorded in the same mode
+(``--smoke``/default/``--full``) as the checking run.
 """
 
 from __future__ import annotations
@@ -34,6 +44,37 @@ def _summary(rows) -> dict:
     }
 
 
+def _check_summary(suite: str, fresh: dict, baseline: dict,
+                   tol: float) -> list:
+    """Compare fresh vs baseline payloads; returns regression messages."""
+    if baseline["mode"] != fresh["mode"]:
+        return [f"{suite}: baseline mode {baseline['mode']!r} != fresh "
+                f"mode {fresh['mode']!r} — regenerate the baseline with "
+                "the same flags"]
+    errors = []
+    bs, fs = baseline["summary"], fresh["summary"]
+    checks = (
+        ("median_us_per_call", "wall"),
+        ("median_peers_per_s", "rate"),
+        ("median_msgs_per_link", "exact"),
+    )
+    for key, kind in checks:
+        b, f = bs.get(key), fs.get(key)
+        if b is None or f is None:
+            continue
+        if kind == "wall" and f > b * tol:
+            errors.append(f"{suite}.{key}: {f:.1f} > {tol:.1f}x baseline "
+                          f"{b:.1f}")
+        elif kind == "rate" and f < b / tol:
+            errors.append(f"{suite}.{key}: {f:.1f} < baseline {b:.1f} / "
+                          f"{tol:.1f}")
+        elif kind == "exact" and abs(f - b) > 0.01 * max(abs(b), 1e-12):
+            errors.append(f"{suite}.{key}: {f!r} differs from baseline "
+                          f"{b!r} by >1% (deterministic metric — semantic "
+                          "change?)")
+    return errors
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -42,6 +83,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json-dir", default=".")
     ap.add_argument("--no-json", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: compare the JSON suites against "
+                         "the committed BENCH_*.json baselines and exit "
+                         "non-zero on regression (baselines not rewritten)")
+    ap.add_argument("--check-tolerance", type=float, default=3.0,
+                    help="wall-clock/throughput regression factor tolerated "
+                         "by --check (msgs/link always compares at 1%%)")
     args = ap.parse_args(argv)
 
     from . import common
@@ -52,7 +100,7 @@ def main(argv=None) -> None:
     from . import (engine_scaleup, fig2_scaleup, fig3_connectivity,
                    fig4_message_loss, fig5_difficulty, fig6_dynamic_data,
                    fig7_loss_dynamic, fig8_churn, figD_ineffective,
-                   kernel_bench, service_throughput)
+                   kernel_bench, membership_churn, service_throughput)
 
     suites = {
         "fig2": fig2_scaleup, "fig3": fig3_connectivity,
@@ -60,8 +108,12 @@ def main(argv=None) -> None:
         "fig6": fig6_dynamic_data, "fig7": fig7_loss_dynamic,
         "fig8": fig8_churn, "figD": figD_ineffective,
         "kernel": kernel_bench, "engine": engine_scaleup,
-        "service": service_throughput,
+        "service": service_throughput, "membership": membership_churn,
     }
+    if args.check:
+        suites = {k: v for k, v in suites.items() if k in JSON_SUITES}
+    mode = "smoke" if args.smoke else "full" if args.full else "default"
+    regressions = []
     print("name,us_per_call,derived")
     for name, mod in suites.items():
         if args.only and args.only not in name:
@@ -73,18 +125,37 @@ def main(argv=None) -> None:
             raise
         for row in rows:
             print(row.csv(), flush=True)
-        if name in JSON_SUITES and not args.no_json:
-            payload = {
-                "suite": name,
-                "mode": ("smoke" if args.smoke
-                         else "full" if args.full else "default"),
-                "rows": [r.json() for r in rows],
-                "summary": _summary(rows),
-            }
-            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+        if name not in JSON_SUITES:
+            continue
+        payload = {
+            "suite": name,
+            "mode": mode,
+            "rows": [r.json() for r in rows],
+            "summary": _summary(rows),
+        }
+        path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+        if args.check:
+            if not os.path.exists(path):
+                regressions.append(f"{name}: no baseline at {path}")
+                continue
+            with open(path) as fh:
+                baseline = json.load(fh)
+            regressions += _check_summary(name, payload, baseline,
+                                          args.check_tolerance)
+        elif not args.no_json:
+            os.makedirs(args.json_dir, exist_ok=True)
             with open(path, "w") as fh:
                 json.dump(payload, fh, indent=2, default=str)
             print(f"# wrote {path}", file=sys.stderr)
+
+    if args.check:
+        if regressions:
+            print("BENCH CHECK FAILED:", file=sys.stderr)
+            for msg in regressions:
+                print(f"  - {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("# bench check passed (tolerance "
+              f"{args.check_tolerance:.1f}x)", file=sys.stderr)
 
 
 if __name__ == "__main__":

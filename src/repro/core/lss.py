@@ -39,8 +39,27 @@ from . import correction, stopping, topology, wvs
 
 __all__ = [
     "LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle",
-    "cycle_impl", "metrics", "metrics_impl", "counter_dtype",
+    "cycle_impl", "clear_slots", "pad_bucket", "metrics", "metrics_impl",
+    "counter_dtype",
 ]
+
+
+def pad_bucket(*arrays):
+    """Pad same-length index arrays to the next power-of-two length by
+    repeating their last entry.
+
+    Membership boundary edits (:func:`clear_slots`, alive/x scatters) are
+    idempotent, so the repeats are harmless — and bucketing the lengths
+    means XLA compiles each scatter a bounded number of times instead of
+    once per distinct event-batch size, which otherwise dominates the
+    boundary cost under sustained churn.
+    """
+    arrays = tuple(np.asarray(a) for a in arrays)
+    m = max(1, int(arrays[0].shape[0]))
+    size = 1 << (m - 1).bit_length()
+    pad = lambda a: np.concatenate(
+        [a, np.repeat(a[-1:], size - a.shape[0], axis=0)], axis=0)
+    return tuple(pad(a) for a in arrays)
 
 
 def counter_dtype():
@@ -83,7 +102,12 @@ class TopoArrays(NamedTuple):
 
     @classmethod
     def from_topology(cls, t: topology.Topology) -> "TopoArrays":
-        return cls(jnp.asarray(t.nbr), jnp.asarray(t.mask), jnp.asarray(t.rev))
+        # jnp.array (forced copy), NOT jnp.asarray: a DynTopology mutates
+        # its numpy buffers in place, and CPU jax may zero-copy-alias
+        # numpy memory — an aliased table would let an asynchronously
+        # executing dispatch read post-mutation data.  (Immutable
+        # Topologies pay one extra host copy; correctness wins.)
+        return cls(jnp.array(t.nbr), jnp.array(t.mask), jnp.array(t.rev))
 
 
 class LSSState(NamedTuple):
@@ -101,10 +125,19 @@ class LSSState(NamedTuple):
     rng: jax.Array
 
 
-def init_state(topo: TopoArrays, inputs: wvs.WV, seed: int = 0) -> LSSState:
+def init_state(topo: TopoArrays, inputs: wvs.WV, seed: int = 0,
+               alive=None) -> LSSState:
+    """Fresh all-quiescent state (S_i = X_ii, empty message slots).
+
+    ``alive`` (optional bool (n,)) seeds the churn mask — a capacity-padded
+    :class:`~repro.core.topology.DynTopology` passes its ``present`` mask
+    so spare rows start dead; default: every peer alive.
+    """
     n, D = topo.nbr.shape
     d = inputs.m.shape[-1]
     dt = inputs.m.dtype
+    alive = (jnp.ones((n,), bool) if alive is None
+             else jnp.array(alive, bool))  # copy: caller may mutate theirs
     return LSSState(
         out_m=jnp.zeros((n, D, d), dt),
         out_c=jnp.zeros((n, D), dt),
@@ -114,11 +147,38 @@ def init_state(topo: TopoArrays, inputs: wvs.WV, seed: int = 0) -> LSSState:
         x_c=inputs.c,
         pending=jnp.zeros((n, D), bool),
         last_send=jnp.full((n,), -(10**6), jnp.int32),
-        alive=jnp.ones((n,), bool),
+        alive=alive,
         t=jnp.zeros((), jnp.int32),
         msgs=jnp.zeros((), counter_dtype()),
         rng=jax.random.PRNGKey(seed),
     )
+
+
+@jax.jit
+def _clear_slots_impl(state: LSSState, rows, slots) -> LSSState:
+    return state._replace(
+        out_m=state.out_m.at[..., rows, slots, :].set(0.0),
+        out_c=state.out_c.at[..., rows, slots].set(0.0),
+        in_m=state.in_m.at[..., rows, slots, :].set(0.0),
+        in_c=state.in_c.at[..., rows, slots].set(0.0),
+        pending=state.pending.at[..., rows, slots].set(False),
+    )
+
+
+def clear_slots(state: LSSState, rows, slots) -> LSSState:
+    """Scrub the messaging state of the given ``(peer, slot)`` coordinates.
+
+    Dynamic membership reuses degree slots: when an edge is removed (and
+    later a new one claims the freed slot) the out/in message moments,
+    pending flag — everything the old link left behind — must go back to
+    the empty-slot state, or the new link would start from a stale
+    agreement.  Works on a single state or a query-batched one (leading
+    axes broadcast).  The five scatters run as ONE jitted program — under
+    sustained churn the per-edit eager dispatches were the dominant
+    boundary cost.
+    """
+    return _clear_slots_impl(state, jnp.asarray(rows, jnp.int32),
+                             jnp.asarray(slots, jnp.int32))
 
 
 def _live_mask(topo: TopoArrays, alive: jax.Array) -> jax.Array:

@@ -67,9 +67,10 @@ def _setup(topo: topology.Topology, spec: ProblemSpec):
     return centers, sample, rng, inputs
 
 
-def _core_state(topo: topology.Topology, inputs: wvs.WV, seed: int):
+def _core_state(topo: topology.Topology, inputs: wvs.WV, seed: int,
+                alive=None):
     ta = lss.TopoArrays.from_topology(topo)
-    return ta, lss.init_state(ta, inputs, seed=seed)
+    return ta, lss.init_state(ta, inputs, seed=seed, alive=alive)
 
 
 def _drain_msgs(state: lss.LSSState):
@@ -98,15 +99,22 @@ class _Driver:
     def __init__(self, topo, centers, cfg, inputs, spec, engine):
         self._centers, self._cfg = centers, cfg
         self.extra: dict = {}
+        # A DynTopology enables true membership ops (churn through
+        # remove_peer instead of a bare alive-mask edit); spare capacity
+        # rows start dead via the present mask.
+        self._dyn = topo if isinstance(topo, topology.DynTopology) else None
+        self._dyn_version = self._dyn.version if self._dyn else 0
+        alive = self._dyn.present.copy() if self._dyn else None
         if engine is not None:
             self._eng = _make_engine(topo, centers, cfg, engine)
-            self._st = self._eng.init(inputs, seed=spec.seed)
+            self._st = self._eng.init(inputs, seed=spec.seed, alive=alive)
             self.chunk = max(1, self._eng.ecfg.cycles_per_dispatch)
             self.extra = {"engine_shards": self._eng.S,
                           "cut_edges": self._eng.stopo.cut_edges()}
         else:
             self._eng = None
-            self._ta, self._st = _core_state(topo, inputs, spec.seed)
+            self._ta, self._st = _core_state(topo, inputs, spec.seed,
+                                             alive=alive)
             self.chunk = 1
 
     def advance(self, k: int):
@@ -140,10 +148,43 @@ class _Driver:
             self._st = self._st._replace(x_m=self._st.x_m.at[who].set(vals))
 
     def kill_peers(self, who, alive_np):
+        """Churn.  On a plain Topology this is the paper's alive-mask
+        edit; on a DynTopology the peers *leave*: their links are torn
+        out of the topology (``remove_peer``), the freed slots scrubbed,
+        and the execution tables repaired incrementally — same live-link
+        set either way, so the dynamics are identical, but the mutated
+        topology path exercises what a real overlay does."""
+        if self._dyn is not None:
+            for p in np.asarray(who).ravel():
+                self._dyn.remove_peer(int(p))
+            self._sync_membership()
         if self._eng is not None:
             self._st = self._eng.kill_peers(self._st, who)
         else:
             self._st = self._st._replace(alive=jnp.asarray(alive_np))
+
+    def _sync_membership(self):
+        """Catch the execution tables + slot state up to the DynTopology
+        (data-only within capacity: the jitted cycle never recompiles)."""
+        events = self._dyn.events_since(self._dyn_version)
+        self._dyn_version = self._dyn.version
+        rows, slots = [], []
+        for ev in events:
+            if ev.kind in ("link", "unlink"):
+                rows += [ev.a, ev.b]
+                slots += [ev.slot_a, ev.slot_b]
+        if rows:
+            # Power-of-two padding bounds the scatter shapes XLA sees.
+            rows, slots = lss.pad_bucket(np.asarray(rows, np.int32),
+                                         np.asarray(slots, np.int32))
+        if self._eng is not None:
+            self._eng.apply_membership(self._dyn)
+            if len(rows):
+                self._st = self._eng.clear_slots(self._st, rows, slots)
+        else:
+            self._ta = lss.TopoArrays.from_topology(self._dyn)
+            if len(rows):
+                self._st = lss.clear_slots(self._st, rows, slots)
 
 
 def run_static(
@@ -214,6 +255,14 @@ def run_dynamic(
     ``engine`` routes through :class:`repro.engine.ShardedLSS` (see
     :func:`run_static`); noise/churn edits land between cycles, so the
     engine path dispatches one cycle at a time.
+
+    Passing a :class:`~repro.core.topology.DynTopology` routes churn
+    through the real membership ops: dead peers *leave* (``remove_peer``
+    tears their links out of the topology, halo tables repair
+    incrementally) instead of merely flipping the alive mask.  The live
+    link set is identical either way, so the reported dynamics match the
+    paper's churn model exactly — the DynTopology path additionally
+    exercises the slot-reuse machinery long-lived deployments rely on.
     """
     centers, sample, rng, inputs = _setup(topo, spec)
     drv = _Driver(topo, centers, cfg, inputs, spec, engine)

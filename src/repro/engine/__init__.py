@@ -7,7 +7,8 @@ Modules:
   sweep     — vmapped multi-seed / multi-config scenario sweeps
 """
 
-from .engine import EngineConfig, ShardedLSS, ShardedState  # noqa: F401
+from .engine import (DeviceTopo, EngineConfig, ShardedLSS,  # noqa: F401
+                     ShardedState)
 from .partition import (Partition, ShardedTopo, make_partition,  # noqa: F401
-                        shard_topology)
+                        repair_sharded_topo, shard_topology)
 from .sweep import sweep_configs, sweep_static  # noqa: F401

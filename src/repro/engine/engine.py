@@ -27,6 +27,14 @@ one device-sync per K cycles instead of per cycle.
 Transports: on a single device the halo exchange is a transpose (gather
 fallback); given a mesh axis of size ``S`` the same per-shard code runs
 under ``shard_map`` with ``lax.all_to_all`` (:meth:`use_mesh`).
+
+Dynamic membership: the topology tables (:class:`DeviceTopo`) are traced
+*arguments* of the jitted step, and the partition spans the topology's
+full capacity, so a :class:`~repro.core.topology.DynTopology` mutation
+only needs :meth:`ShardedLSS.apply_membership` — an incremental
+host-side halo repair plus a data-only table swap.  Within the padded
+capacities (peer rows, degree slots, ``halo_slack`` width) nothing
+recompiles.
 """
 
 from __future__ import annotations
@@ -42,7 +50,7 @@ from repro.kernels import ops as kernel_ops
 
 from . import exchange, partition
 
-__all__ = ["EngineConfig", "ShardedState", "ShardedLSS"]
+__all__ = ["DeviceTopo", "EngineConfig", "ShardedState", "ShardedLSS"]
 
 
 class _LocalTables(NamedTuple):
@@ -56,11 +64,37 @@ class _LocalTables(NamedTuple):
     halo: partition.HaloTables  # (S, H) local rows
 
 
+class DeviceTopo(NamedTuple):
+    """Device-side topology tables, threaded through the jitted step.
+
+    These are *arguments* of every compiled program, never closed-over
+    constants: a dynamic-membership edit swaps in new table data of the
+    same shape and the existing executable keeps running (zero
+    recompiles).  Baking them in as jit constants would silently pin the
+    first topology forever.
+    """
+
+    mask: jax.Array  # bool  (S, B, D)
+    rev: jax.Array  # int32 (S, B, D)
+    tgt_row: jax.Array  # int32 (S, B, D)
+    tgt_pos: jax.Array  # int32 (S, B, D)
+    intra: jax.Array  # bool  (S, B, D)
+    halo: partition.HaloTables  # (S, S, H) jnp tables
+
+    @classmethod
+    def from_sharded(cls, st: partition.ShardedTopo) -> "DeviceTopo":
+        j = jnp.asarray
+        return cls(mask=j(st.mask), rev=j(st.rev), tgt_row=j(st.tgt_row),
+                   tgt_pos=j(st.tgt_pos), intra=j(st.intra),
+                   halo=partition.HaloTables(*(j(a) for a in st.halo)))
+
+
 class EngineConfig(NamedTuple):
     num_shards: int = 2
     cycles_per_dispatch: int = 8  # K cycles fused per jit dispatch
     method: str = "bfs"  # partitioner: "bfs" | "stride"
     use_kernels: Optional[bool] = None  # None = auto (Pallas on TPU only)
+    halo_slack: float = 1.0  # >1 pads halo width for membership headroom
 
 
 class ShardedState(NamedTuple):
@@ -101,19 +135,20 @@ class ShardedLSS:
         self.decide = decide or (
             lambda v: regions.decide_voronoi(v, self.centers))
         part = partition.make_partition(topo, ecfg.num_shards, ecfg.method)
-        st = partition.shard_topology(topo, part)
+        # halo_slack > 1 pads the halo width for membership headroom: edge
+        # churn that grows a boundary stays a data-only update until the
+        # slack is exhausted.
+        st = partition.shard_topology(topo, part,
+                                      halo_slack=ecfg.halo_slack)
         self.stopo = st
         self.part = part
         self.S, self.B, self.D = part.num_shards, part.block, st.D
         self.n, self.num_edges = st.n, st.num_edges
-        j = jnp.asarray
-        self._mask = j(st.mask)
-        self._rev = j(st.rev)
-        self._tgt_row = j(st.tgt_row)
-        self._tgt_pos = j(st.tgt_pos)
-        self._intra = j(st.intra)
-        self._halo = partition.HaloTables(*(j(a) for a in st.halo))
-        self._pos = j(part.new_of_old)  # (n,) original -> flattened
+        self._tables = DeviceTopo.from_sharded(st)
+        # Version of the (Dyn)topology the tables reflect; apply_membership
+        # catches up incrementally from here.
+        self._topo_version = getattr(topo, "version", 0)
+        self._pos = jnp.asarray(part.new_of_old)  # (n,) orig -> flattened
         use_kernels = ecfg.use_kernels
         if use_kernels is None:
             # The fused kernels hardwire Voronoi-on-centers; a custom
@@ -134,6 +169,7 @@ class ShardedLSS:
                                 donate_argnums=self._donate)
         self._metrics_jit = jax.jit(self._metrics_impl,
                                     static_argnames=("eps",))
+        self._clear_jit = jax.jit(self._clear_slots_impl)
 
     # -- mesh attachment ---------------------------------------------------
     def use_mesh(self, mesh, axis_name: str) -> "ShardedLSS":
@@ -154,14 +190,21 @@ class ShardedLSS:
         return self
 
     # -- state -------------------------------------------------------------
-    def init(self, inputs: wvs.WV, seed: int = 0) -> ShardedState:
-        """Build sharded state from inputs in ORIGINAL peer order."""
+    def init(self, inputs: wvs.WV, seed: int = 0, alive=None) -> ShardedState:
+        """Build sharded state from inputs in ORIGINAL peer order.
+
+        ``alive`` (optional bool (n,), original order) seeds the churn
+        mask — a capacity-padded :class:`~repro.core.topology.DynTopology`
+        passes its ``present`` mask so spare rows start dead.
+        """
         S, B, D = self.S, self.B, self.D
         d = inputs.m.shape[-1]
         dt = inputs.m.dtype
         x_m = jnp.zeros((S * B, d), dt).at[self._pos].set(inputs.m)
         x_c = jnp.zeros((S * B,), dt).at[self._pos].set(inputs.c)
-        alive = jnp.zeros((S * B,), bool).at[self._pos].set(True)
+        alive0 = (jnp.ones((self.n,), bool) if alive is None
+                  else jnp.array(alive, bool))  # copy: caller may mutate
+        alive = jnp.zeros((S * B,), bool).at[self._pos].set(alive0)
         state = ShardedState(
             out_m=jnp.zeros((S, B, D, d), dt),
             out_c=jnp.zeros((S, B, D), dt),
@@ -195,10 +238,60 @@ class ShardedLSS:
 
     def kill_peers(self, state: ShardedState, who) -> ShardedState:
         """Churn: permanently mark original ids ``who`` dead."""
+        return self.set_alive(state, who, False)
+
+    def set_alive(self, state: ShardedState, who, value: bool
+                  ) -> ShardedState:
+        """Set the churn mask of original ids ``who`` (True = join)."""
         pos = self._pos[jnp.asarray(who)]
         flat = state.alive.reshape(self.S * self.B)
-        flat = flat.at[pos].set(False)
+        flat = flat.at[pos].set(bool(value))
         return state._replace(alive=flat.reshape(state.alive.shape))
+
+    def clear_slots(self, state: ShardedState, rows, slots) -> ShardedState:
+        """Scrub the messaging state of ``(peer, slot)`` coordinates in
+        ORIGINAL ids — the engine-layout counterpart of
+        :func:`repro.core.lss.clear_slots` (see there for why membership
+        edits must do this, and why it runs as one jitted program).
+        Broadcasts over leading (query) axes."""
+        return self._clear_jit(state, jnp.asarray(rows, jnp.int32),
+                               jnp.asarray(slots, jnp.int32))
+
+    def _clear_slots_impl(self, state: ShardedState, rows, slots):
+        pos = self._pos[rows]
+        s_idx, b_idx = pos // self.B, pos % self.B
+        return state._replace(
+            out_m=state.out_m.at[..., s_idx, b_idx, slots, :].set(0.0),
+            out_c=state.out_c.at[..., s_idx, b_idx, slots].set(0.0),
+            in_m=state.in_m.at[..., s_idx, b_idx, slots, :].set(0.0),
+            in_c=state.in_c.at[..., s_idx, b_idx, slots].set(0.0),
+            pending=state.pending.at[..., s_idx, b_idx, slots].set(False),
+        )
+
+    # -- dynamic membership ------------------------------------------------
+    def apply_membership(self, dyn) -> bool:
+        """Catch the halo/local tables up to a mutated
+        :class:`~repro.core.topology.DynTopology`.
+
+        The partition (row placement) is fixed at construction over the
+        topology's full capacity, so membership edits never move peers —
+        only the adjacency tables of the touched rows and the halo rows of
+        their shard pairs are repaired (:func:`repro.engine.partition.
+        repair_sharded_topo`).  Returns True when the halo width regrew —
+        a shape change, i.e. the next dispatch recompiles; within the halo
+        headroom the swap is data-only and the compiled step is reused.
+        """
+        rows = dyn.changed_rows_since(self._topo_version)
+        self._topo_version = dyn.version
+        if rows.size == 0:
+            return False
+        old_width = self.stopo.halo_width
+        self.stopo = partition.repair_sharded_topo(
+            self.stopo, dyn, rows,
+            halo_slack=max(self.ecfg.halo_slack, 1.25))
+        self.num_edges = self.stopo.num_edges
+        self._tables = DeviceTopo.from_sharded(self.stopo)
+        return self.stopo.halo_width != old_width
 
     # -- per-peer update (flattened), shared with the collective path ------
     def _peer_update(self, out_m, out_c, in_m, in_c, x_m, x_c, live,
@@ -263,22 +356,23 @@ class ShardedLSS:
         return wvs.WV(s_m, s_c), viol
 
     # -- one cycle, gather-fallback (full arrays, one device) --------------
-    def _cycle_full(self, state: ShardedState, decide=None, cfg=None,
-                    gate=None) -> ShardedState:
+    def _cycle_full(self, state: ShardedState, tables: DeviceTopo,
+                    decide=None, cfg=None, gate=None) -> ShardedState:
         """One engine cycle on full ``(S, B, ...)`` arrays.
 
-        ``decide``/``cfg``/``gate`` are per-call overrides (see
-        :meth:`_peer_update`); the service layer vmaps this body over a
-        query axis, composing Q concurrent monitoring queries with the
-        shard axis in a single dispatch.
+        ``tables`` is the traced :class:`DeviceTopo` (membership edits swap
+        its data between dispatches).  ``decide``/``cfg``/``gate`` are
+        per-call overrides (see :meth:`_peer_update`); the service layer
+        vmaps this body over a query axis, composing Q concurrent
+        monitoring queries with the shard axis in a single dispatch.
         """
         cfg = cfg if cfg is not None else self.cfg
         S, B, D = self.S, self.B, self.D
         keys = jax.vmap(jax.random.split)(state.rng)  # (S, 2, 2)
         rng, kdrop = keys[:, 0], keys[:, 1]
 
-        nbr_alive = state.alive.reshape(S * B)[self._tgt_pos]
-        live = self._mask & state.alive[..., None] & nbr_alive
+        nbr_alive = state.alive.reshape(S * B)[tables.tgt_pos]
+        live = tables.mask & state.alive[..., None] & nbr_alive
         send = state.pending & live
         if cfg.drop_rate > 0.0:
             keep = jax.vmap(
@@ -291,7 +385,7 @@ class ShardedLSS:
         # Shard-local edges: the core's receive-side gather (for an intra
         # slot the (tgt_row, rev) map is an involution, so in-slot (j, r)
         # reads its unique source slot (tgt_row[j,r], rev[j,r])).
-        src = self._tgt_row * D + self._rev  # (S, B, D) flat source slot
+        src = tables.tgt_row * D + tables.rev  # (S, B, D) flat source slot
 
         def gat(in_buf, out_buf, deliv, src_s, ok):
             flat = out_buf.reshape(B * D, *out_buf.shape[2:])
@@ -300,17 +394,17 @@ class ShardedLSS:
             return jnp.where(cond, flat[src_s], in_buf)
 
         in_m = jax.vmap(gat)(state.in_m, state.out_m, delivered, src,
-                             self._intra)
+                             tables.intra)
         in_c = jax.vmap(gat)(state.in_c, state.out_c, delivered, src,
-                             self._intra)
+                             tables.intra)
 
         # Cross-shard edges: halo gather -> transpose -> scatter.
         buf_m, buf_c, flag = exchange.gather_halo(
-            state.out_m, state.out_c, delivered, self._halo)
+            state.out_m, state.out_c, delivered, tables.halo)
         buf_m, buf_c, flag = (exchange.transpose_all_to_all(b)
                               for b in (buf_m, buf_c, flag))
         in_m, in_c = exchange.scatter_halo(in_m, in_c, buf_m, buf_c, flag,
-                                           self._halo)
+                                           tables.halo)
 
         # Peer-local update on flattened rows.
         fl = lambda a: a.reshape(S * B, *a.shape[2:])
@@ -325,9 +419,10 @@ class ShardedLSS:
             t=state.t + 1, msgs=state.msgs + sent.astype(state.msgs.dtype),
             rng=rng)
 
-    def _run_block(self, state: ShardedState, k: int) -> ShardedState:
-        return jax.lax.fori_loop(0, k, lambda _, st: self._cycle_full(st),
-                                 state)
+    def _run_block(self, state: ShardedState, tables: DeviceTopo,
+                   k: int) -> ShardedState:
+        return jax.lax.fori_loop(
+            0, k, lambda _, st: self._cycle_full(st, tables), state)
 
     # -- one cycle, collective (per-shard block inside shard_map) ----------
     def _cycle_block(self, state: ShardedState,
@@ -382,24 +477,25 @@ class ShardedLSS:
             msgs=state.msgs + sent.astype(state.msgs.dtype)[None],
             rng=rng)
 
-    def _run_block_collective(self, state: ShardedState, k: int):
+    def _run_block_collective(self, state: ShardedState, tables: DeviceTopo,
+                              k: int):
         from jax.sharding import PartitionSpec as P
         sh, repl = P(self._axis), P()
         spec = ShardedState(sh, sh, sh, sh, sh, sh, sh, sh, sh, repl, sh, sh)
 
         def local(state, mask, rev, tgt_row, tgt_pos, intra, *halo):
-            tables = _LocalTables(mask[0], rev[0], tgt_row[0], tgt_pos[0],
-                                  intra[0],
-                                  partition.HaloTables(*(a[0] for a in halo)))
+            local_t = _LocalTables(mask[0], rev[0], tgt_row[0], tgt_pos[0],
+                                   intra[0],
+                                   partition.HaloTables(*(a[0] for a in halo)))
             return jax.lax.fori_loop(
-                0, k, lambda _, st: self._cycle_block(st, tables), state)
+                0, k, lambda _, st: self._cycle_block(st, local_t), state)
 
         f = shard_map(
             local, mesh=self._mesh,
             in_specs=(spec,) + (sh,) * 10,
             out_specs=spec, check_vma=False)
-        return f(state, self._mask, self._rev, self._tgt_row, self._tgt_pos,
-                 self._intra, *self._halo)
+        return f(state, tables.mask, tables.rev, tables.tgt_row,
+                 tables.tgt_pos, tables.intra, *tables.halo)
 
     # -- driver ------------------------------------------------------------
     def run(self, state: ShardedState, cycles: int) -> ShardedState:
@@ -408,7 +504,7 @@ class ShardedLSS:
         done = 0
         while done < cycles:
             step = min(k, cycles - done)
-            state = self._run_jit(state, k=step)
+            state = self._run_jit(state, self._tables, k=step)
             done += step
         return state
 
@@ -424,15 +520,16 @@ class ShardedLSS:
         return state._replace(msgs=jnp.zeros_like(state.msgs)), total
 
     # -- observers ---------------------------------------------------------
-    def _metrics_impl(self, state: ShardedState, eps=1e-9, decide=None):
+    def _metrics_impl(self, state: ShardedState, tables: DeviceTopo,
+                      eps=1e-9, decide=None):
         """Unjitted metrics body; ``decide``/``eps`` may be per-query
         (traced) overrides when the service vmaps this over its query axis.
         Returns ``(acc, quiescent, correct-in-original-order, want)``."""
         decide = decide if decide is not None else self.decide
         S, B = self.S, self.B
         fl = lambda a: a.reshape(S * B, *a.shape[2:])
-        nbr_alive = state.alive.reshape(S * B)[self._tgt_pos]
-        live = fl(self._mask & state.alive[..., None] & nbr_alive)
+        nbr_alive = state.alive.reshape(S * B)[tables.tgt_pos]
+        live = fl(tables.mask & state.alive[..., None] & nbr_alive)
         x_m, x_c = fl(state.x_m), fl(state.x_c)
         alive = fl(state.alive)
         s = stopping.status(x_m, x_c, fl(state.out_m), fl(state.out_c),
@@ -452,7 +549,7 @@ class ShardedLSS:
     def metrics(self, state: ShardedState, eps: float = 1e-9):
         """(accuracy, quiescent, correct-mask in original order) — the same
         numbers :func:`repro.core.lss.metrics` reports."""
-        return self._metrics_jit(state, eps=eps)[:3]
+        return self._metrics_jit(state, self._tables, eps=eps)[:3]
 
     def total_msgs(self, state: ShardedState):
         return jnp.sum(state.msgs)

@@ -20,6 +20,14 @@ Two transports realize the transpose:
 
 Both produce identical results by construction; the engine picks per the
 available mesh.
+
+The tables are pure data to this module: dynamic membership repairs them
+between dispatches (:func:`repro.engine.partition.repair_sharded_topo`)
+and the exchange simply routes whatever it is handed.  Padding entries —
+including the extra ``halo_slack`` width headroom those repairs rely on —
+are masked by ``send_ok`` on the send side and scattered out-of-bounds
+(dropped) on the receive side, so unused capacity costs bandwidth but
+never correctness.
 """
 
 from __future__ import annotations

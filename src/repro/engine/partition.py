@@ -35,7 +35,8 @@ import numpy as np
 from repro.core import topology
 
 __all__ = ["Partition", "HaloTables", "ShardedTopo", "make_partition",
-           "shard_topology", "bfs_assignment", "stride_assignment"]
+           "shard_topology", "repair_sharded_topo", "bfs_assignment",
+           "stride_assignment"]
 
 
 class Partition(NamedTuple):
@@ -164,8 +165,19 @@ def make_partition(topo: topology.Topology, num_shards: int,
                      new_of_old, old_of_new, sizes.astype(np.int64))
 
 
-def shard_topology(topo: topology.Topology, part: Partition) -> ShardedTopo:
-    """Build the per-shard local tables + halo routing for ``part``."""
+def shard_topology(topo: topology.Topology, part: Partition,
+                   halo_width: int | None = None,
+                   halo_slack: float = 1.0) -> ShardedTopo:
+    """Build the per-shard local tables + halo routing for ``part``.
+
+    ``halo_width`` pads the halo tables to a fixed width ``H`` larger than
+    strictly needed (error if smaller); ``halo_slack`` > 1 instead derives
+    the padding from the required width (``ceil(needed * slack) + 2``).
+    Dynamic-membership consumers pass headroom one way or the other so
+    edge churn that grows a shard pair's boundary stays a data-only
+    update (same shapes, no recompile) until the headroom is exhausted —
+    see :func:`repair_sharded_topo` for the regrow path.
+    """
     S, B, D = part.num_shards, part.block, topo.max_deg
     occ = part.old_of_new >= 0  # (S*B,)
     src = np.where(occ, part.old_of_new, 0)
@@ -191,7 +203,15 @@ def shard_topology(topo: topology.Topology, part: Partition) -> ShardedTopo:
             sel = ts3[s][rr, kk] == t
             entries[(s, int(t))] = (rr[sel], kk[sel])
             counts[s, int(t)] = int(sel.sum())
-    H = max(1, int(counts.max()) if counts.size else 1)
+    needed = max(1, int(counts.max()) if counts.size else 1)
+    if halo_width is not None and halo_width < needed:
+        raise ValueError(f"halo_width={halo_width} < required {needed}")
+    if halo_width is not None:
+        H = int(halo_width)
+    elif halo_slack > 1.0:
+        H = int(np.ceil(needed * halo_slack)) + 2
+    else:
+        H = needed
     send_row = np.zeros((S, S, H), np.int32)
     send_slot = np.zeros((S, S, H), np.int32)
     send_ok = np.zeros((S, S, H), bool)
@@ -213,3 +233,122 @@ def shard_topology(topo: topology.Topology, part: Partition) -> ShardedTopo:
         halo=HaloTables(send_row, send_slot, send_ok, recv_row, recv_slot),
         halo_width=H,
     )
+
+
+def _rebuild_halo_pair(halo: HaloTables, s: int, t: int, mask3, ts3, tr3,
+                       rv3) -> int:
+    """Recompute halo entries for the ordered pair (s, t) in place.
+
+    Scans shard ``s``'s cross slots targeting ``t`` in the same canonical
+    (row, slot) order the full build uses, so a repaired table is
+    bitwise-identical to a from-scratch :func:`shard_topology` at the same
+    width.  Returns the entry count (caller checks it against H).
+    """
+    sel = mask3[s] & (ts3[s] == t)  # t != s, so these are cross slots
+    rr, kk = np.nonzero(sel)
+    h = rr.size
+    H = halo.send_row.shape[-1]
+    if h > H:
+        return h  # overflow: caller regrows, then retries
+    for a in (halo.send_row[s, t], halo.send_slot[s, t]):
+        a[:] = 0
+    halo.send_ok[s, t, :] = False
+    halo.recv_row[t, s, :] = 0
+    halo.recv_slot[t, s, :] = 0
+    halo.send_row[s, t, :h] = rr
+    halo.send_slot[s, t, :h] = kk
+    halo.send_ok[s, t, :h] = True
+    halo.recv_row[t, s, :h] = tr3[s][rr, kk]
+    halo.recv_slot[t, s, :h] = rv3[s][rr, kk]
+    return h
+
+
+def repair_sharded_topo(st: ShardedTopo, topo, changed_rows,
+                        halo_slack: float = 1.25) -> ShardedTopo:
+    """Incrementally repair ``st`` after a membership delta.
+
+    ``topo`` is the mutated (Dyn)topology — SAME capacity/partition as the
+    one ``st`` was built from — and ``changed_rows`` the original peer ids
+    whose adjacency rows changed.  Only those rows' local tables and the
+    halo rows of their shards' affected (src, dst) pairs are recomputed;
+    everything else is carried over untouched.  Cost is
+    ``O(|changed rows| * D + |affected shard pairs| * B * D)`` versus the
+    full build's ``O(S*B*D + n)`` — and, because every array keeps its
+    shape (halo width included, as long as the headroom holds), the
+    repaired tables are a data-only swap for jitted consumers.
+
+    When a shard pair outgrows the halo width the tables are rebuilt at
+    ``ceil(needed * halo_slack) + 2`` — a shape change, so consumers
+    recompile once; pad ``shard_topology(..., halo_width=...)`` with
+    headroom up front to make this rare.
+
+    The result is bitwise-identical to
+    ``shard_topology(topo, st.part, halo_width=st.halo_width)``.
+    """
+    part = st.part
+    S, B, D = part.num_shards, part.block, st.D
+    rows = np.unique(np.asarray(changed_rows, np.int64))
+    if rows.size == 0:
+        return st
+    pos = part.new_of_old[rows]  # flattened positions of changed rows
+    own_shard = (pos // B).astype(np.int32)
+    own_row = (pos % B).astype(np.int32)
+
+    mask3 = st.mask.copy()
+    rv3 = st.rev.copy()
+    ts3 = st.tgt_shard.copy()
+    tr3 = st.tgt_row.copy()
+    tp3 = st.tgt_pos.copy()
+    intra3 = st.intra.copy()
+
+    # Affected (s, t) halo pairs: every cross target of the changed rows,
+    # BEFORE and after the edit (removed edges vanish from the new tables
+    # but their stale halo entries must still be rebuilt away).
+    pairs = set()
+    for s, r in zip(own_shard, own_row):
+        old_cross = st.mask[s, r] & (st.tgt_shard[s, r] != s)
+        for t in np.unique(st.tgt_shard[s, r][old_cross]):
+            pairs.add((int(s), int(t)))
+
+    # Local tables for the changed rows (same formulas as the full build).
+    m = topo.mask[rows]  # (R, D)
+    rv = np.where(m, topo.rev[rows], 0).astype(np.int32)
+    tp = np.where(m, part.new_of_old[topo.nbr[rows]], 0)
+    ts = (tp // B).astype(np.int32)
+    tr = (tp % B).astype(np.int32)
+    it = m & (ts == own_shard[:, None])
+    mask3[own_shard, own_row] = m
+    rv3[own_shard, own_row] = rv
+    ts3[own_shard, own_row] = ts
+    tr3[own_shard, own_row] = tr
+    tp3[own_shard, own_row] = tp.astype(np.int32)
+    intra3[own_shard, own_row] = it
+    for i, s in enumerate(own_shard):
+        new_cross = m[i] & (ts[i] != s)
+        for t in np.unique(ts[i][new_cross]):
+            pairs.add((int(s), int(t)))
+
+    halo = HaloTables(*(a.copy() for a in st.halo))
+    H = st.halo_width
+    needed = 0
+    for s, t in sorted(pairs):
+        needed = max(needed,
+                     _rebuild_halo_pair(halo, s, t, mask3, ts3, tr3, rv3))
+        needed = max(needed,
+                     _rebuild_halo_pair(halo, t, s, mask3, ts3, tr3, rv3))
+    if needed > H:
+        # Regrow with headroom: widen every pair's rows, then re-repair.
+        H2 = int(np.ceil(needed * halo_slack)) + 2
+        grown = HaloTables(*(
+            np.zeros(a.shape[:2] + (H2,), a.dtype) for a in halo))
+        for old, new in zip(st.halo, grown):
+            new[..., :st.halo_width] = old
+        halo = grown
+        for s, t in sorted(pairs):
+            _rebuild_halo_pair(halo, s, t, mask3, ts3, tr3, rv3)
+            _rebuild_halo_pair(halo, t, s, mask3, ts3, tr3, rv3)
+        H = H2
+
+    return st._replace(
+        num_edges=topo.num_edges, mask=mask3, rev=rv3, tgt_shard=ts3,
+        tgt_row=tr3, tgt_pos=tp3, intra=intra3, halo=halo, halo_width=H)

@@ -21,7 +21,9 @@ Components:
   dispatches, per-tenant telemetry to a :class:`TelemetrySink`.
 """
 
+from .admission import AdmissionQueue
 from .ingest import StreamIngest, UpdateBatch
+from .membership import MemberEvent, MembershipQueue
 from .query import QueryParams, QuerySpec
 from .registry import QueryRegistry
 from .service import Service, ServiceConfig
@@ -29,6 +31,9 @@ from .telemetry import TelemetrySink
 from .workload import heterogeneous_tenants
 
 __all__ = [
+    "AdmissionQueue",
+    "MemberEvent",
+    "MembershipQueue",
     "QueryParams",
     "QueryRegistry",
     "QuerySpec",

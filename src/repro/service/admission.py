@@ -1,0 +1,97 @@
+"""Bounded admission queue: backpressure instead of hard rejection.
+
+The registry's slot capacity is a *compiled-shape* limit — Q is baked
+into every traced program — so an admit when all slots are occupied
+cannot simply allocate.  Previously that raised ``RuntimeError`` at the
+call site; the :class:`AdmissionQueue` instead absorbs the burst: the
+spec waits (FIFO) and the :class:`~repro.service.service.Service` drains
+waiting specs into slots as tenants retire, at every dispatch boundary.
+
+The queue itself is bounded.  What happens when *it* fills is the
+explicit overflow policy:
+
+* ``"reject"`` (default) — the overflowing ``admit`` raises
+  ``RuntimeError``, i.e. backpressure propagates to the caller.
+* ``"evict-oldest"`` — the oldest *waiting* spec is dropped (its status
+  becomes ``"evicted"``) and the new one enqueues; freshest-wins, for
+  callers that re-submit rather than block.
+
+``limit=0`` disables queueing entirely, restoring the original
+fail-fast behavior.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["AdmissionQueue"]
+
+
+class AdmissionQueue:
+    """FIFO of (query_id, spec) waiting for a free slot."""
+
+    OVERFLOW_POLICIES = ("reject", "evict-oldest")
+
+    def __init__(self, limit: int = 16, overflow: str = "reject"):
+        if limit < 0:
+            raise ValueError(f"limit must be >= 0, got {limit}")
+        if overflow not in self.OVERFLOW_POLICIES:
+            raise ValueError(
+                f"overflow must be one of {self.OVERFLOW_POLICIES}, "
+                f"got {overflow!r}")
+        self.limit = limit
+        self.overflow = overflow
+        self._queue: List[Tuple[str, object]] = []
+        # Terminal outcomes of ids that left the queue without a slot
+        # (bounded: oldest evicted past _TERMINAL_CAP).
+        self._terminal: Dict[str, str] = {}
+
+    _TERMINAL_CAP = 1 << 16
+
+    def _record_terminal(self, query_id: str, status: str) -> None:
+        self._terminal[query_id] = status
+        while len(self._terminal) > self._TERMINAL_CAP:
+            self._terminal.pop(next(iter(self._terminal)))
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def __contains__(self, query_id: str) -> bool:
+        return any(qid == query_id for qid, _ in self._queue)
+
+    def queued_ids(self) -> List[str]:
+        return [qid for qid, _ in self._queue]
+
+    def terminal_status(self, query_id: str) -> Optional[str]:
+        """"evicted"/"cancelled" for ids dropped from the queue."""
+        return self._terminal.get(query_id)
+
+    def push(self, query_id: str, spec) -> Optional[str]:
+        """Enqueue; returns the id of an evicted spec (or None).
+
+        Raises ``RuntimeError`` under the ``"reject"`` policy when the
+        queue is at its limit (including ``limit=0``: queueing disabled).
+        """
+        evicted = None
+        if len(self._queue) >= self.limit:
+            if self.overflow == "reject" or self.limit == 0:
+                raise RuntimeError(
+                    f"service full: all slots occupied and the admission "
+                    f"queue holds {len(self._queue)}/{self.limit} waiting "
+                    f"specs (overflow policy: {self.overflow!r})")
+            evicted, _ = self._queue.pop(0)
+            self._record_terminal(evicted, "evicted")
+        self._queue.append((query_id, spec))
+        return evicted
+
+    def pop(self) -> Tuple[str, object]:
+        return self._queue.pop(0)
+
+    def cancel(self, query_id: str) -> bool:
+        """Drop a waiting spec (a retire() before it ever got a slot)."""
+        for i, (qid, _) in enumerate(self._queue):
+            if qid == query_id:
+                del self._queue[i]
+                self._record_terminal(query_id, "cancelled")
+                return True
+        return False

@@ -1,0 +1,184 @@
+"""Peer membership events: joins/leaves/rewires at dispatch boundaries.
+
+``sim.run_dynamic`` models membership change as permanent peer death
+(churn); a long-lived serving deployment also sees the other direction —
+peers *joining* the network, links re-wiring as the overlay heals.  A
+:class:`MembershipQueue` queues such events while a dispatch is in
+flight; the :class:`~repro.service.service.Service` drains it at the next
+inter-dispatch boundary, applies the mutations to its shared
+:class:`~repro.core.topology.DynTopology`, repairs the execution tables
+incrementally (data-only within capacity: zero recompiles), and edits
+the per-slot simulator state:
+
+* **join** — the peer's row comes alive in every query slot with its
+  local input set per the paper's knowledge-init rule: the new peer
+  knows only its own input (``S_i = X_ii``), all its message slots are
+  empty, and the zero-weight-agreement clause of Alg. 1's violation set
+  bootstraps its first exchange — so in-flight queries keep their
+  convergence guarantees without any global reset.
+* **leave** — churn: the peer dies with all its links (Sec. II-B).
+* **link / unlink** — edge rewires; freed/claimed degree slots are
+  scrubbed so a reused slot never resurrects a stale agreement.
+
+Events are validated eagerly on ``push`` against the topology *plus the
+already-queued events* (a join reserves its row immediately), so a bad
+event fails at the call site, not mid-boundary.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import numpy as np
+
+from repro.core import topology
+
+__all__ = ["MemberEvent", "MembershipQueue"]
+
+
+class MemberEvent(NamedTuple):
+    kind: str  # "join" | "leave" | "link" | "unlink"
+    peer: int
+    peer_b: int = -1  # link/unlink second endpoint
+    value: Optional[np.ndarray] = None  # join: (d,) initial local vector
+    weight: float = 1.0  # join: initial weight
+
+
+class MembershipQueue:
+    """Bounded queue of membership events, drained between dispatches."""
+
+    def __init__(self, dyn: topology.DynTopology, max_pending: int = 10_000):
+        self.dyn = dyn
+        self.max_pending = max_pending
+        self._queue: List[MemberEvent] = []
+        # Rows claimed by queued joins / released by queued leaves — lets
+        # push-time validation see the post-drain membership.
+        self._pending_joins: set = set()
+        self._pending_leaves: set = set()
+        self.applied_events = 0
+        # (event, error string) for events that still failed at the
+        # boundary (eager validation is best-effort: races with direct
+        # DynTopology mutation, or capacity walls that depend on other
+        # queued events, surface here instead of killing the drain).
+        self.failures: List = []
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def _will_be_present(self, peer: int) -> bool:
+        if peer in self._pending_joins:
+            return True
+        if peer in self._pending_leaves:
+            return False
+        return bool(self.dyn.present[peer])
+
+    def _check_room(self) -> None:
+        if len(self._queue) >= self.max_pending:
+            raise RuntimeError(
+                f"membership queue full ({self.max_pending} pending events)")
+
+    # -- event constructors ------------------------------------------------
+    def join(self, peer: Optional[int] = None, value=None,
+             weight: float = 1.0) -> int:
+        """Queue a join; returns the peer row the join will claim."""
+        self._check_room()
+        if peer is None:
+            avail = next((p for p in range(self.dyn.n_cap)
+                          if not self._will_be_present(p)), None)
+            if avail is None:
+                raise ValueError(
+                    f"peer capacity n_cap={self.dyn.n_cap} exhausted "
+                    "(including queued joins); grow the topology")
+            peer = avail
+        else:
+            peer = int(peer)
+            if not 0 <= peer < self.dyn.n_cap:
+                raise ValueError(f"peer {peer} outside capacity "
+                                 f"[0, {self.dyn.n_cap})")
+            if self._will_be_present(peer):
+                raise ValueError(f"peer {peer} already present (or queued)")
+        if value is not None:
+            value = np.asarray(value, np.float32).reshape(-1)
+        self._queue.append(MemberEvent("join", peer, value=value,
+                                       weight=float(weight)))
+        self._pending_joins.add(peer)
+        self._pending_leaves.discard(peer)
+        return peer
+
+    def leave(self, peer: int) -> None:
+        self._check_room()
+        peer = int(peer)
+        if not self._will_be_present(peer):
+            raise ValueError(f"peer {peer} not present (or already leaving)")
+        self._queue.append(MemberEvent("leave", peer))
+        self._pending_leaves.add(peer)
+        self._pending_joins.discard(peer)
+
+    def link(self, i: int, j: int) -> None:
+        self._check_room()
+        i, j = int(i), int(j)
+        if i == j:
+            raise ValueError("self loops are not allowed")
+        for p in (i, j):
+            if not self._will_be_present(p):
+                raise ValueError(f"peer {p} not present (or leaving)")
+        key = (min(i, j), max(i, j))
+        queued = any(ev.kind == "link"
+                     and (min(ev.peer, ev.peer_b),
+                          max(ev.peer, ev.peer_b)) == key
+                     for ev in self._queue)
+        if queued or (self.dyn.has_edge(i, j)
+                      and i not in self._pending_leaves
+                      and j not in self._pending_leaves
+                      and not any(ev.kind == "unlink"
+                                  and (min(ev.peer, ev.peer_b),
+                                       max(ev.peer, ev.peer_b)) == key
+                                  for ev in self._queue)):
+            raise ValueError(f"edge ({i}, {j}) already exists (or queued)")
+        self._queue.append(MemberEvent("link", i, j))
+
+    def unlink(self, i: int, j: int) -> None:
+        self._check_room()
+        self._queue.append(MemberEvent("unlink", int(i), int(j)))
+
+    # -- boundary application ---------------------------------------------
+    def drain_into(self, dyn: topology.DynTopology) -> dict:
+        """Apply every queued event to ``dyn`` in arrival order.
+
+        Returns ``{peer: (value, weight)}`` for the joins, so the service
+        can initialize the new peers' local inputs (knowledge-init).
+        Leaves implicitly unlink (``remove_peer``); explicit ``unlink`` of
+        an edge a leave already tore down is treated as satisfied.
+
+        An event that still fails here (eager validation can be raced by
+        direct DynTopology mutation, and capacity walls depend on the
+        whole batch) is *dropped and recorded* in :attr:`failures` —
+        never allowed to abort the drain, which would silently discard
+        every event queued behind it.
+        """
+        events, self._queue = self._queue, []
+        self._pending_joins.clear()
+        self._pending_leaves.clear()
+        join_inits = {}
+        for ev in events:
+            try:
+                if ev.kind == "join":
+                    dyn.add_peer(ev.peer)
+                    join_inits[ev.peer] = (ev.value, ev.weight)
+                elif ev.kind == "leave":
+                    dyn.remove_peer(ev.peer)
+                    join_inits.pop(ev.peer, None)
+                elif ev.kind == "link":
+                    dyn.add_edge(ev.peer, ev.peer_b)
+                elif ev.kind == "unlink":
+                    if dyn.has_edge(ev.peer, ev.peer_b):
+                        dyn.remove_edge(ev.peer, ev.peer_b)
+                else:  # pragma: no cover - constructors gate the kinds
+                    raise ValueError(
+                        f"unknown membership event {ev.kind!r}")
+            except ValueError as e:
+                self.failures.append((ev, str(e)))
+                del self.failures[:-1000]  # bounded record
+                continue
+            self.applied_events += 1
+        return join_inits

@@ -60,6 +60,13 @@ class QueryRegistry:
                 for s, qid in enumerate(self._ids) if qid is not None]
 
     # -- admission ---------------------------------------------------------
+    def reserve_id(self) -> str:
+        """Mint a query id without claiming a slot (queued admissions:
+        the service hands the id out immediately, the slot comes later)."""
+        query_id = f"q{self._serial:06d}"
+        self._serial += 1
+        return query_id
+
     def admit(self, spec: QuerySpec, query_id: Optional[str] = None) -> str:
         """Claim a free slot for ``spec``; returns the tenant's query id.
 

@@ -2,10 +2,10 @@
 
 Execution model::
 
-    admit/retire/replace ----+                +--> telemetry (JSONL)
-    stream updates ----------+--> [boundary] -+
-                                   |   ^
-                                   v   |
+    admit (or queue) / retire --+                +--> telemetry (JSONL)
+    membership joins/leaves ----+--> [boundary] -+
+    stream updates -------------+        |   ^
+                                         v   |
                         one jit dispatch: fori_loop of K cycles,
                         vmap over Q query slots (core backend), or
                         vmap over Q x ShardedLSS cycle (engine backend)
@@ -17,6 +17,15 @@ parameters, traced ``beta``/``ell``/``eps`` knobs, and the active-slot
 gate.  Masked (free) slots ride along as no-ops that send zero messages.
 State buffers are donated to the dispatch off-CPU, so the K-cycle block
 updates in place like the engine's run loop.
+
+The shared topology is threaded through every jitted program as a traced
+*argument* (never a closed-over constant): built on a
+:class:`~repro.core.topology.DynTopology`, the service applies queued
+membership events (:class:`~repro.service.membership.MembershipQueue`)
+at dispatch boundaries — joins/leaves/rewires within the topology's
+capacity swap in same-shaped table data and therefore never recompile
+the dispatch, while in-flight tenants keep converging (joining peers
+start from the paper's knowledge-init state).
 """
 
 from __future__ import annotations
@@ -30,7 +39,9 @@ import numpy as np
 from repro.core import lss, topology, wvs
 
 from . import query as qmod
+from .admission import AdmissionQueue
 from .ingest import StreamIngest, UpdateBatch
+from .membership import MembershipQueue
 from .registry import QueryRegistry
 from .telemetry import TelemetrySink
 
@@ -46,6 +57,12 @@ class ServiceConfig(NamedTuple):
     ``beta``/``ell``/``eps`` are the *defaults* for the per-query
     traceable knobs (each :class:`~repro.service.query.QuerySpec` may
     override them per tenant).
+
+    ``admission_queue``/``admission_overflow`` bound the admission
+    backpressure queue (see :class:`~repro.service.admission.
+    AdmissionQueue`; ``admission_queue=0`` restores fail-fast).
+    ``engine_halo_slack`` pads the engine backend's halo tables so
+    membership-driven boundary growth stays recompile-free.
     """
 
     capacity: int = 64  # Q query slots
@@ -61,27 +78,55 @@ class ServiceConfig(NamedTuple):
     backend: str = "core"  # "core" | "engine"
     engine_shards: int = 2  # engine backend: shard count
     engine_method: str = "bfs"  # engine backend: partitioner
+    engine_halo_slack: float = 1.5  # halo-width headroom for membership
+    admission_queue: int = 16  # waiting specs bound (0 = fail fast)
+    admission_overflow: str = "reject"  # "reject" | "evict-oldest"
+
+
+@jax.jit
+def _jit_core_leave(states, who):
+    return states._replace(alive=states.alive.at[:, who].set(False))
+
+
+@jax.jit
+def _jit_core_join(states, who, m, c):
+    return states._replace(
+        alive=states.alive.at[:, who].set(True),
+        x_m=states.x_m.at[:, who].set(m),
+        x_c=states.x_c.at[:, who].set(c),
+        last_send=states.last_send.at[:, who].set(-(10 ** 6)))
 
 
 class _CoreBackend:
     """Query axis directly over :func:`lss.cycle_impl` on one device."""
 
-    def __init__(self, topo: topology.Topology, scfg: ServiceConfig):
+    def __init__(self, topo, scfg: ServiceConfig):
         self.topo = topo
         self.ta = lss.TopoArrays.from_topology(topo)
+
+    def topo_args(self):
+        """The traced topology pytree each dispatch takes as an argument."""
+        return self.ta
+
+    def refresh_topology(self, dyn) -> bool:
+        """Swap in the mutated topology's data (same shapes: no
+        recompile).  Returns True if any traced shape changed."""
+        self.ta = lss.TopoArrays.from_topology(dyn)
+        return False
 
     def zero_inputs(self, n: int, d: int) -> wvs.WV:
         return wvs.zero(d, batch=(n,))
 
-    def init_slot(self, inputs: wvs.WV, seed: int) -> lss.LSSState:
-        return lss.init_state(self.ta, inputs, seed=seed)
+    def init_slot(self, inputs: wvs.WV, seed: int,
+                  alive=None) -> lss.LSSState:
+        return lss.init_state(self.ta, inputs, seed=seed, alive=alive)
 
-    def cycle(self, st: lss.LSSState, cfg: lss.LSSConfig, decide, gate):
-        st, _ = lss.cycle_impl(st, self.ta, cfg, decide, gate=gate)
+    def cycle(self, st: lss.LSSState, cfg: lss.LSSConfig, decide, gate, topo):
+        st, _ = lss.cycle_impl(st, topo, cfg, decide, gate=gate)
         return st
 
-    def metrics(self, st: lss.LSSState, decide, eps):
-        return lss.metrics_impl(st, self.ta, decide, eps=eps)
+    def metrics(self, st: lss.LSSState, decide, eps, topo):
+        return lss.metrics_impl(st, topo, decide, eps=eps)
 
     def msgs_of(self, states) -> np.ndarray:
         return np.asarray(states.msgs)  # (Q,)
@@ -95,6 +140,20 @@ class _CoreBackend:
     def with_x(self, states, x_m, x_c):
         return states._replace(x_m=x_m, x_c=x_c)
 
+    def apply_leaves(self, states, who):
+        """Mark rows ``who`` dead in EVERY slot (one jitted program)."""
+        return _jit_core_leave(states, jnp.asarray(who, jnp.int32))
+
+    def apply_joins(self, states, who, m, c):
+        """Knowledge-init rows ``who`` in EVERY slot: alive, local input
+        ``<m, c>``, cold send timer — fused into one jitted program."""
+        return _jit_core_join(states, jnp.asarray(who, jnp.int32),
+                              jnp.asarray(m, states.x_m.dtype),
+                              jnp.asarray(c, states.x_c.dtype))
+
+    def clear_slots(self, states, rows, slots):
+        return lss.clear_slots(states, rows, slots)
+
     def snapshot(self, states, slot: int) -> lss.LSSState:
         return jax.tree_util.tree_map(lambda a: a[slot], states)
 
@@ -102,7 +161,7 @@ class _CoreBackend:
 class _EngineBackend:
     """Query axis composed with :class:`ShardedLSS`'s shard axis."""
 
-    def __init__(self, topo: topology.Topology, scfg: ServiceConfig):
+    def __init__(self, topo, scfg: ServiceConfig):
         from repro.engine import EngineConfig, ShardedLSS  # lazy: no cycle
 
         self.topo = topo
@@ -115,19 +174,29 @@ class _EngineBackend:
             topo, jnp.zeros((1, scfg.d), jnp.float32), base,
             EngineConfig(num_shards=scfg.engine_shards,
                          cycles_per_dispatch=scfg.cycles_per_dispatch,
-                         method=scfg.engine_method, use_kernels=False))
+                         method=scfg.engine_method, use_kernels=False,
+                         halo_slack=scfg.engine_halo_slack))
+        self._leave_jit = jax.jit(self._leave_impl)
+        self._join_jit = jax.jit(self._join_impl)
+
+    def topo_args(self):
+        return self.eng._tables
+
+    def refresh_topology(self, dyn) -> bool:
+        return self.eng.apply_membership(dyn)
 
     def zero_inputs(self, n: int, d: int) -> wvs.WV:
         return wvs.zero(d, batch=(n,))
 
-    def init_slot(self, inputs: wvs.WV, seed: int):
-        return self.eng.init(inputs, seed=seed)
+    def init_slot(self, inputs: wvs.WV, seed: int, alive=None):
+        return self.eng.init(inputs, seed=seed, alive=alive)
 
-    def cycle(self, st, cfg: lss.LSSConfig, decide, gate):
-        return self.eng._cycle_full(st, decide=decide, cfg=cfg, gate=gate)
+    def cycle(self, st, cfg: lss.LSSConfig, decide, gate, topo):
+        return self.eng._cycle_full(st, topo, decide=decide, cfg=cfg,
+                                    gate=gate)
 
-    def metrics(self, st, decide, eps):
-        return self.eng._metrics_impl(st, eps=eps, decide=decide)
+    def metrics(self, st, decide, eps, topo):
+        return self.eng._metrics_impl(st, topo, eps=eps, decide=decide)
 
     def msgs_of(self, states) -> np.ndarray:
         return np.asarray(states.msgs).sum(axis=-1)  # (Q, S) -> (Q,)
@@ -145,6 +214,35 @@ class _EngineBackend:
         return states._replace(x_m=x_m.reshape(states.x_m.shape),
                                x_c=x_c.reshape(states.x_c.shape))
 
+    def _leave_impl(self, states, pos):
+        q = states.alive.shape[0]
+        flat = states.alive.reshape(q, -1).at[:, pos].set(False)
+        return states._replace(alive=flat.reshape(states.alive.shape))
+
+    def _join_impl(self, states, pos, m, c):
+        q = states.alive.shape[0]
+        alive = states.alive.reshape(q, -1).at[:, pos].set(True)
+        x_m = (states.x_m.reshape(q, -1, states.x_m.shape[-1])
+               .at[:, pos].set(m))
+        x_c = states.x_c.reshape(q, -1).at[:, pos].set(c)
+        last = states.last_send.reshape(q, -1).at[:, pos].set(-(10 ** 6))
+        return states._replace(
+            alive=alive.reshape(states.alive.shape),
+            x_m=x_m.reshape(states.x_m.shape),
+            x_c=x_c.reshape(states.x_c.shape),
+            last_send=last.reshape(states.last_send.shape))
+
+    def apply_leaves(self, states, who):
+        return self._leave_jit(states, self.eng._pos[jnp.asarray(who)])
+
+    def apply_joins(self, states, who, m, c):
+        return self._join_jit(states, self.eng._pos[jnp.asarray(who)],
+                              jnp.asarray(m, states.x_m.dtype),
+                              jnp.asarray(c, states.x_c.dtype))
+
+    def clear_slots(self, states, rows, slots):
+        return self.eng.clear_slots(states, rows, slots)
+
     def snapshot(self, states, slot: int) -> lss.LSSState:
         one = jax.tree_util.tree_map(lambda a: a[slot], states)
         return self.eng.to_lss_state(one)
@@ -154,12 +252,20 @@ class Service:
     """Long-running multi-tenant monitor over one network graph.
 
     Args:
-      topo: the shared :class:`~repro.core.topology.Topology`.
+      topo: the shared :class:`~repro.core.topology.Topology` — or a
+        :class:`~repro.core.topology.DynTopology` to serve a network
+        whose membership changes while queries are in flight
+        (:meth:`join_peer`/:meth:`leave_peer`/:meth:`link_peers`/
+        :meth:`unlink_peers`).
       scfg: :class:`ServiceConfig` (slot capacity, dispatch fusion, knobs).
       telemetry: optional :class:`TelemetrySink` (default: in-memory only).
     """
 
-    def __init__(self, topo: topology.Topology,
+    # Bound on remembered terminal query statuses (retired ids) and, at
+    # 2x, on retained per-query message totals.
+    _STATUS_CAP = 1 << 16
+
+    def __init__(self, topo,
                  scfg: ServiceConfig = ServiceConfig(),
                  telemetry: Optional[TelemetrySink] = None):
         self.topo = topo
@@ -177,15 +283,30 @@ class Service:
         self.registry = QueryRegistry(scfg.capacity, scfg.k_max, scfg.d,
                                       self.base_cfg)
         self.ingest = StreamIngest()
+        self.admission = AdmissionQueue(scfg.admission_queue,
+                                        scfg.admission_overflow)
+        self._dyn = topo if isinstance(topo, topology.DynTopology) else None
+        self.membership = (MembershipQueue(self._dyn)
+                           if self._dyn is not None else None)
+        self._applied_version = (self._dyn.version
+                                 if self._dyn is not None else 0)
+        self._present = (self._dyn.present.copy()
+                         if self._dyn is not None else None)
         self.telemetry = telemetry if telemetry is not None else TelemetrySink()
         self.dispatches = 0
         self.cycles = 0
         self._edges = max(topo.num_edges, 1)
         self._total_msgs = {}  # query_id -> host-side exact total
+        # Ids that held a slot and released it (bounded: oldest evicted
+        # past _STATUS_CAP so a long-lived service's memory tracks live
+        # tenants, not total tenants ever served; an evicted id's
+        # admission_status degrades to KeyError).
+        self._retired: dict = {}  # insertion-ordered set
 
         q = scfg.capacity
         blank = self.backend.init_slot(
-            self.backend.zero_inputs(topo.n, scfg.d), seed=0)
+            self.backend.zero_inputs(topo.n, scfg.d), seed=0,
+            alive=self._present)
         self.states = jax.tree_util.tree_map(
             lambda a: jnp.stack([a] * q), blank)
         # Donation reuses the Q-slot state buffers across dispatches; CPU
@@ -196,41 +317,106 @@ class Service:
                              donate_argnums=donate)
         self._observe = jax.jit(self._observe_impl)
 
+    @property
+    def topo_version(self) -> int:
+        """Version of the topology the compiled tables currently reflect."""
+        return self._applied_version
+
     # -- the batched step --------------------------------------------------
-    def _one_cycle(self, st, qp: qmod.QueryParams):
+    def _one_cycle(self, st, qp: qmod.QueryParams, topo):
         cfg = self.base_cfg._replace(beta=qp.beta, ell=qp.ell, eps=qp.eps)
         return self.backend.cycle(st, cfg, qmod.decide_fn(qp.regions),
-                                  qp.active)
+                                  qp.active, topo)
 
-    def _step_impl(self, states, params: qmod.QueryParams, k: int):
+    def _step_impl(self, states, params: qmod.QueryParams, topo, k: int):
         def body(_, sts):
-            return jax.vmap(self._one_cycle)(sts, params)
+            return jax.vmap(
+                lambda st, qp: self._one_cycle(st, qp, topo))(sts, params)
         return jax.lax.fori_loop(0, k, body, states)
 
-    def _observe_impl(self, states, params: qmod.QueryParams):
+    def _observe_impl(self, states, params: qmod.QueryParams, topo):
         def one(st, qp):
             acc, quiescent, _, want = self.backend.metrics(
-                st, qmod.decide_fn(qp.regions), qp.eps)
+                st, qmod.decide_fn(qp.regions), qp.eps, topo)
             return acc, quiescent, want
         return jax.vmap(one)(states, params)
 
     # -- admission (between dispatches) ------------------------------------
     def admit(self, spec: qmod.QuerySpec,
               query_id: Optional[str] = None) -> str:
-        """Admit a tenant's query into a free slot (no recompilation)."""
+        """Admit a tenant's query (no recompilation, ever).
+
+        With a free slot the query activates immediately; otherwise it
+        waits in the bounded admission queue and activates as slots free
+        (at retires and dispatch boundaries).  Check
+        :meth:`admission_status` to distinguish ``"active"`` from
+        ``"queued"``.  Raises ``RuntimeError`` only on queue overflow
+        under the ``"reject"`` policy (or with queueing disabled).
+        """
         if spec.inputs.shape[0] != self.topo.n:
             raise ValueError(
                 f"query inputs cover {spec.inputs.shape[0]} peers, "
                 f"graph has {self.topo.n}")
-        qid = self.registry.admit(spec, query_id)
-        self._reset_slot(self.registry.slot_of(qid), spec)
-        self._total_msgs[qid] = 0
+        if spec.inputs.shape[-1] != self.scfg.d:
+            raise ValueError(
+                f"query inputs have d={spec.inputs.shape[-1]}, "
+                f"service is configured for d={self.scfg.d}")
+        if query_id is not None and (query_id in self.admission
+                                     or query_id in self.registry._slot_of):
+            raise ValueError(f"query id {query_id!r} already admitted")
+        if self.registry.num_free > 0:
+            qid = self.registry.admit(spec, query_id)
+            self._reset_slot(self.registry.slot_of(qid), spec)
+            self._total_msgs[qid] = 0
+            return qid
+        qid = query_id if query_id is not None else self.registry.reserve_id()
+        self.admission.push(qid, spec)
         return qid
 
+    def admission_status(self, query_id: str) -> str:
+        """``"active"`` | ``"queued"`` | ``"retired"`` | ``"evicted"`` |
+        ``"cancelled"``."""
+        if query_id in self.registry._slot_of:
+            return "active"
+        if query_id in self.admission:
+            return "queued"
+        status = self.admission.terminal_status(query_id)
+        if status is not None:
+            return status
+        if query_id in self._retired:
+            return "retired"
+        raise KeyError(f"unknown query id {query_id!r}")
+
+    def _drain_admission(self) -> int:
+        """Move waiting specs into free slots (FIFO); returns activations."""
+        n = 0
+        while self.registry.num_free > 0 and len(self.admission) > 0:
+            qid, spec = self.admission.pop()
+            self.registry.admit(spec, qid)
+            self._reset_slot(self.registry.slot_of(qid), spec)
+            self._total_msgs[qid] = 0
+            n += 1
+        return n
+
     def retire(self, query_id: str) -> None:
-        """Retire a query; its slot becomes a masked no-op padding slot."""
+        """Retire a query; its slot becomes a masked no-op padding slot
+        (immediately refilled from the admission queue when non-empty).
+        Retiring a still-queued query cancels it."""
+        if self.admission.cancel(query_id):
+            return
         slot = self.registry.retire(query_id)
+        self._retired[query_id] = None
+        while len(self._retired) > self._STATUS_CAP:
+            self._retired.pop(next(iter(self._retired)))
+            # _total_msgs keeps pace: final totals stay queryable for as
+            # long as the retired id's status does.
+        for stale in list(self._total_msgs):
+            if len(self._total_msgs) <= self._STATUS_CAP * 2:
+                break
+            if stale not in self.registry._slot_of:
+                del self._total_msgs[stale]
         self._reset_slot(slot, None)
+        self._drain_admission()
 
     def replace(self, query_id: str, spec: qmod.QuerySpec) -> None:
         """Swap a tenant's predicate/inputs in place (fresh slot state)."""
@@ -240,12 +426,108 @@ class Service:
     def _reset_slot(self, slot: int, spec: Optional[qmod.QuerySpec]):
         if spec is None:
             fresh = self.backend.init_slot(
-                self.backend.zero_inputs(self.topo.n, self.scfg.d), seed=0)
+                self.backend.zero_inputs(self.topo.n, self.scfg.d), seed=0,
+                alive=self._present)
         else:
-            fresh = self.backend.init_slot(spec.input_wv(), seed=spec.seed)
+            fresh = self.backend.init_slot(spec.input_wv(), seed=spec.seed,
+                                           alive=self._present)
         self.states = jax.tree_util.tree_map(
             lambda all_q, one: all_q.at[slot].set(one.astype(all_q.dtype)),
             self.states, fresh)
+
+    # -- membership (between dispatches) -----------------------------------
+    def _require_dyn(self) -> MembershipQueue:
+        if self.membership is None:
+            raise RuntimeError(
+                "membership events need a DynTopology-backed service "
+                "(construct with topology.DynTopology.from_topology(...))")
+        return self.membership
+
+    def join_peer(self, peer: Optional[int] = None, value=None,
+                  weight: float = 1.0) -> int:
+        """Queue a peer join (applied at the next dispatch boundary).
+
+        The joining peer starts from the paper's knowledge-init state in
+        every query slot: local input ``<weight * value, weight>``
+        (zeros if no value is given), empty message slots, send timer
+        cold.  Returns the peer row the join will claim.
+        """
+        if value is not None:
+            value = np.asarray(value, np.float32).reshape(-1)
+            if value.shape[0] != self.scfg.d:
+                raise ValueError(f"join value has d={value.shape[0]}, "
+                                 f"service is configured for d={self.scfg.d}")
+        return self._require_dyn().join(peer, value, weight)
+
+    def leave_peer(self, peer: int) -> None:
+        """Queue a peer leave (churn: all its links fail with it)."""
+        self._require_dyn().leave(peer)
+
+    def link_peers(self, i: int, j: int) -> None:
+        """Queue an edge add between two present peers."""
+        self._require_dyn().link(i, j)
+
+    def unlink_peers(self, i: int, j: int) -> None:
+        """Queue an edge removal (no-op if a leave already tore it down)."""
+        self._require_dyn().unlink(i, j)
+
+    def _apply_membership(self) -> int:
+        """Drain queued events into the DynTopology and catch every
+        execution surface up: incremental table repair (data-only within
+        capacity: zero recompiles) + per-slot state edits."""
+        if self._dyn is None:
+            return 0
+        join_inits = self.membership.drain_into(self._dyn)
+        events = self._dyn.events_since(self._applied_version)
+        if not events:
+            return 0
+        self.backend.refresh_topology(self._dyn)
+
+        # 1. Scrub the messaging state of every touched (peer, slot) —
+        #    freed and claimed alike (idempotent; order-free).
+        rows, slots = [], []
+        for ev in events:
+            if ev.kind in ("link", "unlink"):
+                rows += [ev.a, ev.b]
+                slots += [ev.slot_a, ev.slot_b]
+        if rows:
+            # Idempotent edits + power-of-two padding: bounded scatter
+            # shapes (see lss.pad_bucket).
+            self.states = self.backend.clear_slots(
+                self.states, *lss.pad_bucket(np.asarray(rows, np.int32),
+                                             np.asarray(slots, np.int32)))
+
+        # 2. Alive transitions: the LAST join/leave per peer wins.
+        final = {}
+        for ev in events:
+            if ev.kind in ("join", "leave"):
+                final[ev.a] = ev.kind
+        joins = np.array([p for p, k in final.items() if k == "join"],
+                         np.int32)
+        leaves = np.array([p for p, k in final.items() if k == "leave"],
+                          np.int32)
+        if leaves.size:
+            self.states = self.backend.apply_leaves(
+                self.states, *lss.pad_bucket(leaves))
+        if joins.size:
+            # Knowledge-init: X_ii = <w*v, w>, empty slots, cold timer.
+            d = self.scfg.d
+            vals = np.zeros((joins.size, d), np.float32)
+            wts = np.ones((joins.size,), np.float32)
+            for idx, p in enumerate(joins):
+                v, w = join_inits.get(int(p), (None, 1.0))
+                if v is not None:
+                    vals[idx] = v
+                wts[idx] = w
+            joins_p, vals_p, wts_p = lss.pad_bucket(joins, vals, wts)
+            self.states = self.backend.apply_joins(
+                self.states, joins_p, vals_p * wts_p[:, None], wts_p)
+
+        self._present = self._dyn.present.copy()
+        self._edges = max(self._dyn.num_edges, 1)
+        self._applied_version = self._dyn.version
+        self._dyn.compact(self._applied_version)
+        return len(events)
 
     # -- streaming ingest --------------------------------------------------
     def push_updates(self, who, values, weights=None, mode: str = "set",
@@ -274,18 +556,22 @@ class Service:
 
     # -- the serving loop --------------------------------------------------
     def tick(self, cycles: Optional[int] = None) -> list:
-        """One dispatch: apply queued updates, run K cycles over all Q
+        """One dispatch: apply queued membership events, drain the
+        admission queue, apply queued updates, run K cycles over all Q
         slots in one jit call, observe, emit per-tenant telemetry.
 
         Returns this dispatch's telemetry records (active slots only).
         """
         k = cycles if cycles is not None else self.scfg.cycles_per_dispatch
+        self._apply_membership()
+        self._drain_admission()
         self._apply_ingest()
         params = self.registry.params
-        self.states = self._step(self.states, params, k=k)
+        topo = self.backend.topo_args()
+        self.states = self._step(self.states, params, topo, k=k)
         self.dispatches += 1
         self.cycles += k
-        return self._emit_telemetry(params)
+        return self._emit_telemetry(params, topo)
 
     def serve(self, dispatches: int) -> list:
         """Run ``dispatches`` ticks; returns the final tick's records."""
@@ -295,8 +581,8 @@ class Service:
         return records
 
     # -- observation -------------------------------------------------------
-    def _emit_telemetry(self, params: qmod.QueryParams) -> list:
-        acc, quiescent, want = self._observe(self.states, params)
+    def _emit_telemetry(self, params: qmod.QueryParams, topo) -> list:
+        acc, quiescent, want = self._observe(self.states, params, topo)
         msgs = self.backend.msgs_of(self.states)  # per-slot window counts
         self.states = self.backend.reset_msgs(self.states)
         acc, quiescent, want = (np.asarray(acc), np.asarray(quiescent),
@@ -315,6 +601,7 @@ class Service:
                 "region": int(want[slot]),
                 "msgs": sent,
                 "msgs_per_link": sent / self._edges,
+                "topo_version": self._applied_version,
             }
             self.telemetry.emit(rec)
             records.append(rec)

@@ -27,7 +27,8 @@ class TelemetrySink:
     ``quiescent``     bool  no pending messages / violations for this query
     ``region``        int   ground-truth region of the global average
     ``msgs``          int   sends by this query in this dispatch window
-    ``msgs_per_link`` float ditto, normalized per link
+    ``msgs_per_link`` float ditto, normalized per link (current edge count)
+    ``topo_version``  int   topology version the dispatch executed under
     """
 
     def __init__(self, path: Optional[Union[str, IO[str]]] = None,

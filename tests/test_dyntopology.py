@@ -1,0 +1,302 @@
+"""DynTopology: invariants, mutation ops, and behavior parity.
+
+The dynamic-membership contract is that a topology mutated *incrementally*
+(random joins/leaves/rewires within capacity) is indistinguishable — as
+far as the simulator's dynamics go — from a from-scratch ``from_edges``
+build of the same final graph: same live links, same messages on the same
+cycles, same decisions.  Slot *layout* may legitimately differ between
+the two constructions (incremental edits leave holes where packed builds
+don't), so state parity is asserted per-edge (canonical ``(i, j)`` keys)
+rather than per-slot, with message counts and decisions exact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # real hypothesis when installed (CI); seeded fallback shim otherwise
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import lss, sim, topology
+
+DynTopology = topology.DynTopology
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+
+def test_validate_accepts_generators():
+    for topo in (topology.grid(25), topology.chord(20),
+                 topology.barabasi_albert(30, m=2, seed=1)):
+        topo.validate()
+
+
+def test_validate_catches_corruption():
+    topo = topology.grid(16)
+    bad = topo._replace(nbr=topo.nbr.copy())
+    bad.nbr[0, 0] = 9  # break the involution
+    with pytest.raises(ValueError, match="involution"):
+        bad.validate()
+    bad2 = topo._replace(mask=topo.mask.copy())
+    bad2.mask[0, 0] = False  # one-sided mask edit: asymmetric + stale pad
+    with pytest.raises(ValueError):
+        bad2.validate()
+
+
+def test_drop_peers_scrubs_stale_entries():
+    """The bug the checker was built to catch: drop_peers used to leave
+    ``nbr``/``rev`` pointing at dead peers in masked-off slots."""
+    topo = topology.grid(25)
+    dead = np.zeros(25, bool)
+    dead[[3, 12, 17]] = True
+    dropped = topo.drop_peers(dead)
+    dropped.validate()  # padding convention holds after churn
+    assert not np.any(dropped.nbr[~dropped.mask])
+    assert not np.any(dropped.rev[~dropped.mask])
+    # And the surviving links are exactly the ones between live peers.
+    keep = topo.mask & ~dead[topo.nbr] & ~dead[:, None]
+    assert np.array_equal(dropped.mask, keep)
+
+
+# ---------------------------------------------------------------------------
+# mutation ops
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_ops_basic():
+    dyn = DynTopology.from_topology(topology.grid(16), n_cap=20, deg_cap=6,
+                                    strict=True)
+    v0 = dyn.version
+    p = dyn.add_peer()
+    assert p == 16 and dyn.present[p]
+    ki, kj = dyn.add_edge(p, 0)
+    assert dyn.has_edge(p, 0) and dyn.nbr[0, kj] == p
+    dyn.remove_edge(p, 0)
+    assert not dyn.has_edge(p, 0)
+    nbrs = dyn.remove_peer(5)
+    assert sorted(nbrs) == sorted(
+        topology.grid(16).nbr[5][topology.grid(16).mask[5]].tolist())
+    assert dyn.version > v0
+    kinds = [e.kind for e in dyn.events_since(v0)]
+    assert kinds[0] == "join" and kinds[-1] == "leave"
+    assert set(dyn.changed_rows_since(v0)) >= {0, 5, 16}
+
+
+def test_mutation_ops_reject_invalid():
+    dyn = DynTopology.from_topology(topology.grid(16), n_cap=17,
+                                    strict=True)
+    with pytest.raises(ValueError):
+        dyn.add_edge(0, 0)  # self loop
+    with pytest.raises(ValueError):
+        dyn.add_edge(0, 1)  # duplicate edge
+    with pytest.raises(ValueError):
+        dyn.remove_edge(0, 15)  # not an edge
+    with pytest.raises(ValueError):
+        dyn.add_peer(3)  # already present
+    with pytest.raises(ValueError):
+        dyn.remove_peer(16)  # absent
+    dyn.add_peer()
+    with pytest.raises(ValueError):
+        dyn.add_peer()  # n_cap exhausted
+    # deg_cap wall: corners of grid(16) hold 2 of deg_cap=4 links; linking
+    # corner 0 to corners 3 and 12 fills its row, corner 15 must bounce.
+    dyn2 = DynTopology.from_topology(topology.grid(16), strict=True)
+    dyn2.add_edge(0, 3)
+    dyn2.add_edge(0, 12)
+    with pytest.raises(ValueError, match="degree capacity"):
+        dyn2.add_edge(0, 15)
+
+
+def test_grow_preserves_graph_and_journal_floor():
+    dyn = DynTopology.from_topology(topology.grid(16), strict=True)
+    dyn.remove_peer(7)
+    grown = dyn.grow(n_cap=32, deg_cap=8)
+    grown.validate()
+    assert grown.edge_list() == dyn.edge_list()
+    assert grown.num_present == dyn.num_present
+    grown.add_peer(16)
+    grown.add_edge(16, 0)
+    grown.validate()
+
+
+def test_journal_compaction_forces_full_refresh():
+    dyn = DynTopology.from_topology(topology.grid(16), strict=True)
+    v0 = dyn.version
+    dyn.remove_edge(0, 1)
+    dyn.compact(dyn.version)
+    with pytest.raises(ValueError, match="journal floor"):
+        dyn.events_since(v0)
+    assert dyn.events_since(dyn.version) == []
+
+
+# ---------------------------------------------------------------------------
+# behavior parity: mutated == from-scratch rebuild
+# ---------------------------------------------------------------------------
+
+
+def _random_mutations(dyn: DynTopology, rng: np.random.Generator,
+                      ops: int) -> None:
+    """A join/leave/rewire sequence that stays within capacity."""
+    for _ in range(ops):
+        op = rng.integers(4)
+        try:
+            if op == 0:
+                dyn.add_peer()
+            elif op == 1:
+                cand = np.flatnonzero(dyn.present)
+                dyn.remove_peer(int(rng.choice(cand)))
+            elif op == 2:
+                cand = np.flatnonzero(dyn.present)
+                i, j = rng.choice(cand, size=2, replace=False)
+                dyn.add_edge(int(i), int(j))
+            else:
+                edges = dyn.edge_list()
+                if edges:
+                    dyn.remove_edge(*edges[rng.integers(len(edges))])
+        except ValueError:
+            pass  # capacity wall / duplicate — the op just doesn't apply
+
+
+def _run_core(topo_like, centers, x, cycles: int):
+    """Seeded core run on any Topology-like; returns (state, TopoArrays)."""
+    ta = lss.TopoArrays.from_topology(topo_like)
+    inputs = lss.wvs.from_vector(jnp.asarray(x),
+                                 jnp.ones((topo_like.n,), jnp.float32))
+    alive = getattr(topo_like, "present", None)
+    state = lss.init_state(ta, inputs, seed=0,
+                           alive=None if alive is None else alive.copy())
+    cfg = lss.LSSConfig()
+    for _ in range(cycles):
+        state, _ = lss.cycle(state, ta, centers, cfg)
+    return state, ta
+
+
+def _edge_state(state: lss.LSSState, topo) -> dict:
+    """Canonical per-edge view: slot layout independent."""
+    out = {}
+    out_m, out_c = np.asarray(state.out_m), np.asarray(state.out_c)
+    in_m, in_c = np.asarray(state.in_m), np.asarray(state.in_c)
+    pending = np.asarray(state.pending)
+    for i, k in zip(*np.nonzero(topo.mask)):
+        j = topo.nbr[i, k]
+        out[(int(i), int(j))] = (out_m[i, k], out_c[i, k], in_m[i, k],
+                                 in_c[i, k], bool(pending[i, k]))
+    return out
+
+
+def _assert_behavior_equal(a: lss.LSSState, ta, b: lss.LSSState, tb,
+                           atol=1e-6):
+    ea, eb = _edge_state(a, ta), _edge_state(b, tb)
+    assert ea.keys() == eb.keys()
+    for key, (om, oc, im, ic, p) in ea.items():
+        om2, oc2, im2, ic2, p2 = eb[key]
+        np.testing.assert_allclose(om, om2, atol=atol, err_msg=str(key))
+        np.testing.assert_allclose(oc, oc2, atol=atol, err_msg=str(key))
+        np.testing.assert_allclose(im, im2, atol=atol, err_msg=str(key))
+        np.testing.assert_allclose(ic, ic2, atol=atol, err_msg=str(key))
+        assert p == p2, key
+    np.testing.assert_allclose(a.x_m, b.x_m, atol=atol)
+    assert np.array_equal(np.asarray(a.alive), np.asarray(b.alive))
+    assert np.array_equal(np.asarray(a.last_send), np.asarray(b.last_send))
+    assert int(a.msgs) == int(b.msgs)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_mutated_matches_rebuild_core(seed):
+    """Property: any in-capacity join/leave/rewire sequence behaves
+    exactly like a from-scratch build of the final graph (core loop)."""
+    rng = np.random.default_rng(seed)
+    dyn = DynTopology.from_topology(topology.grid(36), n_cap=42, deg_cap=6,
+                                    strict=True)
+    _random_mutations(dyn, rng, ops=25)
+    dyn.validate()
+    fresh = dyn.rebuild()
+    fresh.validate()
+    assert dyn.edge_list() == fresh.edge_list()
+    assert np.array_equal(dyn.present, fresh.present)
+
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=42, seed=3))
+    x = sample(np.random.default_rng(7), 42)
+    sa, ta = _run_core(dyn, centers, x, cycles=12)
+    sb, tb = _run_core(fresh, centers, x, cycles=12)
+    _assert_behavior_equal(sa, dyn, sb, fresh)
+    acc_a, qa, _ = lss.metrics(sa, ta, centers)
+    acc_b, qb, _ = lss.metrics(sb, tb, centers)
+    assert float(acc_a) == float(acc_b) and bool(qa) == bool(qb)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_mutated_matches_rebuild_engine(seed):
+    """Same property through the sharded engine: engine-on-mutated equals
+    core-on-mutated (exact: same slot layout) equals core-on-rebuilt."""
+    from repro.engine import EngineConfig, ShardedLSS
+
+    rng = np.random.default_rng(seed)
+    dyn = DynTopology.from_topology(topology.grid(36), n_cap=40, deg_cap=6,
+                                    strict=True)
+    _random_mutations(dyn, rng, ops=20)
+    dyn.validate()
+
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=40, seed=5))
+    x = sample(np.random.default_rng(8), 40)
+    core_state, _ = _run_core(dyn, centers, x, cycles=10)
+
+    eng = ShardedLSS(dyn, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=3, cycles_per_dispatch=5))
+    inputs = lss.wvs.from_vector(jnp.asarray(x),
+                                 jnp.ones((40,), jnp.float32))
+    est = eng.init(inputs, seed=0, alive=dyn.present.copy())
+    est = eng.run(est, 10)
+    un = eng.to_lss_state(est)
+    np.testing.assert_allclose(un.out_m, core_state.out_m, atol=1e-6)
+    np.testing.assert_allclose(un.in_m, core_state.in_m, atol=1e-6)
+    assert np.array_equal(np.asarray(un.pending),
+                          np.asarray(core_state.pending))
+    assert np.array_equal(np.asarray(un.alive),
+                          np.asarray(core_state.alive))
+    assert int(un.msgs) == int(core_state.msgs)
+
+    fresh_state, _ = _run_core(dyn.rebuild(), centers, x, cycles=10)
+    _assert_behavior_equal(core_state, dyn, fresh_state, dyn.rebuild())
+
+
+# ---------------------------------------------------------------------------
+# zero recompiles within capacity
+# ---------------------------------------------------------------------------
+
+
+def test_membership_edit_does_not_recompile_core_cycle():
+    """TopoArrays are traced arguments of the jitted cycle: swapping in a
+    mutated topology's data must hit the existing executable."""
+    dyn = DynTopology.from_topology(topology.grid(25), n_cap=28, deg_cap=6)
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=28, seed=1))
+    x = sample(np.random.default_rng(2), 28)
+    ta = lss.TopoArrays.from_topology(dyn)
+    inputs = lss.wvs.from_vector(jnp.asarray(x), jnp.ones((28,), jnp.float32))
+    state = lss.init_state(ta, inputs, seed=0, alive=dyn.present.copy())
+    cfg = lss.LSSConfig()
+    state, _ = lss.cycle(state, ta, centers, cfg)  # warm the cache
+    if not hasattr(lss.cycle, "_cache_size"):
+        pytest.skip("jit cache stats unavailable on this jax")
+    warm = lss.cycle._cache_size()
+
+    p = dyn.add_peer()
+    dyn.add_edge(p, 0)
+    dyn.remove_edge(5, 6)
+    ta = lss.TopoArrays.from_topology(dyn)  # data-only swap
+    state = state._replace(alive=state.alive.at[p].set(True))
+    rows, slots = [], []
+    for e in dyn.events_since(0):
+        if e.kind in ("link", "unlink"):
+            rows += [e.a, e.b]
+            slots += [e.slot_a, e.slot_b]
+    state = lss.clear_slots(state, rows, slots)
+    for _ in range(3):
+        state, _ = lss.cycle(state, ta, centers, cfg)
+    assert lss.cycle._cache_size() == warm

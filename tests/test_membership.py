@@ -1,0 +1,566 @@
+"""Dynamic membership across engine and service layers.
+
+Engine contract: after any in-capacity membership delta,
+``repair_sharded_topo`` must equal a full ``shard_topology`` rebuild
+bitwise, and an engine whose tables were repaired mid-run must stay
+cycle-for-cycle identical to the core loop on the same mutated topology.
+Service contract: joins/leaves/rewires land at dispatch boundaries with
+zero recompiles, joining peers start from the paper's knowledge-init
+state, and a tenant's stream of telemetry is exactly what a hand-rolled
+single-query loop produces under the same membership schedule.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lss, regions, sim, topology, wvs
+from repro.engine import (EngineConfig, ShardedLSS, make_partition,
+                          repair_sharded_topo, shard_topology)
+from repro.service import QuerySpec, Service, ServiceConfig
+
+DynTopology = topology.DynTopology
+
+
+def _mutate(dyn, rng, ops):
+    for _ in range(ops):
+        op = rng.integers(4)
+        try:
+            if op == 0:
+                dyn.add_peer()
+            elif op == 1:
+                dyn.remove_peer(int(rng.choice(np.flatnonzero(dyn.present))))
+            elif op == 2:
+                cand = np.flatnonzero(dyn.present)
+                i, j = rng.choice(cand, size=2, replace=False)
+                dyn.add_edge(int(i), int(j))
+            else:
+                edges = dyn.edge_list()
+                if edges:
+                    dyn.remove_edge(*edges[rng.integers(len(edges))])
+        except ValueError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# incremental halo repair == full repartition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_incremental_repair_equals_full_rebuild(shards):
+    rng = np.random.default_rng(11)
+    dyn = DynTopology.from_topology(topology.grid(49), n_cap=56, deg_cap=6,
+                                    strict=True)
+    part = make_partition(dyn, shards)
+    st = shard_topology(dyn, part)
+    ver = dyn.version
+    for step in range(60):
+        _mutate(dyn, rng, 1)
+        st = repair_sharded_topo(st, dyn, dyn.changed_rows_since(ver))
+        ver = dyn.version
+        full = shard_topology(dyn, part, halo_width=st.halo_width)
+        for name in ("mask", "rev", "tgt_shard", "tgt_row", "tgt_pos",
+                     "intra"):
+            assert np.array_equal(getattr(st, name), getattr(full, name)), \
+                (step, name)
+        for a, b in zip(st.halo, full.halo):
+            assert np.array_equal(a, b), step
+        assert st.num_edges == full.num_edges == dyn.num_edges
+
+
+def test_repair_regrows_halo_width_on_overflow():
+    """Cross-shard edge churn past the halo headroom regrows the tables
+    (shape change) and still matches the full rebuild exactly."""
+    dyn = DynTopology.from_topology(topology.grid(16), deg_cap=6,
+                                    strict=True)
+    part = make_partition(dyn, 2, method="stride")
+    st = shard_topology(dyn, part)
+    H0 = st.halo_width
+    ver = dyn.version
+    # Stride splits rows 0..7 | 8..15; every new (low, high) pair is a
+    # fresh cut edge, quickly overflowing the tight initial width.
+    added = 0
+    for i in range(8):
+        for j in range(8, 16):
+            if not dyn.has_edge(i, j) and dyn.degrees[i] < 6 \
+                    and dyn.degrees[j] < 6:
+                dyn.add_edge(i, j)
+                added += 1
+    assert added > 0
+    st = repair_sharded_topo(st, dyn, dyn.changed_rows_since(ver))
+    assert st.halo_width > H0  # regrown
+    full = shard_topology(dyn, part, halo_width=st.halo_width)
+    for a, b in zip(st.halo, full.halo):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# engine: membership mid-run, cycle-for-cycle vs core
+# ---------------------------------------------------------------------------
+
+
+def test_engine_membership_midrun_matches_core():
+    dyn = DynTopology.from_topology(topology.grid(36), n_cap=40, deg_cap=6,
+                                    strict=True)
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=40, seed=2))
+    x = sample(np.random.default_rng(3), 40)
+    inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((40,), jnp.float32))
+    cfg = lss.LSSConfig()
+
+    eng = ShardedLSS(dyn, centers, cfg,
+                     EngineConfig(num_shards=3, cycles_per_dispatch=2,
+                                  halo_slack=2.0))
+    est = eng.init(inputs, seed=0, alive=dyn.present.copy())
+    ta = lss.TopoArrays.from_topology(dyn)
+    core = lss.init_state(ta, inputs, seed=0, alive=dyn.present.copy())
+
+    rng = np.random.default_rng(4)
+    ver = dyn.version
+    for round_ in range(6):
+        # Membership delta between dispatches, mirrored on both paths.
+        _mutate(dyn, rng, 3)
+        events = dyn.events_since(ver)
+        ver = dyn.version
+        rows, slots = [], []
+        joins, leaves = [], []
+        for ev in events:
+            if ev.kind in ("link", "unlink"):
+                rows += [ev.a, ev.b]
+                slots += [ev.slot_a, ev.slot_b]
+            elif ev.kind == "join":
+                joins.append(ev.a)
+            else:
+                leaves.append(ev.a)
+        eng.apply_membership(dyn)
+        ta = lss.TopoArrays.from_topology(dyn)
+        if rows:
+            est = eng.clear_slots(est, rows, slots)
+            core = lss.clear_slots(core, rows, slots)
+        for p in leaves:
+            est = eng.set_alive(est, [p], False)
+            core = core._replace(alive=core.alive.at[p].set(False))
+        for p in joins:
+            est = eng.set_alive(est, [p], True)
+            core = core._replace(alive=core.alive.at[p].set(True))
+
+        est = eng.run(est, 4)
+        for _ in range(4):
+            core, _ = lss.cycle(core, ta, centers, cfg)
+        un = eng.to_lss_state(est)
+        np.testing.assert_allclose(un.out_m, core.out_m, atol=1e-6)
+        np.testing.assert_allclose(un.in_m, core.in_m, atol=1e-6)
+        np.testing.assert_allclose(un.out_c, core.out_c, atol=1e-6)
+        assert np.array_equal(np.asarray(un.pending),
+                              np.asarray(core.pending))
+        assert np.array_equal(np.asarray(un.alive), np.asarray(core.alive))
+        assert np.array_equal(np.asarray(un.last_send),
+                              np.asarray(core.last_send))
+        assert int(un.msgs) == int(core.msgs), round_
+        acc_e, q_e, _ = eng.metrics(est)
+        acc_c, q_c, _ = lss.metrics(core, ta, centers)
+        assert float(acc_e) == float(acc_c) and bool(q_e) == bool(q_c)
+
+
+def test_engine_membership_zero_recompile_within_headroom():
+    dyn = DynTopology.from_topology(topology.grid(25), n_cap=28, deg_cap=6)
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=28, seed=1))
+    x = sample(np.random.default_rng(5), 28)
+    inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((28,), jnp.float32))
+    eng = ShardedLSS(dyn, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=2, cycles_per_dispatch=4,
+                                  halo_slack=2.0))
+    est = eng.init(inputs, seed=0, alive=dyn.present.copy())
+    est = eng.run(est, 4)  # warm
+    if not hasattr(eng._run_jit, "_cache_size"):
+        pytest.skip("jit cache stats unavailable on this jax")
+    warm = eng._run_jit._cache_size()
+
+    p = dyn.add_peer()
+    dyn.add_edge(p, 0)
+    dyn.add_edge(p, 24)
+    dyn.remove_peer(12)
+    reshaped = eng.apply_membership(dyn)
+    assert not reshaped  # within halo headroom: data-only
+    est = eng.set_alive(est, [p], True)
+    est = eng.set_alive(est, [12], False)
+    est = eng.run(est, 8)
+    assert eng._run_jit._cache_size() == warm
+
+
+def test_device_tables_do_not_alias_mutable_buffers():
+    """CPU jax may zero-copy-alias numpy memory on transfer; DynTopology
+    mutates its numpy arrays in place.  A device-side table built before
+    a mutation must keep its pre-mutation contents — an aliased buffer
+    lets asynchronously executing dispatches read post-mutation data
+    (a real, nondeterministic corruption this test pins down)."""
+    dyn = DynTopology.from_topology(topology.grid(16), deg_cap=6)
+    ta = lss.TopoArrays.from_topology(dyn)
+    mask0 = np.asarray(ta.mask).copy()
+    nbr0 = np.asarray(ta.nbr).copy()
+    dyn.remove_edge(0, 1)
+    dyn.add_edge(0, 5)
+    assert np.array_equal(np.asarray(ta.mask), mask0)
+    assert np.array_equal(np.asarray(ta.nbr), nbr0)
+
+
+def test_collective_membership_parity(subproc):
+    """Membership delta mid-run through shard_map + all_to_all on a real
+    4-device mesh stays cycle-for-cycle identical to the core loop."""
+    out = subproc("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import lss, sim, topology, wvs
+from repro.engine import ShardedLSS, EngineConfig
+
+dyn = topology.DynTopology.from_topology(topology.grid(64), n_cap=68,
+                                         deg_cap=6)
+centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=68, seed=0))
+x = sample(np.random.default_rng(1), dyn.n)
+inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((dyn.n,), jnp.float32))
+cfg = lss.LSSConfig()
+mesh = jax.make_mesh((4,), ("shards",))
+eng = ShardedLSS(dyn, centers, cfg,
+                 EngineConfig(num_shards=4, cycles_per_dispatch=2,
+                              halo_slack=2.0)).use_mesh(mesh, "shards")
+est = eng.init(inputs, seed=0, alive=dyn.present.copy())
+ta = lss.TopoArrays.from_topology(dyn)
+core = lss.init_state(ta, inputs, seed=0, alive=dyn.present.copy())
+est = eng.run(est, 6)
+for _ in range(6):
+    core, _ = lss.cycle(core, ta, centers, cfg)
+
+ver = dyn.version
+p = dyn.add_peer(); dyn.add_edge(p, 0); dyn.add_edge(p, 37)
+dyn.remove_peer(22)
+rows, slots = [], []
+for ev in dyn.events_since(ver):
+    if ev.kind in ("link", "unlink"):
+        rows += [ev.a, ev.b]; slots += [ev.slot_a, ev.slot_b]
+eng.apply_membership(dyn)
+ta = lss.TopoArrays.from_topology(dyn)
+est = eng.clear_slots(est, rows, slots)
+core = lss.clear_slots(core, rows, slots)
+est = eng.set_alive(est, [p], True)
+core = core._replace(alive=core.alive.at[p].set(True))
+est = eng.set_alive(est, [22], False)
+core = core._replace(alive=core.alive.at[22].set(False))
+
+est = eng.run(est, 8)
+for _ in range(8):
+    core, _ = lss.cycle(core, ta, centers, cfg)
+un = eng.to_lss_state(est)
+assert np.allclose(un.out_m, core.out_m, atol=1e-6)
+assert np.allclose(un.in_m, core.in_m, atol=1e-6)
+assert np.array_equal(np.asarray(un.pending), np.asarray(core.pending))
+assert np.array_equal(np.asarray(un.alive), np.asarray(core.alive))
+assert int(un.msgs) == int(core.msgs)
+print("COLLECTIVE_MEMBERSHIP_OK")
+""", n_devices=4)
+    assert "COLLECTIVE_MEMBERSHIP_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# service: membership at dispatch boundaries
+# ---------------------------------------------------------------------------
+
+
+def _service_problem(n_cap, seed=0):
+    centers, sample, _, _ = sim.make_problem(
+        sim.ProblemSpec(n=n_cap, seed=seed))
+    x = sample(np.random.default_rng(seed + 1), n_cap)
+    return np.asarray(centers), x
+
+
+@pytest.mark.parametrize("backend", ["core", "engine"])
+def test_service_membership_parity_with_manual_loop(backend):
+    """One tenant, joins/leaves/links on a schedule: the service's
+    per-dispatch records and full state match a hand-rolled core loop
+    applying the same events at the same boundaries."""
+    n_cap = 40
+    base = topology.grid(36)
+    dyn = DynTopology.from_topology(base, n_cap=n_cap, deg_cap=6,
+                                    strict=True)
+    centers, x = _service_problem(n_cap, seed=4)
+    k = 3
+    svc = Service(dyn, ServiceConfig(capacity=3, k_max=3, d=2,
+                                     cycles_per_dispatch=k, backend=backend,
+                                     engine_shards=2))
+    qid = svc.admit(QuerySpec(region=regions.VoronoiRegions(
+        jnp.asarray(centers)), inputs=x, seed=0))
+
+    # The reference: a second DynTopology fed the same schedule by hand.
+    ref = DynTopology.from_topology(base, n_cap=n_cap, deg_cap=6)
+    ta = lss.TopoArrays.from_topology(ref)
+    inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((n_cap,), jnp.float32))
+    st = lss.init_state(ta, inputs, seed=0, alive=ref.present.copy())
+    cfg = lss.LSSConfig()
+    decide = lambda v: regions.decide_voronoi(v, jnp.asarray(centers))
+
+    # dispatch index -> [(method, args, join value)]
+    schedule = {
+        1: [("join", (36,), np.array([0.5, -0.25], np.float32)),
+            ("link", (36, 0), None), ("link", (36, 7), None)],
+        2: [("leave", (14,), None)],
+        4: [("join", (37,), None), ("link", (37, 36), None),
+            ("unlink", (0, 1), None)],
+    }
+    for disp in range(6):
+        events = schedule.get(disp, [])
+        for kind, args, value in events:
+            if kind == "join":
+                svc.join_peer(args[0], value=value)
+            elif kind == "leave":
+                svc.leave_peer(*args)
+            elif kind == "link":
+                svc.link_peers(*args)
+            else:
+                svc.unlink_peers(*args)
+        (rec,) = svc.tick()
+
+        # Mirror on the reference loop.
+        ver = ref.version
+        for kind, args, value in events:
+            if kind == "join":
+                ref.add_peer(args[0])
+            elif kind == "leave":
+                ref.remove_peer(*args)
+            elif kind == "link":
+                ref.add_edge(*args)
+            else:
+                ref.remove_edge(*args)
+        evs = ref.events_since(ver)
+        if evs:
+            ta = lss.TopoArrays.from_topology(ref)
+            rows, slots = [], []
+            for ev in evs:
+                if ev.kind in ("link", "unlink"):
+                    rows += [ev.a, ev.b]
+                    slots += [ev.slot_a, ev.slot_b]
+            if rows:
+                st = lss.clear_slots(st, rows, slots)
+            for kind, args, value in events:
+                if kind == "join":
+                    p = args[0]
+                    v = (np.zeros(2, np.float32) if value is None else value)
+                    st = st._replace(
+                        alive=st.alive.at[p].set(True),
+                        x_m=st.x_m.at[p].set(jnp.asarray(v)),
+                        x_c=st.x_c.at[p].set(1.0),
+                        last_send=st.last_send.at[p].set(-(10 ** 6)))
+                elif kind == "leave":
+                    st = st._replace(alive=st.alive.at[args[0]].set(False))
+        for _ in range(k):
+            st, _ = lss.cycle(st, ta, centers=jnp.asarray(centers), cfg=cfg)
+
+        snap = svc.snapshot(qid)
+        np.testing.assert_allclose(snap.out_m, st.out_m, atol=1e-5)
+        np.testing.assert_allclose(snap.in_m, st.in_m, atol=1e-5)
+        np.testing.assert_allclose(snap.x_m, st.x_m, atol=1e-6)
+        assert np.array_equal(np.asarray(snap.alive), np.asarray(st.alive))
+        assert np.array_equal(np.asarray(snap.pending),
+                              np.asarray(st.pending))
+        assert np.array_equal(np.asarray(snap.last_send),
+                              np.asarray(st.last_send))
+        acc, q, _ = lss.metrics(st, ta, jnp.asarray(centers))
+        assert rec["accuracy"] == float(acc)
+        assert rec["quiescent"] == bool(q)
+        assert rec["topo_version"] == ref.version
+    assert svc.total_msgs(qid) == int(st.msgs)
+
+
+def test_service_membership_zero_recompile_and_padding_silence():
+    """Joins/leaves at boundaries must not recompile the batched step and
+    must leave padding slots perfectly silent."""
+    n_cap = 30
+    dyn = DynTopology.from_topology(topology.grid(25), n_cap=n_cap,
+                                    deg_cap=6)
+    centers, x = _service_problem(n_cap, seed=2)
+    svc = Service(dyn, ServiceConfig(capacity=4, k_max=3, d=2,
+                                     cycles_per_dispatch=2))
+    svc.admit(QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
+                        inputs=x, seed=0))
+    svc.tick()  # warm
+    has_stats = hasattr(svc._step, "_cache_size")
+    warm = svc._step._cache_size() if has_stats else None
+
+    p = svc.join_peer(value=[0.1, 0.2])
+    svc.link_peers(p, 0)
+    svc.tick()
+    svc.leave_peer(3)
+    svc.tick()
+    assert svc.topo_version == dyn.version
+    if has_stats:
+        assert svc._step._cache_size() == warm
+    # Padding slots: still zero messages, zero pending.
+    assert all(int(m) == 0 for m in svc.backend.msgs_of(svc.states)[1:])
+    assert not bool(jnp.any(svc.states.pending[1:]))
+
+
+def test_service_membership_preserves_other_tenants_convergence():
+    """A membership event must not reset in-flight tenants: their state
+    carries over, and they re-converge to a genuine stopping state."""
+    n_cap = 40
+    dyn = DynTopology.from_topology(topology.grid(36), n_cap=n_cap,
+                                    deg_cap=6)
+    centers, x = _service_problem(n_cap, seed=6)
+    svc = Service(dyn, ServiceConfig(capacity=3, k_max=3, d=2,
+                                     cycles_per_dispatch=4))
+    qa = svc.admit(QuerySpec(region=regions.VoronoiRegions(
+        jnp.asarray(centers)), inputs=x, seed=0))
+    for _ in range(10):
+        (rec,) = svc.tick()
+        if rec["quiescent"]:
+            break
+    assert rec["quiescent"]
+    cycles_before = rec["t"]
+
+    p = svc.join_peer(value=x[36])
+    svc.link_peers(p, 5)
+    svc.link_peers(p, 11)
+    recs = [svc.tick()[0] for _ in range(12)]
+    # The tenant kept its timeline (no reset to t=0)...
+    assert recs[0]["t"] == cycles_before + 4
+    assert recs[0]["topo_version"] == dyn.version
+    # ...and re-converged around the new membership.
+    assert recs[-1]["quiescent"] and recs[-1]["accuracy"] == 1.0
+
+
+def test_membership_requires_dyn_topology():
+    topo = topology.grid(25)
+    centers, x = _service_problem(25, seed=1)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2))
+    with pytest.raises(RuntimeError, match="DynTopology"):
+        svc.join_peer()
+
+
+def test_membership_drain_survives_bad_event():
+    """A queued event that fails at the boundary (here: raced by a direct
+    DynTopology mutation) is dropped and recorded — the events queued
+    behind it must still apply, with their join values intact."""
+    dyn = DynTopology.from_topology(topology.grid(16), n_cap=18, deg_cap=6)
+    centers, x = _service_problem(18, seed=1)
+    svc = Service(dyn, ServiceConfig(capacity=2, k_max=3, d=2,
+                                     cycles_per_dispatch=1))
+    qa = svc.admit(_spec(centers, x, 0))
+    svc.link_peers(0, 5)
+    dyn.add_edge(0, 5)  # race: the queued link is now a duplicate
+    p = svc.join_peer(value=[2.5, -1.5])
+    svc.link_peers(p, 3)
+    svc.tick()
+    assert len(svc.membership.failures) == 1
+    ev, msg = svc.membership.failures[0]
+    assert ev.kind == "link" and "exists" in msg
+    # The join behind the bad event landed, knowledge-init value intact.
+    assert dyn.present[p] and dyn.has_edge(p, 3)
+    snap = svc.snapshot(qa)
+    np.testing.assert_allclose(np.asarray(snap.x_m)[p], [2.5, -1.5])
+    assert bool(np.asarray(snap.alive)[p])
+    # And eager validation catches the plain duplicate at the call site.
+    with pytest.raises(ValueError, match="exists"):
+        svc.link_peers(p, 3)
+    with pytest.raises(ValueError, match="exists"):
+        svc.link_peers(0, 1)  # pre-existing grid edge
+
+
+def test_membership_queue_validates_eagerly():
+    dyn = DynTopology.from_topology(topology.grid(16), n_cap=18)
+    centers, x = _service_problem(18, seed=1)
+    svc = Service(dyn, ServiceConfig(capacity=2, k_max=3, d=2))
+    p = svc.join_peer()
+    assert p == 16
+    with pytest.raises(ValueError):
+        svc.join_peer(p)  # row already claimed by the queued join
+    q = svc.join_peer()
+    assert q == 17
+    with pytest.raises(ValueError):
+        svc.join_peer()  # capacity exhausted including queued joins
+    svc.leave_peer(3)
+    with pytest.raises(ValueError):
+        svc.link_peers(3, 0)  # 3 is leaving
+    with pytest.raises(ValueError):
+        svc.join_peer(value=[1.0, 2.0, 3.0])  # wrong d
+
+
+# ---------------------------------------------------------------------------
+# admission backpressure
+# ---------------------------------------------------------------------------
+
+
+def _spec(centers, x, seed=0):
+    return QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
+                     inputs=x, seed=seed)
+
+
+def test_admission_queue_drains_as_slots_free():
+    topo = topology.grid(25)
+    centers, x = _service_problem(25, seed=3)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=1,
+                                      admission_queue=3))
+    a = svc.admit(_spec(centers, x, 0))
+    b = svc.admit(_spec(centers, x, 1))
+    c = svc.admit(_spec(centers, x, 2))  # queued (FIFO head)
+    d = svc.admit(_spec(centers, x, 3))  # queued
+    assert svc.admission_status(a) == "active"
+    assert svc.admission_status(c) == "queued"
+    assert svc.admission_status(d) == "queued"
+    svc.tick()  # queued specs stay queued while slots are full
+    assert svc.admission_status(c) == "queued"
+
+    svc.retire(a)  # frees a slot -> c activates immediately, FIFO order
+    assert svc.admission_status(c) == "active"
+    assert svc.admission_status(d) == "queued"
+    svc.retire(b)
+    assert svc.admission_status(d) == "active"
+    (r1, r2) = sorted(svc.tick(), key=lambda r: r["query"])
+    assert {r1["query"], r2["query"]} == {c, d}
+    # Lifecycle statuses stay queryable after the slot is gone.
+    assert svc.admission_status(a) == "retired"
+    with pytest.raises(KeyError):
+        svc.admission_status("nope")
+    # A queued admission that is retired before activation is cancelled.
+    e = svc.admit(_spec(centers, x, 4))
+    f = svc.admit(_spec(centers, x, 5))
+    assert svc.admission_status(f) == "queued"
+    svc.retire(f)
+    assert svc.admission_status(f) == "cancelled"
+    del e
+
+
+def test_admission_overflow_policies():
+    topo = topology.grid(25)
+    centers, x = _service_problem(25, seed=3)
+    svc = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                      admission_queue=1,
+                                      admission_overflow="reject"))
+    svc.admit(_spec(centers, x, 0))
+    svc.admit(_spec(centers, x, 1))  # queued
+    with pytest.raises(RuntimeError, match="admission"):
+        svc.admit(_spec(centers, x, 2))  # queue full, reject policy
+
+    svc2 = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                       admission_queue=1,
+                                       admission_overflow="evict-oldest"))
+    svc2.admit(_spec(centers, x, 0))
+    old = svc2.admit(_spec(centers, x, 1))
+    new = svc2.admit(_spec(centers, x, 2))  # evicts `old`
+    assert svc2.admission_status(old) == "evicted"
+    assert svc2.admission_status(new) == "queued"
+
+    # Duplicate ids are rejected across slots AND queue.
+    with pytest.raises(ValueError):
+        svc2.admit(_spec(centers, x, 3), query_id=new)
+
+
+def test_admission_queue_rejects_bad_specs_eagerly():
+    topo = topology.grid(25)
+    centers, x = _service_problem(25, seed=3)
+    svc = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                      admission_queue=4))
+    svc.admit(_spec(centers, x, 0))
+    with pytest.raises(ValueError):
+        svc.admit(QuerySpec(region=regions.VoronoiRegions(
+            jnp.asarray(centers)), inputs=x[:10]))  # wrong peer count
+    with pytest.raises(ValueError):
+        svc.admit(QuerySpec(region=regions.VoronoiRegions(
+            jnp.asarray(centers)), inputs=np.zeros((25, 5), np.float32)))

@@ -210,13 +210,14 @@ def test_admission_lifecycle_and_no_recompile():
     topo = topology.grid(25)
     centers, x = _problem(topo, seed=1)
     svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
-                                      cycles_per_dispatch=2))
+                                      cycles_per_dispatch=2,
+                                      admission_queue=0))  # fail fast
     spec = QuerySpec(region=regions.VoronoiRegions(centers), inputs=x)
     a = svc.admit(spec)
     b = svc.admit(QuerySpec(region=regions.HalfspaceRegions(
         w=jnp.asarray([1.0, 0.0]), b=jnp.asarray(0.0)), inputs=x))
     with pytest.raises(RuntimeError):
-        svc.admit(spec)  # full
+        svc.admit(spec)  # full, and queueing disabled
     svc.tick()
     compiles_after_warm = None
     if hasattr(svc._step, "_cache_size"):

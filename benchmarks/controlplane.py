@@ -1,0 +1,147 @@
+"""Control-plane benchmarks: SLO attainment under contention + epochs.
+
+Two row families:
+
+* ``contention/*`` — a capacity-Q service facing 3Q tenants, a quarter
+  of them high-priority with accuracy-within-T SLOs arriving AFTER the
+  low-priority crowd has taken every slot.  The same workload runs under
+  the FIFO scheduler and under the priority scheduler (preemption +
+  violation-aware aging); ``derived`` reports high-priority SLO
+  attainment for each — the priority policy must measurably beat FIFO.
+* ``rebalance/*`` — an engine-backend service under sustained churn: the
+  drift metric (cut-fraction increase since the partition epoch) climbs
+  as joins/rewires ignore shard geometry; a re-partition epoch restores
+  the edge-cut quality.  Rows report the cut fraction before/after, the
+  epoch's wall cost, and the steady-state dispatch cost around it.
+
+Wired into ``benchmarks/run.py`` as a JSON suite: ``BENCH_controlplane.
+json`` is a committed baseline and ``--check`` / ``make bench-check``
+gates regressions alongside BENCH_engine/BENCH_service.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import regions, sim, topology
+from repro.service import (ControlPlaneConfig, QuerySpec, SLOSpec, Service,
+                           ServiceConfig)
+
+from . import common
+from .common import Row
+from .membership_churn import _EventGen, _dyn_grid
+
+
+def _tenants(n, q, rng):
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=n, seed=3))
+    return [
+        QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
+                  inputs=sample(rng, n), seed=i)
+        for i in range(q)
+    ]
+
+
+def _contention(n: int, q: int, dispatches: int, scheduler: str):
+    """3Q tenants on Q slots; returns (attainment_hi, wall_per_dispatch)."""
+    side = int(round(n ** 0.5))
+    topo = topology.grid(side * side)
+    n = topo.n
+    rng = np.random.default_rng(5)
+    base = _tenants(n, 3 * q, rng)
+    slo = SLOSpec(target_accuracy=0.9, within_cycles=16)
+    cp = ControlPlaneConfig(scheduler=scheduler, preempt=True, aging=0.1,
+                            violation_boost=0.5, preempt_margin=1.0)
+    svc = Service(topo, ServiceConfig(
+        capacity=q, k_max=3, d=2, cycles_per_dispatch=4,
+        admission_queue=3 * q, control=cp))
+
+    import dataclasses
+    lows = [svc.admit(dataclasses.replace(s, priority=0))
+            for s in base[:2 * q]]  # fill every slot + half the queue
+    svc.tick()  # lows occupy all slots
+    highs = [svc.admit(dataclasses.replace(s, priority=5, slo=slo))
+             for s in base[2 * q:3 * q - q // 2]]
+    t0 = time.perf_counter()
+    for _ in range(dispatches):
+        svc.tick()
+    dt = time.perf_counter() - t0
+    att = float(np.mean([svc.slo.attainment(h) for h in highs]))
+    del lows
+    return att, dt / dispatches * 1e6
+
+
+def _rebalance(n: int, shards: int, q: int, churn_dispatches: int,
+               rate: int):
+    """Churn -> drift -> forced epoch; returns the numbers that matter."""
+    dyn = _dyn_grid(n, spare_frac=0.3)
+    rng = np.random.default_rng(9)
+    tenants = _tenants(dyn.n, q, rng)
+    svc = Service(dyn, ServiceConfig(
+        capacity=q, k_max=3, d=2, cycles_per_dispatch=4, backend="engine",
+        engine_shards=shards))
+    for s in tenants:
+        svc.admit(s)
+    svc.tick()  # warm
+
+    gen = _EventGen(dyn, np.random.default_rng(11))
+    t0 = time.perf_counter()
+    for _ in range(churn_dispatches):
+        for _ in range(rate):
+            gen.emit(svc)
+        svc.tick()
+    churn_us = (time.perf_counter() - t0) / churn_dispatches * 1e6
+
+    cut_before = svc.backend.cut_frac()
+    drift = svc.drift()
+    t0 = time.perf_counter()
+    ev = svc.rebalance_now()
+    epoch_ms = (time.perf_counter() - t0) * 1e3
+    cut_after = ev["cut_frac"]
+
+    t0 = time.perf_counter()
+    for _ in range(2):
+        svc.tick()  # includes the one post-epoch recompile, if any
+    post_us = (time.perf_counter() - t0) / 2 * 1e6
+    return {
+        "cut_before": cut_before, "cut_after": cut_after, "drift": drift,
+        "epoch_ms": epoch_ms, "churn_us_per_dispatch": churn_us,
+        "post_us_per_dispatch": post_us,
+    }
+
+
+def run(full: bool = False):
+    rows = []
+
+    # -- contention: priority scheduling vs FIFO --------------------------
+    n = common.clamp_n(1_024)
+    q = 4 if common.SMOKE else 8
+    dispatches = 4 if common.SMOKE else 10
+    atts = {}
+    for scheduler in ("fifo", "priority"):
+        att, us = _contention(n, q, dispatches, scheduler)
+        atts[scheduler] = att
+        extra = {"n": n, "q": q, "scheduler": scheduler,
+                 "attainment_hi": att}
+        derived = f"hi-prio SLO attainment={att:.2f}"
+        if scheduler == "priority":
+            extra["attainment_gain"] = att - atts["fifo"]
+            derived += f" (gain vs fifo {extra['attainment_gain']:+.2f})"
+        rows.append(Row(f"controlplane/contention/{scheduler}", us,
+                        derived, extra=extra))
+
+    # -- rebalance epoch: drift -> restored edge cut ----------------------
+    n = common.clamp_n(2_500)
+    shards = 4 if common.SMOKE else 8
+    q = 2 if common.SMOKE else 4
+    churn = 4 if common.SMOKE else 10
+    rate = 16 if common.SMOKE else 64
+    res = _rebalance(n, shards, q, churn, rate)
+    rows.append(Row(
+        f"controlplane/rebalance/n{n}", res["churn_us_per_dispatch"],
+        f"cut {res['cut_before']:.3f}->{res['cut_after']:.3f} "
+        f"drift={res['drift']:.3f} epoch={res['epoch_ms']:.0f}ms",
+        extra={"n": n, "shards": shards, "q": q, "rate": rate, **res}))
+    return rows

@@ -97,9 +97,82 @@ def _bench_repair(n: int, shards: int, events: int):
     return t_inc / events * 1e6, t_full / events * 1e6
 
 
+class _EventGen:
+    """O(deg)-per-event churn generator against the SERVICE's queue API.
+
+    Maintains its own present-peer and edge books incrementally, so
+    generating an event never scans the topology (``edge_list()`` is
+    O(E), ``flatnonzero(present)`` O(n) — at churn rates >= 10^2
+    events/dispatch those benchmark-side scans would swamp the boundary
+    cost being measured).  Books track the *queued* world: an event the
+    service accepted is reflected immediately.
+    """
+
+    def __init__(self, dyn, rng):
+        self.dyn = dyn
+        self.rng = rng
+        self.present = [int(p) for p in np.flatnonzero(dyn.present)]
+        self.pos = {p: i for i, p in enumerate(self.present)}
+        self.edges = dyn.edge_list()
+        self.eidx = {e: i for i, e in enumerate(self.edges)}
+
+    def _drop_present(self, p):
+        i = self.pos.pop(p)
+        last = self.present.pop()
+        if last != p:
+            self.present[i] = last
+            self.pos[last] = i
+
+    def _drop_edge(self, key):
+        i = self.eidx.pop(key)
+        last = self.edges.pop()
+        if last != key:
+            self.edges[i] = last
+            self.eidx[last] = i
+
+    def _add_edge(self, i, j):
+        key = (min(i, j), max(i, j))
+        if key not in self.eidx:
+            self.eidx[key] = len(self.edges)
+            self.edges.append(key)
+
+    def emit(self, svc) -> bool:
+        """One random join/leave/rewire through the service; True when an
+        event was queued."""
+        rng = self.rng
+        op = rng.integers(3)
+        try:
+            if op == 0:
+                p = int(svc.join_peer())
+                partner = self.present[rng.integers(len(self.present))]
+                svc.link_peers(p, partner)
+                self.present.append(p)
+                self.pos[p] = len(self.present) - 1
+                self._add_edge(p, partner)
+            elif op == 1:
+                p = self.present[rng.integers(len(self.present))]
+                # Queue-time neighbor read: O(deg_cap).
+                nbrs = [int(j) for j in self.dyn.nbr[p][self.dyn.mask[p]]]
+                svc.leave_peer(p)
+                self._drop_present(p)
+                for j in nbrs:
+                    key = (min(p, j), max(p, j))
+                    if key in self.eidx:
+                        self._drop_edge(key)
+            else:
+                if not self.edges:
+                    return False
+                key = self.edges[rng.integers(len(self.edges))]
+                svc.unlink_peers(*key)
+                self._drop_edge(key)
+        except (ValueError, RuntimeError):
+            return False
+        return True
+
+
 def _bench_serve(n: int, q: int, dispatches: int, rate: int, k: int = 8):
     """Wall/msgs for a Q-tenant service under `rate` events/dispatch."""
-    dyn = _dyn_grid(n)
+    dyn = _dyn_grid(n, spare_frac=0.2)
     spec = sim.ProblemSpec(n=dyn.n, seed=0)
     centers, sample, _, _ = sim.make_problem(spec)
     rng_x = np.random.default_rng(1)
@@ -112,27 +185,13 @@ def _bench_serve(n: int, q: int, dispatches: int, rate: int, k: int = 8):
             jnp.asarray(centers)), inputs=sample(rng_x, dyn.n), seed=i))
     svc.tick()  # warm the compile before timing
 
-    rng = np.random.default_rng(2)
+    gen = _EventGen(dyn, np.random.default_rng(2))
     msgs = 0
+    events = 0
     t0 = time.perf_counter()
     for _ in range(dispatches):
         for _ in range(rate):
-            op = rng.integers(3)
-            try:
-                if op == 0 and dyn.num_present < dyn.n_cap:
-                    free = int(np.flatnonzero(~dyn.present)[0])
-                    p = svc.join_peer(free)
-                    svc.link_peers(p, int(rng.choice(
-                        np.flatnonzero(dyn.present))))
-                elif op == 1:
-                    svc.leave_peer(int(rng.choice(
-                        np.flatnonzero(dyn.present))))
-                else:
-                    edges = dyn.edge_list()
-                    if edges:
-                        svc.unlink_peers(*edges[rng.integers(len(edges))])
-            except (ValueError, RuntimeError):
-                continue
+            events += gen.emit(svc)
         records = svc.tick()
         msgs += sum(r["msgs"] for r in records)
     dt = time.perf_counter() - t0
@@ -143,6 +202,7 @@ def _bench_serve(n: int, q: int, dispatches: int, rate: int, k: int = 8):
         / max(q, 1),
         "peers_per_s": dyn.num_present * q * cycles / dt,
         "topo_version": dyn.version,
+        "events": events,
     }
 
 
@@ -165,14 +225,28 @@ def run(full: bool = False):
             rows.pop()  # clamped sizes collapse; measure each n once
 
     # -- sustained churn through the service ------------------------------
+    # Rates >= 10^2 events/dispatch exercise the batched boundary: O(1)
+    # per-event validation + one journal scan / table repair / state edit
+    # per boundary delta.  `boundary_us_per_event` isolates that cost
+    # against the rate-0 baseline of the same service.
     n = common.clamp_n(2_500)
     q = 4 if common.SMOKE else 16
     dispatches = 4 if common.SMOKE else 12
-    for rate in (0, 2, 8):
+    base_us = None
+    for rate in (0, 2, 8, 128):
+        if common.SMOKE and rate > 8:
+            rate = 32  # keep the high-churn row, at toy size
         res = _bench_serve(n, q, dispatches, rate)
+        if rate == 0:
+            base_us = res["us_per_cycle"]
+        ev_per_cyc = res["events"] / (dispatches * 8)
+        boundary_us = ((res["us_per_cycle"] - base_us) / ev_per_cyc
+                       if ev_per_cyc else 0.0)
         rows.append(Row(
             f"membership/serve/n{n}/rate{rate}", res["us_per_cycle"],
             f"msgs/link/cyc={res['msgs_per_link_per_cycle']:.4f} "
-            f"peers/s={res['peers_per_s']:.0f}",
-            extra={"n": n, "q": q, "rate": rate, **res}))
+            f"peers/s={res['peers_per_s']:.0f} "
+            f"boundary_us/event={boundary_us:.1f}",
+            extra={"n": n, "q": q, "rate": rate,
+                   "boundary_us_per_event": boundary_us, **res}))
     return rows

@@ -1,21 +1,27 @@
-"""Multi-tenant monitor service demo: 64 queries, one dispatch per K cycles.
+"""Multi-tenant monitor service demo: contention, SLOs, and the control
+plane.
 
-Admits a batch of tenants onto one shared network graph — Voronoi
-source-selection queries (each with its own option points and seed) plus
-halfspace threshold queries (each with its own hyperplane and knobs) —
-then serves dispatches while streaming per-peer data updates between
-them, and prints per-tenant convergence from the telemetry sink.
+Admits 64 tenants onto a service provisioned with fewer slots than
+tenants (contended on purpose): Voronoi source-selection and halfspace
+threshold queries in three priority classes, the high class carrying an
+accuracy-within-T SLO.  The priority scheduler preempts and resumes
+low-priority tenants to keep the high class inside its SLO; mid-run, a
+burst of peer joins exhausts the membership capacity and the control
+plane transparently regrows it (one recompile, logged as an epoch).
+Prints per-class SLO attainment and the control-plane activity trail.
 
     PYTHONPATH=src python examples/serve_monitor.py --n 4096 --queries 64
 """
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 
 from repro.core import topology
-from repro.service import (Service, ServiceConfig, TelemetrySink,
+from repro.service import (ControlPlaneConfig, SLOSpec, Service,
+                           ServiceConfig, TelemetrySink,
                            heterogeneous_tenants)
 
 
@@ -23,49 +29,93 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=64)
-    ap.add_argument("--dispatches", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=48,
+                    help="slot capacity (< queries: contended)")
+    ap.add_argument("--dispatches", type=int, default=10)
     ap.add_argument("--k", type=int, default=8, help="cycles per dispatch")
+    ap.add_argument("--joins", type=int, default=24,
+                    help="peer joins at mid-run (forces a regrow epoch)")
     ap.add_argument("--jsonl", default=None, help="telemetry JSONL path")
     args = ap.parse_args()
 
     side = int(round(args.n ** 0.5))
-    topo = topology.grid(side * side)
+    base = topology.grid(side * side)
+    # Tight membership headroom: the mid-run join burst must outgrow it.
+    dyn = topology.DynTopology.from_topology(
+        base, n_cap=base.n + args.joins // 2, deg_cap=base.max_deg + 2)
     sink = TelemetrySink(path=args.jsonl)
-    svc = Service(topo, ServiceConfig(capacity=args.queries, k_max=4, d=2,
-                                      cycles_per_dispatch=args.k),
+    cp = ControlPlaneConfig(scheduler="priority", preempt=True, aging=0.2,
+                            violation_boost=0.5, auto_regrow=True)
+    svc = Service(dyn, ServiceConfig(capacity=args.slots, k_max=4, d=2,
+                                     cycles_per_dispatch=args.k,
+                                     admission_queue=args.queries,
+                                     control=cp),
                   telemetry=sink)
 
-    specs = heterogeneous_tenants(topo.n, args.queries)
+    # Three priority classes; the high class declares an accuracy SLO.
+    slo = SLOSpec(target_accuracy=0.95, within_cycles=4 * args.k)
+    classes = {0: [], 1: [], 2: []}
     t0 = time.perf_counter()
-    qids = [svc.admit(s) for s in specs]
-    print(f"admitted {len(qids)} tenants on a {topo.n}-peer grid "
-          f"({time.perf_counter() - t0:.2f}s)")
+    for i, spec in enumerate(heterogeneous_tenants(dyn.n, args.queries)):
+        prio = i % 3
+        spec = dataclasses.replace(spec, priority=prio,
+                                   slo=slo if prio == 2 else None)
+        classes[prio].append(svc.admit(spec))
+    print(f"admitted {args.queries} tenants into {args.slots} slots on a "
+          f"{base.n}-peer grid ({time.perf_counter() - t0:.2f}s) — "
+          f"{svc.registry.num_active} active, {len(svc.admission)} queued")
 
     rng = np.random.default_rng(7)
     t0 = time.perf_counter()
     for step in range(args.dispatches):
-        # A streaming update batch lands between dispatches: 1% of peers
-        # report fresh sensor readings (applied to every tenant's slot).
-        who = rng.choice(topo.n, size=max(1, topo.n // 100), replace=False)
+        # Streaming updates land between dispatches (1% of peers).
+        who = rng.choice(base.n, size=max(1, base.n // 100), replace=False)
         svc.push_updates(who, rng.normal(size=(who.size, 2)), mode="set")
+        if step == args.dispatches // 2:
+            # A join burst past n_cap: auto-regrow fires transparently.
+            before = dyn.n_cap
+            for _ in range(args.joins):
+                p = svc.join_peer(value=rng.normal(size=2))
+                svc.link_peers(p, int(rng.integers(base.n)))
+            print(f"  join burst: n_cap {before} -> {svc.topo.n_cap} "
+                  f"(epochs: "
+                  f"{[e['kind'] for e in svc.capman.epochs[1:]]})")
         records = svc.tick()
         done = sum(r["quiescent"] for r in records)
         acc = np.mean([r["accuracy"] for r in records])
         print(f"dispatch {step + 1}: t={svc.cycles}  mean acc={acc:.3f}  "
-              f"quiescent {done}/{len(records)}")
+              f"quiescent {done}/{len(records)}  "
+              f"active {svc.registry.num_active}  "
+              f"queued {len(svc.admission)}  "
+              f"preempted {svc.num_preempted}")
     dt = time.perf_counter() - t0
     qc = args.queries * args.dispatches * args.k
     print(f"{args.dispatches} dispatches x {args.k} cycles x "
-          f"{args.queries} queries in {dt:.2f}s "
+          f"{args.queries} tenants in {dt:.2f}s "
           f"({qc / dt:,.0f} query-cycles/s)")
 
-    print("\nper-tenant convergence (first 8):")
+    print("\nper-class mean SLO attainment / final accuracy:")
     last = sink.last_by_query()
-    for qid in qids[:8]:
-        r = last[qid]
-        kind = type(svc.registry.spec_of(qid).region).__name__
-        print(f"  {qid} [{kind:>17}] acc={r['accuracy']:.3f} "
-              f"quiescent={r['quiescent']} msgs/link={r['msgs_per_link']:.2f}")
+    for prio, qids in classes.items():
+        att = np.mean([svc.slo.attainment(q) for q in qids])
+        accs = [last[q]["accuracy"] for q in qids if q in last]
+        label = {0: "low", 1: "mid", 2: "high+SLO"}[prio]
+        print(f"  class {prio} [{label:>8}] attainment={att:.2f}  "
+              f"acc={np.mean(accs) if accs else float('nan'):.3f}  "
+              f"({len(accs)}/{len(qids)} served)")
+
+    print("\nhigh-class tenants (first 8):")
+    for qid in classes[2][:8]:
+        rep = svc.slo_report().get(qid, {})
+        status = svc.admission_status(qid)
+        print(f"  {qid} [{status:>9}] attainment={rep.get('attainment', 1.0):.2f} "
+              f"violations={rep.get('violations', 0)}")
+
+    ctrl = sink.controls()
+    n_pre = sum(len(c.get("preempted", [])) for c in ctrl)
+    n_res = sum(len(c.get("resumed", [])) for c in ctrl)
+    print(f"\ncontrol plane: {n_pre} preemptions, {n_res} resumes, "
+          f"epochs={[e['kind'] for e in svc.capman.epochs]}")
     sink.close()
 
 

@@ -34,8 +34,15 @@ from typing import Iterable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["Topology", "DynTopology", "TopoEvent", "barabasi_albert",
-           "chord", "grid", "from_edges"]
+__all__ = ["Topology", "DynTopology", "TopoEvent", "CapacityError",
+           "barabasi_albert", "chord", "grid", "from_edges"]
+
+
+class CapacityError(ValueError):
+    """A mutation hit a capacity wall (``n_cap`` rows or ``deg_cap``
+    slots).  Subclasses ``ValueError`` so existing callers keep working;
+    the service control plane catches it specifically to drive the
+    auto-regrow path (:meth:`DynTopology.grow`) instead of failing."""
 
 
 class Topology(NamedTuple):
@@ -347,7 +354,7 @@ class DynTopology:
         if peer is None:
             free = np.flatnonzero(~self.present)
             if free.size == 0:
-                raise ValueError(
+                raise CapacityError(
                     f"peer capacity n_cap={self.n_cap} exhausted; "
                     "use grow(n_cap=...) to regrow (recompiles consumers)")
             peer = int(free[0])
@@ -392,7 +399,7 @@ class DynTopology:
         free_j = np.flatnonzero(~self.mask[j])
         if free_i.size == 0 or free_j.size == 0:
             full = i if free_i.size == 0 else j
-            raise ValueError(
+            raise CapacityError(
                 f"peer {full} at degree capacity deg_cap={self.deg_cap}; "
                 "use grow(deg_cap=...) to regrow (recompiles consumers)")
         ki, kj = int(free_i[0]), int(free_j[0])
@@ -419,8 +426,12 @@ class DynTopology:
     def grow(self, n_cap: Optional[int] = None,
              deg_cap: Optional[int] = None) -> "DynTopology":
         """Copy with larger capacity (shape change: consumers recompile
-        once).  The journal does not carry over — consumers of the grown
-        topology start from its fresh version-0 state."""
+        once).  The :attr:`version` carries over so downstream bookkeeping
+        (telemetry ``topo_version``, applied-version cursors) stays
+        monotone across a regrow; the journal does NOT carry over — the
+        grown topology's journal floor starts at the carried version, so
+        any consumer holding an older cursor gets the documented
+        "do a full refresh" error instead of silently missing events."""
         n2 = self.n_cap if n_cap is None else int(n_cap)
         d2 = self.deg_cap if deg_cap is None else int(deg_cap)
         if n2 < self.n_cap or d2 < self.deg_cap:
@@ -433,7 +444,8 @@ class DynTopology:
         rev[:self.n_cap, :self.deg_cap] = self.rev
         present = np.zeros((n2,), bool)
         present[:self.n_cap] = self.present
-        return DynTopology(nbr, mask, rev, present, strict=self.strict)
+        return DynTopology(nbr, mask, rev, present, version=self.version,
+                           strict=self.strict)
 
     def rebuild(self) -> "DynTopology":
         """From-scratch :func:`from_edges` build of the current graph at

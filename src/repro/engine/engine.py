@@ -565,3 +565,87 @@ class ShardedLSS:
             pending=take(state.pending), last_send=take(state.last_send),
             alive=take(state.alive), t=state.t,
             msgs=jnp.sum(state.msgs), rng=state.rng[0])
+
+    def place_lss_state(self, snap: lss.LSSState) -> ShardedState:
+        """Inverse of :meth:`to_lss_state`: place a core-layout state into
+        this engine's shard layout.
+
+        The placement recipe is exactly :meth:`init`'s (init values
+        everywhere, then scatter the logical rows through ``new_of_old``),
+        so the result is bitwise what a fresh ``shard_topology`` + re-init
+        of the same logical state produces.  ``snap`` may cover fewer
+        rows / degree slots than this engine's capacity (a snapshot taken
+        before a regrow): missing rows and slots stay at init values.
+
+        Not carried row-for-row: the aggregate send counter lands on
+        shard 0 (totals — the only thing consumers read — are preserved)
+        and the per-shard drop-RNG keys are re-derived by splitting
+        ``snap.rng`` (delivery semantics are unaffected at
+        ``drop_rate=0``; a lossy run resumes on a fresh drop stream).
+        """
+        S, B, D = self.S, self.B, self.D
+        n1 = snap.alive.shape[0]
+        if n1 > self.n:
+            raise ValueError(f"snapshot covers {n1} rows > capacity {self.n}")
+        D1 = snap.out_c.shape[-1]
+        if D1 > D:
+            raise ValueError(f"snapshot has {D1} degree slots > {D}")
+        pos = self._pos[:n1]
+        d = snap.x_m.shape[-1]
+        dt = snap.x_m.dtype
+        return ShardedState(
+            out_m=jnp.zeros((S * B, D, d), dt).at[pos, :D1]
+            .set(snap.out_m).reshape(S, B, D, d),
+            out_c=jnp.zeros((S * B, D), dt).at[pos, :D1]
+            .set(snap.out_c).reshape(S, B, D),
+            in_m=jnp.zeros((S * B, D, d), dt).at[pos, :D1]
+            .set(snap.in_m).reshape(S, B, D, d),
+            in_c=jnp.zeros((S * B, D), dt).at[pos, :D1]
+            .set(snap.in_c).reshape(S, B, D),
+            x_m=jnp.zeros((S * B, d), dt).at[pos].set(snap.x_m)
+            .reshape(S, B, d),
+            x_c=jnp.zeros((S * B,), dt).at[pos].set(snap.x_c).reshape(S, B),
+            pending=jnp.zeros((S * B, D), bool).at[pos, :D1]
+            .set(snap.pending).reshape(S, B, D),
+            last_send=jnp.full((S * B,), -(10**6), jnp.int32).at[pos]
+            .set(snap.last_send.astype(jnp.int32)).reshape(S, B),
+            alive=jnp.zeros((S * B,), bool).at[pos].set(snap.alive)
+            .reshape(S, B),
+            t=jnp.asarray(snap.t, jnp.int32),
+            msgs=jnp.zeros((S,), lss.counter_dtype()).at[0]
+            .set(jnp.asarray(snap.msgs, lss.counter_dtype())),
+            rng=jax.random.split(snap.rng, S),
+        )
+
+    def migrate_from(self, old: "ShardedLSS",
+                     state: ShardedState) -> ShardedState:
+        """Move ``old``'s state into THIS engine's layout (one epoch).
+
+        Gather/scatter across :func:`repro.engine.partition.migrate_rows`
+        — equivalent to ``place_lss_state(old.to_lss_state(state))`` but
+        named for what re-partition epochs (regrow, edge-cut rebalance)
+        actually do.  Broadcasts over leading (query) axes, which the
+        core-layout detour cannot (``to_lss_state`` is single-state).
+        """
+        # src gathers each logical row out of the old layout; the dst
+        # half of the map (this engine's new_of_old) is applied by
+        # place_lss_state's scatter below.
+        src, _ = partition.migrate_rows(old.part, self.part)
+        src = jnp.asarray(src)
+        batch = state.x_c.shape[:-2]
+
+        def move(a):
+            flat = a.reshape(*batch, old.S * old.B, *a.shape[len(batch) + 2:])
+            return jnp.take(flat, src, axis=len(batch))
+
+        snap = lss.LSSState(
+            out_m=move(state.out_m), out_c=move(state.out_c),
+            in_m=move(state.in_m), in_c=move(state.in_c),
+            x_m=move(state.x_m), x_c=move(state.x_c),
+            pending=move(state.pending), last_send=move(state.last_send),
+            alive=move(state.alive), t=state.t,
+            msgs=jnp.sum(state.msgs, axis=-1), rng=state.rng[..., 0, :])
+        place = self.place_lss_state
+        for _ in batch:
+            place = jax.vmap(place)
+        return place(snap)

@@ -35,8 +35,8 @@ import numpy as np
 from repro.core import topology
 
 __all__ = ["Partition", "HaloTables", "ShardedTopo", "make_partition",
-           "shard_topology", "repair_sharded_topo", "bfs_assignment",
-           "stride_assignment"]
+           "shard_topology", "repair_sharded_topo", "migrate_rows",
+           "bfs_assignment", "stride_assignment"]
 
 
 class Partition(NamedTuple):
@@ -233,6 +233,32 @@ def shard_topology(topo: topology.Topology, part: Partition,
         halo=HaloTables(send_row, send_slot, send_ok, recv_row, recv_slot),
         halo_width=H,
     )
+
+
+def migrate_rows(old_part: Partition,
+                 new_part: Partition) -> tuple[np.ndarray, np.ndarray]:
+    """Row-migration map between two partitions: ``(src, dst)``.
+
+    ``src[i]``/``dst[i]`` are the flattened positions (``shard*B + row``)
+    of original peer id ``i`` under the old and new partitions, for every
+    id the old partition covers.  Re-partition *epochs* (capacity regrow,
+    edge-cut rebalance) move state with one gather/scatter across this
+    map: ``new_flat[dst] = old_flat[src]``, every new-layout position not
+    in ``dst`` filled with the fresh-init value — which makes the
+    migrated state bitwise-equal to re-placing the same logical rows into
+    a fresh :func:`shard_topology` layout (:meth:`repro.engine.
+    ShardedLSS.place_lss_state` is that placement).
+
+    The new partition may span a larger capacity (regrow): rows beyond
+    the old capacity have no source and stay at their init values.
+    """
+    n1 = old_part.new_of_old.shape[0]
+    if new_part.new_of_old.shape[0] < n1:
+        raise ValueError(
+            f"new partition covers {new_part.new_of_old.shape[0]} rows "
+            f"< old {n1}; migration cannot drop peers")
+    return (old_part.new_of_old.copy().astype(np.int64),
+            new_part.new_of_old[:n1].copy().astype(np.int64))
 
 
 def _rebuild_halo_pair(halo: HaloTables, s: int, t: int, mask3, ts3, tr3,

@@ -19,9 +19,15 @@ Components:
 * :class:`Service` — the driver: K cycles per jit dispatch over all Q
   slots (donated state buffers off-CPU), admission + ingest between
   dispatches, per-tenant telemetry to a :class:`TelemetrySink`.
+* :mod:`.controlplane` — the self-management layer: per-tenant SLOs
+  (:class:`SLOSpec`) with violation tracking, priority scheduling with
+  preemption under slot contention, and the capacity epochs (auto-regrow,
+  drift-triggered partition rebalance), configured through
+  :class:`ControlPlaneConfig`.
 """
 
 from .admission import AdmissionQueue
+from .controlplane import ControlPlaneConfig, SLOSpec
 from .ingest import StreamIngest, UpdateBatch
 from .membership import MemberEvent, MembershipQueue
 from .query import QueryParams, QuerySpec
@@ -32,11 +38,13 @@ from .workload import heterogeneous_tenants
 
 __all__ = [
     "AdmissionQueue",
+    "ControlPlaneConfig",
     "MemberEvent",
     "MembershipQueue",
     "QueryParams",
     "QueryRegistry",
     "QuerySpec",
+    "SLOSpec",
     "Service",
     "ServiceConfig",
     "StreamIngest",

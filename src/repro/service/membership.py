@@ -22,12 +22,24 @@ the per-slot simulator state:
 
 Events are validated eagerly on ``push`` against the topology *plus the
 already-queued events* (a join reserves its row immediately), so a bad
-event fails at the call site, not mid-boundary.
+event fails at the call site, not mid-boundary.  Validation is O(1) per
+event — set indices over the queued edits, never a scan of the queue —
+so boundary deltas of 10^2..10^4 events stay linear; the queue-scan
+implementation it replaces was quadratic and dominated the boundary cost
+at high churn (``benchmarks/membership_churn.py`` tracks this).
+
+Capacity walls surface eagerly as :class:`~repro.core.topology.
+CapacityError`: a join beyond ``n_cap``, or a link whose *projected*
+endpoint degree (current + queued links - queued unlinks) hits
+``deg_cap``.  The projection is conservative — a queued leave of a
+neighbor would also free a slot, which it ignores — so the control
+plane's auto-regrow may grow slightly early, never too late.
 """
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional
+import heapq
+from typing import Dict, List, NamedTuple, Optional, Set, Tuple
 
 import numpy as np
 
@@ -51,10 +63,17 @@ class MembershipQueue:
         self.dyn = dyn
         self.max_pending = max_pending
         self._queue: List[MemberEvent] = []
-        # Rows claimed by queued joins / released by queued leaves — lets
-        # push-time validation see the post-drain membership.
-        self._pending_joins: set = set()
-        self._pending_leaves: set = set()
+        # O(1) push-time validation indices over the queued edits — kept
+        # in lockstep with _queue, cleared on drain:
+        self._pending_joins: Set[int] = set()  # rows claimed by joins
+        self._pending_leaves: Set[int] = set()  # rows released by leaves
+        self._queued_links: Set[Tuple[int, int]] = set()  # normalized keys
+        self._queued_unlinks: Set[Tuple[int, int]] = set()
+        self._deg_delta: Dict[int, int] = {}  # net queued degree per peer
+        # Lazily-built min-heap of candidate free rows (stale entries are
+        # skipped at pop — _will_be_present is the truth): an auto-pick
+        # join is O(log n) instead of an O(n_cap) scan per event.
+        self._free_heap: Optional[List[int]] = None
         self.applied_events = 0
         # (event, error string) for events that still failed at the
         # boundary (eager validation is best-effort: races with direct
@@ -77,24 +96,59 @@ class MembershipQueue:
             raise RuntimeError(
                 f"membership queue full ({self.max_pending} pending events)")
 
+    def rebind(self, dyn: topology.DynTopology) -> None:
+        """Point the queue at a regrown topology (the service's regrow
+        epoch): queued events and validation state carry over — row ids
+        are stable under ``grow()`` — but the cached free-row heap is
+        rebuilt, since the new capacity has rows the old one lacked."""
+        self.dyn = dyn
+        self._free_heap = None
+
+    def projected_degree(self, peer: int) -> int:
+        """Current degree plus the net effect of queued links/unlinks.
+
+        Conservative: queued leaves (of the peer's neighbors) would free
+        slots too, but tracking that would cost a neighbor scan per
+        event; over-estimating only makes a capacity wall fire early.
+        """
+        return int(self.dyn.mask[peer].sum()) + self._deg_delta.get(peer, 0)
+
+    def _bump_deg(self, i: int, j: int, by: int) -> None:
+        for p in (i, j):
+            self._deg_delta[p] = self._deg_delta.get(p, 0) + by
+
     # -- event constructors ------------------------------------------------
     def join(self, peer: Optional[int] = None, value=None,
              weight: float = 1.0) -> int:
         """Queue a join; returns the peer row the join will claim."""
         self._check_room()
         if peer is None:
-            avail = next((p for p in range(self.dyn.n_cap)
-                          if not self._will_be_present(p)), None)
+            if self._free_heap is None:
+                self._free_heap = [
+                    int(p) for p in np.flatnonzero(~self.dyn.present)
+                    if p not in self._pending_joins]
+                self._free_heap += list(self._pending_leaves)
+                heapq.heapify(self._free_heap)
+            avail = None
+            while self._free_heap:
+                cand = heapq.heappop(self._free_heap)
+                if not self._will_be_present(cand):
+                    avail = cand
+                    break
             if avail is None:
-                raise ValueError(
+                raise topology.CapacityError(
                     f"peer capacity n_cap={self.dyn.n_cap} exhausted "
                     "(including queued joins); grow the topology")
             peer = avail
         else:
             peer = int(peer)
-            if not 0 <= peer < self.dyn.n_cap:
-                raise ValueError(f"peer {peer} outside capacity "
-                                 f"[0, {self.dyn.n_cap})")
+            if peer < 0:
+                raise ValueError(f"peer {peer} must be >= 0")
+            if peer >= self.dyn.n_cap:
+                # Growable: a larger n_cap would cover this row.
+                raise topology.CapacityError(
+                    f"peer {peer} outside capacity [0, {self.dyn.n_cap}); "
+                    "grow the topology")
             if self._will_be_present(peer):
                 raise ValueError(f"peer {peer} already present (or queued)")
         if value is not None:
@@ -113,6 +167,8 @@ class MembershipQueue:
         self._queue.append(MemberEvent("leave", peer))
         self._pending_leaves.add(peer)
         self._pending_joins.discard(peer)
+        if self._free_heap is not None:
+            heapq.heappush(self._free_heap, peer)
 
     def link(self, i: int, j: int) -> None:
         self._check_room()
@@ -123,23 +179,45 @@ class MembershipQueue:
             if not self._will_be_present(p):
                 raise ValueError(f"peer {p} not present (or leaving)")
         key = (min(i, j), max(i, j))
-        queued = any(ev.kind == "link"
-                     and (min(ev.peer, ev.peer_b),
-                          max(ev.peer, ev.peer_b)) == key
-                     for ev in self._queue)
-        if queued or (self.dyn.has_edge(i, j)
+        exists_now = (self.dyn.has_edge(i, j)
                       and i not in self._pending_leaves
                       and j not in self._pending_leaves
-                      and not any(ev.kind == "unlink"
-                                  and (min(ev.peer, ev.peer_b),
-                                       max(ev.peer, ev.peer_b)) == key
-                                  for ev in self._queue)):
+                      and key not in self._queued_unlinks)
+        if key in self._queued_links or exists_now:
             raise ValueError(f"edge ({i}, {j}) already exists (or queued)")
+        for p in (i, j):
+            # Joining peers start at degree 0 regardless of current mask.
+            deg = (self._deg_delta.get(p, 0) if p in self._pending_joins
+                   else self.projected_degree(p))
+            if deg >= self.dyn.deg_cap:
+                raise topology.CapacityError(
+                    f"peer {p} at degree capacity deg_cap="
+                    f"{self.dyn.deg_cap} (including queued links); "
+                    "grow the topology")
         self._queue.append(MemberEvent("link", i, j))
+        self._queued_links.add(key)
+        self._queued_unlinks.discard(key)
+        self._bump_deg(i, j, +1)
 
     def unlink(self, i: int, j: int) -> None:
         self._check_room()
-        self._queue.append(MemberEvent("unlink", int(i), int(j)))
+        i, j = int(i), int(j)
+        key = (min(i, j), max(i, j))
+        self._queue.append(MemberEvent("unlink", i, j))
+        # The degree projection only moves when this unlink will actually
+        # remove an edge: it cancels a queued link, or it is the FIRST
+        # unlink of a real edge.  A no-op unlink (absent edge, or a
+        # duplicate) must not decrement, or projected_degree would
+        # underestimate and the eager capacity wall (and with it the
+        # auto-regrow trigger) would be silently bypassed.
+        if key in self._queued_links:
+            self._queued_links.discard(key)
+            self._bump_deg(i, j, -1)
+        elif self.dyn.has_edge(i, j) and key not in self._queued_unlinks:
+            self._queued_unlinks.add(key)
+            self._bump_deg(i, j, -1)
+        else:
+            self._queued_unlinks.add(key)
 
     # -- boundary application ---------------------------------------------
     def drain_into(self, dyn: topology.DynTopology) -> dict:
@@ -159,6 +237,10 @@ class MembershipQueue:
         events, self._queue = self._queue, []
         self._pending_joins.clear()
         self._pending_leaves.clear()
+        self._queued_links.clear()
+        self._queued_unlinks.clear()
+        self._deg_delta.clear()
+        self._free_heap = None  # present mask changes: rebuild lazily
         join_inits = {}
         for ev in events:
             try:

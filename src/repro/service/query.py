@@ -25,6 +25,8 @@ import numpy as np
 
 from repro.core import lss, regions, wvs
 
+from .controlplane.slo import SLOSpec
+
 __all__ = ["QuerySpec", "QueryParams", "decide_fn"]
 
 
@@ -38,6 +40,11 @@ class QuerySpec:
     coordinates; weights default to 1 per peer, the paper's setup).
     ``beta``/``ell``/``eps``: optional per-query overrides of the service
     defaults.  ``seed`` seeds this query's message-loss RNG stream.
+    ``priority``: scheduling class under slot contention (higher wins;
+    see :mod:`repro.service.controlplane.scheduler`).  ``slo``: optional
+    quality target the control plane tracks
+    (:class:`~repro.service.controlplane.slo.SLOSpec`).  Both are inert
+    under the default FIFO control plane.
     """
 
     region: object  # VoronoiRegions | HalfspaceRegions
@@ -47,6 +54,8 @@ class QuerySpec:
     ell: Optional[int] = None
     eps: Optional[float] = None
     seed: int = 0
+    priority: int = 0
+    slo: Optional[SLOSpec] = None
 
     def input_wv(self) -> wvs.WV:
         v = jnp.asarray(self.inputs, jnp.float32)

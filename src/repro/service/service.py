@@ -26,11 +26,21 @@ at dispatch boundaries — joins/leaves/rewires within the topology's
 capacity swap in same-shaped table data and therefore never recompile
 the dispatch, while in-flight tenants keep converging (joining peers
 start from the paper's knowledge-init state).
+
+The **control plane** (:mod:`repro.service.controlplane`) runs on top of
+the same boundaries: per-tenant SLO evaluation folded into every
+telemetry record, a pluggable admission/preemption scheduler when the Q
+slots are contended (preempted queries are snapshotted core-layout —
+partition independent — and resume bitwise where they stopped), and the
+capacity epochs — auto-regrow on membership-capacity exhaustion and
+drift-triggered partition rebalance.  Steady-state serving stays
+zero-recompile; only the explicit epochs change traced shapes (regrow)
+or rebuild engine tables (rebalance), and each recompiles at most once.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +50,8 @@ from repro.core import lss, topology, wvs
 
 from . import query as qmod
 from .admission import AdmissionQueue
+from .controlplane import (ActiveView, CapacityManager, ControlPlaneConfig,
+                           SLOTracker, WaitingView, make_scheduler)
 from .ingest import StreamIngest, UpdateBatch
 from .membership import MembershipQueue
 from .registry import QueryRegistry
@@ -63,6 +75,10 @@ class ServiceConfig(NamedTuple):
     AdmissionQueue`; ``admission_queue=0`` restores fail-fast).
     ``engine_halo_slack`` pads the engine backend's halo tables so
     membership-driven boundary growth stays recompile-free.
+    ``control`` selects the control-plane policies
+    (:class:`~repro.service.controlplane.ControlPlaneConfig`; the
+    default is FIFO / no preemption / no auto-regrow / no rebalance —
+    exactly the pre-control-plane behavior).
     """
 
     capacity: int = 64  # Q query slots
@@ -81,6 +97,46 @@ class ServiceConfig(NamedTuple):
     engine_halo_slack: float = 1.5  # halo-width headroom for membership
     admission_queue: int = 16  # waiting specs bound (0 = fail fast)
     admission_overflow: str = "reject"  # "reject" | "evict-oldest"
+    control: ControlPlaneConfig = ControlPlaneConfig()  # control plane
+
+
+class _Preempted(NamedTuple):
+    """A suspended tenant: its spec, its core-layout state snapshot
+    (partition independent — survives rebalance/regrow epochs unchanged),
+    and the bookkeeping the scheduler ages it by."""
+
+    spec: qmod.QuerySpec
+    state: lss.LSSState
+    topo_version: int  # applied topology version at suspension
+    enqueued_dispatch: int  # when it re-entered the waiting pool
+
+
+def _grow_core_states(states: lss.LSSState, n2: int,
+                      D2: int) -> lss.LSSState:
+    """Pad core-layout (Q, n, ...) slot states to a grown capacity.
+
+    New rows/slots start at init values (dead, empty, cold timer), which
+    is bitwise what a fresh init over the grown topology gives them.
+    """
+    q, n1 = states.alive.shape
+    D1 = states.out_c.shape[-1]
+    if (n1, D1) == (n2, D2):
+        return states
+    d = states.x_m.shape[-1]
+    dt = states.x_m.dtype
+    return states._replace(
+        out_m=jnp.zeros((q, n2, D2, d), dt).at[:, :n1, :D1]
+        .set(states.out_m),
+        out_c=jnp.zeros((q, n2, D2), dt).at[:, :n1, :D1].set(states.out_c),
+        in_m=jnp.zeros((q, n2, D2, d), dt).at[:, :n1, :D1].set(states.in_m),
+        in_c=jnp.zeros((q, n2, D2), dt).at[:, :n1, :D1].set(states.in_c),
+        x_m=jnp.zeros((q, n2, d), dt).at[:, :n1].set(states.x_m),
+        x_c=jnp.zeros((q, n2), dt).at[:, :n1].set(states.x_c),
+        pending=jnp.zeros((q, n2, D2), bool).at[:, :n1, :D1]
+        .set(states.pending),
+        last_send=jnp.full((q, n2), -(10**6), jnp.int32).at[:, :n1]
+        .set(states.last_send),
+        alive=jnp.zeros((q, n2), bool).at[:, :n1].set(states.alive))
 
 
 @jax.jit
@@ -157,27 +213,50 @@ class _CoreBackend:
     def snapshot(self, states, slot: int) -> lss.LSSState:
         return jax.tree_util.tree_map(lambda a: a[slot], states)
 
+    def restore_slot(self, states, slot: int,
+                     snap: lss.LSSState) -> lss.LSSState:
+        """Exact inverse of :meth:`snapshot` (``snap`` pre-padded to the
+        current capacity by the service)."""
+        return jax.tree_util.tree_map(
+            lambda all_q, one: all_q.at[slot].set(one.astype(all_q.dtype)),
+            states, snap)
+
+    def cut_frac(self) -> Optional[float]:
+        return None  # one device, no partition to drift
+
+    def regrow(self, dyn, states):
+        """Adopt a grown topology (shape change: the service's jitted
+        programs recompile once) and pad every slot's state to match."""
+        self.topo = dyn
+        self.ta = lss.TopoArrays.from_topology(dyn)
+        return _grow_core_states(states, dyn.n, dyn.max_deg)
+
 
 class _EngineBackend:
     """Query axis composed with :class:`ShardedLSS`'s shard axis."""
 
     def __init__(self, topo, scfg: ServiceConfig):
+        self.topo = topo
+        self.scfg = scfg
+        self.eng = self._build(topo)
+        self._leave_jit = jax.jit(self._leave_impl)
+        self._join_jit = jax.jit(self._join_impl)
+
+    def _build(self, topo):
         from repro.engine import EngineConfig, ShardedLSS  # lazy: no cycle
 
-        self.topo = topo
+        scfg = self.scfg
         base = lss.LSSConfig(beta=scfg.beta, ell=scfg.ell,
                              drop_rate=scfg.drop_rate, policy=scfg.policy,
                              max_corr_iters=scfg.max_corr_iters, eps=scfg.eps)
         # The per-query decide overrides bypass the fused Voronoi kernels,
         # so the engine is pinned to the reference formulas here.
-        self.eng = ShardedLSS(
+        return ShardedLSS(
             topo, jnp.zeros((1, scfg.d), jnp.float32), base,
             EngineConfig(num_shards=scfg.engine_shards,
                          cycles_per_dispatch=scfg.cycles_per_dispatch,
                          method=scfg.engine_method, use_kernels=False,
                          halo_slack=scfg.engine_halo_slack))
-        self._leave_jit = jax.jit(self._leave_impl)
-        self._join_jit = jax.jit(self._join_impl)
 
     def topo_args(self):
         return self.eng._tables
@@ -247,6 +326,39 @@ class _EngineBackend:
         one = jax.tree_util.tree_map(lambda a: a[slot], states)
         return self.eng.to_lss_state(one)
 
+    def restore_slot(self, states, slot: int, snap: lss.LSSState):
+        """Place a core-layout snapshot back into one slot (see
+        :meth:`ShardedLSS.place_lss_state` for what is and is not carried
+        row-for-row)."""
+        one = self.eng.place_lss_state(snap)
+        return jax.tree_util.tree_map(
+            lambda all_q, o: all_q.at[slot].set(o.astype(all_q.dtype)),
+            states, one)
+
+    def cut_frac(self) -> Optional[float]:
+        """Fraction of edges crossing shards — the partition-quality
+        number the drift metric is built on."""
+        st = self.eng.stopo
+        return st.cut_edges() / max(st.num_edges, 1)
+
+    def _reshard(self, dyn, states):
+        """Fresh partition of ``dyn`` + state migration across
+        ``new_of_old`` — the mechanics shared by both epoch kinds."""
+        old, self.eng = self.eng, self._build(dyn)
+        self.topo = dyn
+        return self.eng.migrate_from(old, states)
+
+    def regrow(self, dyn, states):
+        """Re-shard over a grown topology (shape change: one recompile)."""
+        return self._reshard(dyn, states)
+
+    def rebalance(self, dyn, states):
+        """Re-partition the CURRENT graph (fresh BFS edge cut over the
+        churned adjacency).  Same capacity, so traced shapes only change
+        if the fresh halo tables need a different width — within the
+        halo slack the service's compiled dispatch is reused as-is."""
+        return self._reshard(dyn, states)
+
 
 class Service:
     """Long-running multi-tenant monitor over one network graph.
@@ -285,6 +397,20 @@ class Service:
         self.ingest = StreamIngest()
         self.admission = AdmissionQueue(scfg.admission_queue,
                                         scfg.admission_overflow)
+        # Control plane: SLO books, the admission/preemption scheduler,
+        # and the capacity (regrow / rebalance-epoch) policy.
+        cp = scfg.control
+        self.cp = cp
+        self.slo = SLOTracker()
+        self.scheduler = make_scheduler(cp)
+        self.capman = CapacityManager(
+            auto_regrow=cp.auto_regrow, grow_factor=cp.grow_factor,
+            rebalance_drift=cp.rebalance_drift,
+            rebalance_check_every=cp.rebalance_check_every)
+        self._preempted: Dict[str, _Preempted] = {}
+        self._enqueued_at: Dict[str, int] = {}  # qid -> dispatch queued
+        self._activated_at: Dict[str, int] = {}  # qid -> dispatch activated
+        self._ctrl_events: list = []  # boundary activity -> control record
         self._dyn = topo if isinstance(topo, topology.DynTopology) else None
         self.membership = (MembershipQueue(self._dyn)
                            if self._dyn is not None else None)
@@ -316,11 +442,17 @@ class Service:
         self._step = jax.jit(self._step_impl, static_argnames=("k",),
                              donate_argnums=donate)
         self._observe = jax.jit(self._observe_impl)
+        self.capman.note_epoch("init", self.backend.cut_frac())
 
     @property
     def topo_version(self) -> int:
         """Version of the topology the compiled tables currently reflect."""
         return self._applied_version
+
+    @property
+    def num_preempted(self) -> int:
+        """Suspended queries currently waiting to resume."""
+        return len(self._preempted)
 
     # -- the batched step --------------------------------------------------
     def _one_cycle(self, st, qp: qmod.QueryParams, topo):
@@ -362,24 +494,36 @@ class Service:
                 f"query inputs have d={spec.inputs.shape[-1]}, "
                 f"service is configured for d={self.scfg.d}")
         if query_id is not None and (query_id in self.admission
-                                     or query_id in self.registry._slot_of):
+                                     or query_id in self.registry._slot_of
+                                     or query_id in self._preempted):
             raise ValueError(f"query id {query_id!r} already admitted")
-        if self.registry.num_free > 0:
-            qid = self.registry.admit(spec, query_id)
-            self._reset_slot(self.registry.slot_of(qid), spec)
-            self._total_msgs[qid] = 0
-            return qid
         qid = query_id if query_id is not None else self.registry.reserve_id()
-        self.admission.push(qid, spec)
+        if self.registry.num_free > 0:
+            self.registry.admit(spec, qid)
+            self.slo.submit(qid, spec.slo, self.cycles)
+            self._activate(qid, spec)
+            return qid
+        # push may raise (overflow under "reject"): record the waiting
+        # bookkeeping only once the spec actually holds a queue place.
+        evicted = self.admission.push(qid, spec)
+        self.slo.submit(qid, spec.slo, self.cycles)
+        self._enqueued_at[qid] = self.dispatches
+        if evicted is not None:
+            self._enqueued_at.pop(evicted, None)
+            self._ctrl_events.append(
+                ("evicted", (evicted, self.admission.terminal_reason(
+                    evicted))))
         return qid
 
     def admission_status(self, query_id: str) -> str:
-        """``"active"`` | ``"queued"`` | ``"retired"`` | ``"evicted"`` |
-        ``"cancelled"``."""
+        """``"active"`` | ``"queued"`` | ``"preempted"`` | ``"retired"`` |
+        ``"evicted"`` | ``"cancelled"`` | ``"rejected"``."""
         if query_id in self.registry._slot_of:
             return "active"
         if query_id in self.admission:
             return "queued"
+        if query_id in self._preempted:
+            return "preempted"
         status = self.admission.terminal_status(query_id)
         if status is not None:
             return status
@@ -387,25 +531,135 @@ class Service:
             return "retired"
         raise KeyError(f"unknown query id {query_id!r}")
 
+    def _activate(self, qid: str, spec: qmod.QuerySpec) -> None:
+        """Host-side slot setup for a freshly-admitted (not resumed)
+        query whose registry slot is already claimed."""
+        self._reset_slot(self.registry.slot_of(qid), spec)
+        self._total_msgs[qid] = 0
+        self._activated_at[qid] = self.dispatches
+        self._enqueued_at.pop(qid, None)
+
     def _drain_admission(self) -> int:
-        """Move waiting specs into free slots (FIFO); returns activations."""
+        """One scheduler pass: preempt (if the policy says so), then fill
+        free slots from the waiting pool — queued and previously preempted
+        queries together, in policy order.  Returns activations."""
+        waiting = [
+            WaitingView(qid, spec.priority, self.slo.violations(qid),
+                        self._enqueued_at.get(qid, self.dispatches), False)
+            for qid, spec in self.admission.items()
+        ] + [
+            WaitingView(qid, e.spec.priority, self.slo.violations(qid),
+                        e.enqueued_dispatch, True)
+            for qid, e in self._preempted.items()
+        ]
+        if not waiting:
+            return 0
+        active = [ActiveView(qid, spec.priority, self.slo.violations(qid),
+                             self._activated_at.get(qid, 0))
+                  for qid, _slot, spec in self.registry.active_items()]
+        plan = self.scheduler.plan(active, waiting, self.registry.num_free,
+                                   self.dispatches)
+        for qid in plan.preempt:
+            self._preempt(qid)
         n = 0
-        while self.registry.num_free > 0 and len(self.admission) > 0:
-            qid, spec = self.admission.pop()
-            self.registry.admit(spec, qid)
-            self._reset_slot(self.registry.slot_of(qid), spec)
-            self._total_msgs[qid] = 0
+        for qid in plan.admit:
+            if self.registry.num_free == 0:
+                break
+            if qid in self._preempted:
+                self._resume(qid)
+            else:
+                spec = self.admission.take(qid)
+                self.registry.admit(spec, qid)
+                self._activate(qid, spec)
+                self._ctrl_events.append(("activated", qid))
             n += 1
         return n
+
+    # -- preemption / resume (between dispatches) --------------------------
+    def _preempt(self, query_id: str) -> None:
+        """Suspend an active query: snapshot its slot (core layout, via
+        the same :meth:`snapshot` path users see), free the slot, and put
+        it in the waiting pool to age back in."""
+        slot = self.registry.slot_of(query_id)
+        spec = self.registry._specs[slot]
+        snap = self.backend.snapshot(self.states, slot)
+        self.registry.retire(query_id)
+        self._reset_slot(slot, None)
+        self._preempted[query_id] = _Preempted(
+            spec, snap, self._applied_version, self.dispatches)
+        self._ctrl_events.append(("preempted", query_id))
+
+    def _resume(self, query_id: str) -> None:
+        """Reactivate a preempted query in a free slot, restoring its
+        snapshot.  With an unchanged topology the restore is exact (the
+        suspension was a pause); if membership moved on, the snapshot is
+        reconciled first (see :meth:`_reconcile_snapshot`).  The tenant's
+        cumulative message total carries across the suspension."""
+        e = self._preempted.pop(query_id)
+        self.registry.admit(e.spec, query_id)
+        slot = self.registry.slot_of(query_id)
+        snap = self._pad_snapshot(e.state)
+        if e.topo_version != self._applied_version:
+            snap = self._reconcile_snapshot(snap)
+        self.states = self.backend.restore_slot(self.states, slot, snap)
+        self._activated_at[query_id] = self.dispatches
+        self._ctrl_events.append(("resumed", query_id))
+
+    def _pad_snapshot(self, snap: lss.LSSState) -> lss.LSSState:
+        """Pad a snapshot taken before a regrow epoch to the current
+        capacity — :func:`_grow_core_states` on a batch of one, so both
+        paths share the one init-value recipe."""
+        n2, D2 = self.topo.n, self.topo.max_deg
+        if (snap.alive.shape[0], snap.out_c.shape[-1]) == (n2, D2):
+            return snap
+        one = jax.tree_util.tree_map(lambda a: a[None], snap)
+        return jax.tree_util.tree_map(
+            lambda a: a[0], _grow_core_states(one, n2, D2))
+
+    def _reconcile_snapshot(self, snap: lss.LSSState) -> lss.LSSState:
+        """Catch a suspended query up with membership that changed while
+        it held no slot.  Its link agreements are stale (edges may have
+        been rewired through reused slots), so the messaging state is
+        scrubbed wholesale and knowledge restarts from the current local
+        statistics — the algorithm is self-stabilizing (Alg. 1
+        re-converges from ``S_i = X_ii``).  The alive mask snaps to the
+        current present set; peers that joined during the suspension get
+        the no-value knowledge-init (zero vector, weight 1), exactly what
+        :meth:`join_peer` gives an active slot."""
+        present = (jnp.asarray(self._present) if self._present is not None
+                   else jnp.ones_like(snap.alive))
+        newly = present & ~snap.alive
+        return snap._replace(
+            out_m=jnp.zeros_like(snap.out_m),
+            out_c=jnp.zeros_like(snap.out_c),
+            in_m=jnp.zeros_like(snap.in_m),
+            in_c=jnp.zeros_like(snap.in_c),
+            pending=jnp.zeros_like(snap.pending),
+            last_send=jnp.full_like(snap.last_send, -(10**6)),
+            alive=present,
+            x_m=jnp.where(newly[:, None], 0.0, snap.x_m),
+            x_c=jnp.where(newly, 1.0, snap.x_c))
 
     def retire(self, query_id: str) -> None:
         """Retire a query; its slot becomes a masked no-op padding slot
         (immediately refilled from the admission queue when non-empty).
-        Retiring a still-queued query cancels it."""
+        Retiring a still-queued query cancels it; retiring a preempted
+        query discards its suspended state."""
         if self.admission.cancel(query_id):
+            self._enqueued_at.pop(query_id, None)
+            return
+        if query_id in self._preempted:
+            del self._preempted[query_id]
+            self._record_retired(query_id)
             return
         slot = self.registry.retire(query_id)
+        self._record_retired(query_id)
+        self._reset_slot(slot, None)
+        self._drain_admission()
+
+    def _record_retired(self, query_id: str) -> None:
         self._retired[query_id] = None
+        self._activated_at.pop(query_id, None)
         while len(self._retired) > self._STATUS_CAP:
             self._retired.pop(next(iter(self._retired)))
             # _total_msgs keeps pace: final totals stay queryable for as
@@ -415,8 +669,6 @@ class Service:
                 break
             if stale not in self.registry._slot_of:
                 del self._total_msgs[stale]
-        self._reset_slot(slot, None)
-        self._drain_admission()
 
     def replace(self, query_id: str, spec: qmod.QuerySpec) -> None:
         """Swap a tenant's predicate/inputs in place (fresh slot state)."""
@@ -429,7 +681,17 @@ class Service:
                 self.backend.zero_inputs(self.topo.n, self.scfg.d), seed=0,
                 alive=self._present)
         else:
-            fresh = self.backend.init_slot(spec.input_wv(), seed=spec.seed,
+            iw = spec.input_wv()
+            if iw.m.shape[0] < self.topo.n:
+                # Spec admitted before a regrow epoch: rows beyond its
+                # coverage start as zero-weight inputs (they are absent
+                # peers; a later join knowledge-inits them anyway).
+                pad = self.topo.n - iw.m.shape[0]
+                iw = wvs.WV(
+                    jnp.concatenate(
+                        [iw.m, jnp.zeros((pad, iw.m.shape[-1]), iw.m.dtype)]),
+                    jnp.concatenate([iw.c, jnp.zeros((pad,), iw.c.dtype)]))
+            fresh = self.backend.init_slot(iw, seed=spec.seed,
                                            alive=self._present)
         self.states = jax.tree_util.tree_map(
             lambda all_q, one: all_q.at[slot].set(one.astype(all_q.dtype)),
@@ -457,19 +719,107 @@ class Service:
             if value.shape[0] != self.scfg.d:
                 raise ValueError(f"join value has d={value.shape[0]}, "
                                  f"service is configured for d={self.scfg.d}")
-        return self._require_dyn().join(peer, value, weight)
+        mq = self._require_dyn()
+        try:
+            return mq.join(peer, value, weight)
+        except topology.CapacityError:
+            if not self.capman.auto_regrow:
+                raise
+            caps = self.capman.grown_caps(self._dyn.n_cap,
+                                          self._dyn.deg_cap, "rows")
+            if peer is not None:  # grow at least far enough for the row
+                caps["n_cap"] = max(caps["n_cap"], int(peer) + 1)
+            self.grow_capacity(**caps)
+            return self.membership.join(peer, value, weight)
 
     def leave_peer(self, peer: int) -> None:
         """Queue a peer leave (churn: all its links fail with it)."""
         self._require_dyn().leave(peer)
 
     def link_peers(self, i: int, j: int) -> None:
-        """Queue an edge add between two present peers."""
-        self._require_dyn().link(i, j)
+        """Queue an edge add between two present peers.  With
+        ``auto_regrow``, an endpoint at degree capacity grows ``deg_cap``
+        (one epoch) instead of raising."""
+        mq = self._require_dyn()
+        try:
+            mq.link(i, j)
+        except topology.CapacityError:
+            if not self.capman.auto_regrow:
+                raise
+            self.grow_capacity(**self.capman.grown_caps(
+                self._dyn.n_cap, self._dyn.deg_cap, "slots"))
+            self.membership.link(i, j)
 
     def unlink_peers(self, i: int, j: int) -> None:
         """Queue an edge removal (no-op if a leave already tore it down)."""
         self._require_dyn().unlink(i, j)
+
+    # -- capacity epochs (between dispatches) ------------------------------
+    def grow_capacity(self, n_cap: Optional[int] = None,
+                      deg_cap: Optional[int] = None) -> None:
+        """Regrow epoch: larger membership capacity, in place.
+
+        Drives :meth:`DynTopology.grow`, re-shards the backend over the
+        grown tables, and migrates every slot's state across
+        ``new_of_old`` (new rows start dead at init values) — plus every
+        queued membership event and preempted snapshot survives.  Traced
+        shapes change, so the next dispatch recompiles ONCE; with
+        ``control.auto_regrow`` this runs transparently when
+        :meth:`join_peer` / :meth:`link_peers` hit the capacity wall.
+        """
+        dyn = self._dyn
+        if dyn is None:
+            raise RuntimeError(
+                "grow_capacity needs a DynTopology-backed service")
+        new_dyn = dyn.grow(n_cap=n_cap, deg_cap=deg_cap)
+        self.topo = self._dyn = new_dyn
+        self.membership.rebind(new_dyn)
+        self.states = self.backend.regrow(new_dyn, self.states)
+        self._present = new_dyn.present.copy()
+        self._applied_version = new_dyn.version
+        self._edges = max(new_dyn.num_edges, 1)
+        ev = self.capman.note_epoch(
+            "regrow", self.backend.cut_frac(),
+            n_cap=new_dyn.n_cap, deg_cap=new_dyn.deg_cap)
+        self._ctrl_events.append(("epoch", ev))
+
+    def rebalance_now(self) -> Optional[dict]:
+        """Explicit re-partition epoch (engine backend; ``None`` on the
+        partitionless core backend).
+
+        Long churn drifts shard occupancy away from the BFS edge-cut
+        optimum; this rebuilds the partition over the *current* graph and
+        migrates state bitwise across ``new_of_old``.  Returns the epoch
+        record (drift and cut fractions).  Runs automatically when
+        ``control.rebalance_drift`` > 0 and the drift metric crosses it.
+        """
+        before = self.backend.cut_frac()
+        if before is None:
+            return None
+        drift = self.capman.drift(before)
+        self.states = self.backend.rebalance(self.topo, self.states)
+        ev = self.capman.note_epoch(
+            "rebalance", self.backend.cut_frac(),
+            cut_before=before, drift=drift)
+        self._ctrl_events.append(("epoch", ev))
+        return ev
+
+    def _maybe_rebalance(self) -> None:
+        # should_rebalance re-checks the cadence/threshold itself; the
+        # early-outs here just avoid the O(edges) cut_frac() host scan on
+        # every off-cadence dispatch.
+        if self.dispatches == 0 or self.capman.rebalance_drift <= 0.0:
+            return
+        if self.dispatches % self.capman.rebalance_check_every:
+            return
+        if self.capman.should_rebalance(self.dispatches,
+                                        self.backend.cut_frac()):
+            self.rebalance_now()
+
+    def drift(self) -> float:
+        """Current partition drift (cut-fraction increase since the last
+        epoch); 0.0 on the core backend."""
+        return self.capman.drift(self.backend.cut_frac())
 
     def _apply_membership(self) -> int:
         """Drain queued events into the DynTopology and catch every
@@ -564,6 +914,7 @@ class Service:
         """
         k = cycles if cycles is not None else self.scfg.cycles_per_dispatch
         self._apply_membership()
+        self._maybe_rebalance()
         self._drain_admission()
         self._apply_ingest()
         params = self.registry.params
@@ -603,16 +954,61 @@ class Service:
                 "msgs_per_link": sent / self._edges,
                 "topo_version": self._applied_version,
             }
+            slo_fields = self.slo.observe(qid, rec)
+            if slo_fields is not None:
+                rec.update(slo_fields)
             self.telemetry.emit(rec)
             records.append(rec)
+        # Tenants holding no slot still burn their SLO deadline.
+        for qid in self.admission.queued_ids():
+            self.slo.observe_waiting(qid, self.cycles)
+        for qid in self._preempted:
+            self.slo.observe_waiting(qid, self.cycles)
+        self._emit_control_record()
         return records
 
+    def _emit_control_record(self) -> None:
+        """One record per dispatch with the control plane's activity —
+        only when there is any (idle services emit nothing extra)."""
+        events, self._ctrl_events = self._ctrl_events, []
+        if not events and not len(self.admission) and not self._preempted:
+            return
+        agg: dict = {"activated": [], "resumed": [], "preempted": [],
+                     "evicted": [], "epochs": []}
+        for kind, payload in events:
+            if kind == "epoch":
+                agg["epochs"].append(payload)
+            elif kind == "evicted":
+                agg["evicted"].append(
+                    {"query": payload[0], "reason": payload[1]})
+            else:
+                agg[kind].append(payload)
+        self.telemetry.emit({
+            "kind": "control",
+            "dispatch": self.dispatches,
+            "t": self.cycles,
+            "queue_depth": len(self.admission),
+            "preempted_depth": len(self._preempted),
+            **{k: v for k, v in agg.items() if v},
+        })
+
     def total_msgs(self, query_id: str) -> int:
-        """Exact cumulative sends by this query (host-side accumulation)."""
+        """Exact cumulative sends by this query (host-side accumulation;
+        carries across preemption)."""
         return self._total_msgs[query_id]
 
     def snapshot(self, query_id: str) -> lss.LSSState:
         """This query's full simulator state (original peer order) — the
-        parity-test / debugging view."""
+        parity-test / debugging view.  For a preempted query, the state
+        it was suspended with (shapes reflect the capacity at suspension
+        time)."""
+        if query_id in self._preempted:
+            return self._preempted[query_id].state
         return self.backend.snapshot(self.states,
                                      self.registry.slot_of(query_id))
+
+    def slo_report(self) -> Dict[str, dict]:
+        """Per-tenant SLO summary: violations, evaluated windows,
+        attainment — every tenant that declared an SLO (including retired
+        ones, up to the bookkeeping bound)."""
+        return self.slo.report()

@@ -29,6 +29,17 @@ class TelemetrySink:
     ``msgs``          int   sends by this query in this dispatch window
     ``msgs_per_link`` float ditto, normalized per link (current edge count)
     ``topo_version``  int   topology version the dispatch executed under
+
+    Tenants with an :class:`~repro.service.controlplane.slo.SLOSpec`
+    additionally carry ``slo_ok`` / ``slo_violations`` (cumulative) and
+    the per-check booleans (``accuracy_ok`` / ``msgs_ok``).
+
+    The control plane emits one extra *control record* per dispatch with
+    scheduler/capacity activity — distinguished by ``kind: "control"``
+    and carrying no ``query`` key: ``queue_depth``, ``preempted_depth``,
+    plus this boundary's ``activated`` / ``preempted`` /
+    ``evicted`` (with reasons) lists and any ``epochs``
+    (regrow / rebalance, with drift numbers).
     """
 
     def __init__(self, path: Optional[Union[str, IO[str]]] = None,
@@ -59,8 +70,13 @@ class TelemetrySink:
     def for_query(self, query_id: str) -> List[dict]:
         return [r for r in self.records if r.get("query") == query_id]
 
+    def controls(self) -> List[dict]:
+        """The control plane's records (scheduler/capacity activity)."""
+        return [r for r in self.records if r.get("kind") == "control"]
+
     def last_by_query(self) -> dict:
         out = {}
         for r in self.records:
-            out[r["query"]] = r
+            if "query" in r:
+                out[r["query"]] = r
         return out

@@ -1,0 +1,654 @@
+"""Service control plane: SLOs, priority scheduling, capacity epochs.
+
+Contracts:
+
+* SLO evaluation rides the existing telemetry (no extra device work) and
+  counts violations per tenant exactly as specified (grace window, msgs
+  budget).
+* The priority scheduler's preemption round-trips through ``snapshot()``:
+  a suspended query resumes bitwise where it stopped and its subsequent
+  trajectory equals an uninterrupted run's.
+* Capacity epochs (auto-regrow, partition rebalance) are cycle-exact
+  against an uninterrupted run on BOTH backends, and engine state
+  migration across ``new_of_old`` is bitwise-equal to placing the same
+  logical state into the fresh partition.
+* Steady-state serving stays zero-recompile — recompiles happen only at
+  explicit epochs (jit cache stats).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # real hypothesis when installed (CI); seeded fallback shim otherwise
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import lss, regions, sim, topology, wvs
+from repro.engine import EngineConfig, ShardedLSS
+from repro.service import (ControlPlaneConfig, QuerySpec, SLOSpec, Service,
+                           ServiceConfig)
+from repro.service.controlplane import (ActiveView, FifoScheduler,
+                                        PriorityScheduler, SLOTracker,
+                                        WaitingView)
+
+DynTopology = topology.DynTopology
+
+
+def _problem(n, seed=0):
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=n, seed=seed))
+    x = sample(np.random.default_rng(seed + 1), n)
+    return np.asarray(centers), x
+
+
+def _spec(centers, x, seed=0, priority=0, slo=None):
+    return QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
+                     inputs=x, seed=seed, priority=priority, slo=slo)
+
+
+def _state_fields_equal(a: lss.LSSState, b: lss.LSSState, skip=(),
+                        exact=True):
+    for name in lss.LSSState._fields:
+        if name in skip:
+            continue
+        av, bv = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        if exact:
+            assert np.array_equal(av, bv), name
+        else:
+            np.testing.assert_allclose(av, bv, atol=1e-6, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# SLO specs and tracking
+# ---------------------------------------------------------------------------
+
+
+def test_slo_spec_evaluation_semantics():
+    slo = SLOSpec(target_accuracy=0.9, within_cycles=10,
+                  max_msgs_per_link=2.0)
+    rec = {"accuracy": 0.5, "msgs_per_link": 1.0}
+    # Inside the grace window only the msgs budget is due.
+    assert slo.evaluate(rec, 5) == {"msgs_ok": True}
+    # Past the window the accuracy target applies.
+    assert slo.evaluate(rec, 10) == {"accuracy_ok": False, "msgs_ok": True}
+    assert slo.evaluate({"accuracy": 0.95, "msgs_per_link": 3.0}, 20) == \
+        {"accuracy_ok": True, "msgs_ok": False}
+    assert SLOSpec().evaluate(rec, 0) == {}
+
+
+def test_slo_tracker_violations_and_attainment():
+    tr = SLOTracker()
+    tr.submit("a", SLOSpec(target_accuracy=0.9), now_cycles=0)
+    tr.submit("b", None, now_cycles=0)  # no SLO: ignored
+    r1 = tr.observe("a", {"t": 4, "accuracy": 0.5, "msgs_per_link": 0.0})
+    r2 = tr.observe("a", {"t": 8, "accuracy": 1.0, "msgs_per_link": 0.0})
+    assert r1 == {"slo_ok": False, "slo_violations": 1, "accuracy_ok": False}
+    assert r2["slo_ok"] and r2["slo_violations"] == 1
+    assert tr.observe("b", {"t": 4, "accuracy": 0.0}) is None
+    assert tr.violations("a") == 1 and tr.violations("b") == 0
+    assert tr.attainment("a") == 0.5
+    assert tr.report()["a"]["evaluated"] == 2
+
+
+def test_service_emits_slo_fields_and_tracks_violations():
+    centers, x = _problem(25, seed=3)
+    topo = topology.grid(25)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=2))
+    # An impossible msgs budget: every converging dispatch violates it.
+    q = svc.admit(_spec(centers, x, slo=SLOSpec(max_msgs_per_link=0.0)))
+    recs = [svc.tick()[0] for _ in range(3)]
+    assert all("slo_ok" in r and "msgs_ok" in r for r in recs)
+    assert any(not r["slo_ok"] for r in recs)  # it did send messages
+    rep = svc.slo_report()[q]
+    assert rep["violations"] >= 1
+    assert rep["attainment"] < 1.0
+    # Violation trail reaches the sink too.
+    assert any(not r.get("slo_ok", True)
+               for r in svc.telemetry.for_query(q))
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_priority_scheduler_orders_and_preempts():
+    sched = PriorityScheduler(aging=0.0, violation_boost=0.0, preempt=True,
+                              preempt_margin=1.0)
+    active = [ActiveView("lo", 0, 0, 0), ActiveView("hi", 5, 0, 0)]
+    waiting = [WaitingView("w0", 1, 0, 0, False),
+               WaitingView("w1", 3, 0, 0, False)]
+    plan = sched.plan(active, waiting, free_slots=1, now_dispatch=0)
+    # Highest priority admitted to the free slot; the next one clears the
+    # low-class active query by the margin and preempts it — the
+    # high-class active query is untouchable here.
+    assert plan.admit == ["w1", "w0"]
+    assert plan.preempt == ["lo"]
+
+    # Below the margin nothing is preempted.
+    plan = sched.plan(active, [WaitingView("w", 0, 0, 0, False)],
+                      free_slots=0, now_dispatch=0)
+    assert plan.admit == [] and plan.preempt == []
+
+
+def test_priority_scheduler_aging_bounds_starvation():
+    sched = PriorityScheduler(aging=0.5, violation_boost=0.0)
+    lo = WaitingView("lo", 0, 0, 0, False)
+    # A freshly-arrived high-class query beats the young low-class one...
+    hi = WaitingView("hi", 3, 0, 4, False)
+    assert sched.plan([], [lo, hi], 1, now_dispatch=4).admit == ["hi"]
+    # ...but a low-class query that has waited long enough overtakes the
+    # next high-class arrival: starvation is bounded.
+    hi2 = WaitingView("hi2", 3, 0, 10, False)
+    assert sched.plan([], [lo, hi2], 1, now_dispatch=10).admit == ["lo"]
+
+
+def test_fifo_scheduler_is_arrival_order():
+    sched = FifoScheduler()
+    waiting = [WaitingView("b", 9, 0, 2, False),
+               WaitingView("a", 0, 0, 1, False)]
+    plan = sched.plan([], waiting, 1, 5)
+    assert plan.admit == ["a"] and plan.preempt == []
+
+
+# ---------------------------------------------------------------------------
+# preemption round-trips through snapshot()
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["core", "engine"])
+def test_preempt_resume_roundtrip_and_trajectory(backend):
+    centers, x = _problem(25, seed=5)
+    topo = topology.grid(25)
+    cp = ControlPlaneConfig(scheduler="priority", preempt=True)
+    cfg = ServiceConfig(capacity=1, k_max=3, d=2, cycles_per_dispatch=2,
+                        backend=backend, engine_shards=2, control=cp)
+    svc = Service(topo, cfg)
+    a = svc.admit(_spec(centers, x, seed=0, priority=0))
+    svc.tick()
+    svc.tick()
+    snap0 = svc.snapshot(a)
+
+    b = svc.admit(_spec(centers, x, seed=1, priority=5))
+    assert svc.admission_status(b) == "queued"
+    svc.tick()  # boundary: b preempts a
+    assert svc.admission_status(a) == "preempted"
+    assert svc.admission_status(b) == "active"
+    # The suspended snapshot is exactly the pre-preemption state.
+    _state_fields_equal(svc.snapshot(a), snap0)
+
+    svc.retire(b)  # frees the slot: a resumes immediately
+    assert svc.admission_status(a) == "active"
+    # Resume restored it bitwise (engine re-derives per-shard drop keys).
+    _state_fields_equal(svc.snapshot(a), snap0,
+                        skip=("rng",) if backend == "engine" else ())
+
+    recs = [svc.tick()[0] for _ in range(3)]
+
+    # Trajectory parity: an uninterrupted run of the same query sees the
+    # same states and emits the same numbers at each of its dispatches.
+    ref = Service(topo, cfg)
+    ref.admit(_spec(centers, x, seed=0, priority=0))
+    ref.serve(2)
+    ref_recs = [ref.tick()[0] for _ in range(3)]
+    for r, rr in zip(recs, ref_recs):
+        assert r["msgs"] == rr["msgs"]
+        assert r["quiescent"] == rr["quiescent"]
+        np.testing.assert_allclose(r["accuracy"], rr["accuracy"], atol=1e-7)
+    _state_fields_equal(svc.snapshot(a), ref.snapshot(
+        [q for q, _, _ in ref.registry.active_items()][0]),
+        skip=("rng",), exact=False)
+    assert svc.total_msgs(a) == ref.total_msgs(
+        [q for q, _, _ in ref.registry.active_items()][0])
+
+
+def test_preempted_retire_and_terminal_states():
+    centers, x = _problem(16, seed=2)
+    topo = topology.grid(16)
+    cp = ControlPlaneConfig(scheduler="priority")
+    svc = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                      cycles_per_dispatch=1, control=cp))
+    a = svc.admit(_spec(centers, x, 0, priority=0))
+    b = svc.admit(_spec(centers, x, 1, priority=4))
+    svc.tick()
+    assert svc.admission_status(a) == "preempted"
+    svc.retire(a)  # discard the suspended query
+    assert svc.admission_status(a) == "retired"
+    with pytest.raises(ValueError):
+        svc.admit(_spec(centers, x, 2), query_id=b)  # duplicate id
+
+
+# ---------------------------------------------------------------------------
+# engine state migration: bitwise across new_of_old
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(dyn, shards, method, cycles, seed=0):
+    centers, x = _problem(dyn.n, seed=seed)
+    inputs = wvs.from_vector(jnp.asarray(x),
+                             jnp.ones((dyn.n,), jnp.float32))
+    eng = ShardedLSS(dyn, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=shards, cycles_per_dispatch=2,
+                                  method=method, halo_slack=2.0))
+    state = eng.init(inputs, seed=seed, alive=dyn.present.copy())
+    return eng, eng.run(state, cycles)
+
+
+def test_migrate_state_bitwise_equals_fresh_placement():
+    dyn = DynTopology.from_topology(topology.grid(36), n_cap=40, deg_cap=6)
+    eng, state = _run_engine(dyn, shards=3, method="bfs", cycles=6)
+    # Churn the graph, then re-partition it fresh (different assignment).
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        try:
+            p = dyn.add_peer()
+            dyn.add_edge(int(p), int(rng.choice(np.flatnonzero(dyn.present))))
+        except ValueError:
+            dyn.remove_peer(int(rng.choice(np.flatnonzero(dyn.present))))
+    new = ShardedLSS(dyn, eng.centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=4, cycles_per_dispatch=2,
+                                  method="stride", halo_slack=2.0))
+    migrated = new.migrate_from(eng, state)
+    # The acceptance contract: bitwise-equal to placing the same logical
+    # state into the fresh partition (place == init's scatter recipe).
+    ref = new.place_lss_state(eng.to_lss_state(state))
+    for name in type(migrated)._fields:
+        assert np.array_equal(np.asarray(getattr(migrated, name)),
+                              np.asarray(getattr(ref, name))), name
+    # And the logical (original-order) view is unchanged by migration.
+    _state_fields_equal(new.to_lss_state(migrated), eng.to_lss_state(state),
+                        skip=("rng",))
+
+
+def test_migrate_state_with_query_axis_and_regrow():
+    dyn = DynTopology.from_topology(topology.grid(25), n_cap=28, deg_cap=6)
+    eng, state = _run_engine(dyn, shards=2, method="bfs", cycles=4)
+    q_state = jax.tree_util.tree_map(lambda a: jnp.stack([a, a]), state)
+    grown = dyn.grow(n_cap=40, deg_cap=8)
+    new = ShardedLSS(grown, eng.centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=2, cycles_per_dispatch=2,
+                                  halo_slack=2.0))
+    migrated = new.migrate_from(eng, q_state)
+    one = jax.tree_util.tree_map(lambda a: a[0], migrated)
+    ref = new.place_lss_state(eng.to_lss_state(state))
+    for name in type(one)._fields:
+        assert np.array_equal(np.asarray(getattr(one, name)),
+                              np.asarray(getattr(ref, name))), name
+    # Old rows carry over; grown rows are dead at init values.
+    un = new.to_lss_state(one)
+    old = eng.to_lss_state(state)
+    assert np.array_equal(np.asarray(un.alive[:28]), np.asarray(old.alive))
+    assert not np.asarray(un.alive[28:]).any()
+    np.testing.assert_array_equal(np.asarray(un.out_m[:28, :6]),
+                                  np.asarray(old.out_m))
+    assert np.asarray(un.last_send[28:] == -(10**6)).all()
+
+
+# ---------------------------------------------------------------------------
+# capacity epochs mid-serve: cycle-exact vs an uninterrupted run
+# ---------------------------------------------------------------------------
+
+
+def _padded_spec(centers, x, n2, seed=0):
+    """The uninterrupted-reference spec: same inputs, zero-weight padding
+    rows up to the larger capacity (= what a regrown service holds)."""
+    n1 = x.shape[0]
+    xx = np.zeros((n2, x.shape[1]), np.float32)
+    xx[:n1] = x
+    w = np.zeros((n2,), np.float32)
+    w[:n1] = 1.0
+    return QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
+                     inputs=xx, weights=w, seed=seed)
+
+
+def _churn_schedule(n1, extra):
+    """Joins past capacity + links, per dispatch index."""
+    return {
+        1: [("join", n1, [0.5, -0.5]), ("link", n1, 0)],
+        2: [("join", n1 + 1, None), ("link", n1 + 1, 3),
+            ("leave", 5, None)],
+        3: [("join", n1 + 2, [1.0, 0.0]), ("link", n1 + 2, n1)],
+    }
+
+
+def _apply_events(svc, events):
+    for ev in events:
+        if ev[0] == "join":
+            svc.join_peer(ev[1], value=ev[2])
+        elif ev[0] == "link":
+            svc.link_peers(ev[1], ev[2])
+        else:
+            svc.leave_peer(ev[1])
+
+
+@pytest.mark.parametrize("backend", ["core", "engine"])
+def test_auto_regrow_midserve_cycle_exact(backend):
+    """A service that outgrows n_cap mid-serve (auto-regrow epoch) emits
+    exactly what a service provisioned large from day one emits."""
+    base = topology.grid(25)
+    n1, n2 = 26, 29  # tight capacity; regrow must fire for the schedule
+    centers, x = _problem(n1, seed=7)
+    sched = _churn_schedule(25, 3)
+
+    cp = ControlPlaneConfig(auto_regrow=True, grow_factor=1.12)
+    dyn_a = DynTopology.from_topology(base, n_cap=n1, deg_cap=5)
+    svc_a = Service(dyn_a, ServiceConfig(
+        capacity=2, k_max=3, d=2, cycles_per_dispatch=2, backend=backend,
+        engine_shards=2, control=cp))
+    qa = svc_a.admit(_padded_spec(centers, x, n1, seed=0))
+
+    dyn_b = DynTopology.from_topology(base, n_cap=n2, deg_cap=5)
+    svc_b = Service(dyn_b, ServiceConfig(
+        capacity=2, k_max=3, d=2, cycles_per_dispatch=2, backend=backend,
+        engine_shards=2))
+    qb = svc_b.admit(_padded_spec(centers, x, n2, seed=0))
+
+    for disp in range(5):
+        events = sched.get(disp, [])
+        _apply_events(svc_a, events)
+        _apply_events(svc_b, events)
+        (ra,) = svc_a.tick()
+        (rb,) = svc_b.tick()
+        assert ra["msgs"] == rb["msgs"], disp
+        assert ra["quiescent"] == rb["quiescent"]
+        np.testing.assert_allclose(ra["accuracy"], rb["accuracy"],
+                                   atol=1e-7)
+    assert svc_a.topo.n_cap >= 29  # the epoch really happened
+    assert any(e["kind"] == "regrow" for e in svc_a.capman.epochs)
+    # Full-state parity on the rows both services share.
+    sa, sb = svc_a.snapshot(qa), svc_b.snapshot(qb)
+    n = min(sa.alive.shape[0], sb.alive.shape[0])
+    D = min(sa.out_c.shape[-1], sb.out_c.shape[-1])
+    np.testing.assert_allclose(np.asarray(sa.out_m)[:n, :D],
+                               np.asarray(sb.out_m)[:n, :D], atol=1e-6)
+    assert np.array_equal(np.asarray(sa.alive)[:n],
+                          np.asarray(sb.alive)[:n])
+    assert np.array_equal(np.asarray(sa.pending)[:n, :D],
+                          np.asarray(sb.pending)[:n, :D])
+
+
+@pytest.mark.parametrize("backend", ["core", "engine"])
+def test_rebalance_epoch_midserve_cycle_exact(backend):
+    """A forced re-partition epoch mid-serve must not change a single
+    observable: records and state match the same run without the epoch.
+    (On the core backend the epoch is a documented no-op.)"""
+    base = topology.grid(36)
+    centers, x = _problem(40, seed=9)
+
+    def run(with_epoch):
+        dyn = DynTopology.from_topology(base, n_cap=40, deg_cap=6)
+        svc = Service(dyn, ServiceConfig(
+            capacity=2, k_max=3, d=2, cycles_per_dispatch=2,
+            backend=backend, engine_shards=2))
+        q = svc.admit(_spec(centers, x, seed=0))
+        out = []
+        for disp in range(6):
+            if disp == 2:
+                svc.join_peer(36, value=[0.2, 0.2])
+                svc.link_peers(36, 7)
+                svc.leave_peer(12)
+            if disp == 3 and with_epoch:
+                ev = svc.rebalance_now()
+                if backend == "engine":
+                    assert ev is not None and ev["kind"] == "rebalance"
+                else:
+                    assert ev is None
+            out.append(svc.tick()[0])
+        return out, svc.snapshot(q)
+
+    recs_a, snap_a = run(with_epoch=True)
+    recs_b, snap_b = run(with_epoch=False)
+    for ra, rb in zip(recs_a, recs_b):
+        assert ra["msgs"] == rb["msgs"]
+        assert ra["quiescent"] == rb["quiescent"]
+        np.testing.assert_allclose(ra["accuracy"], rb["accuracy"], atol=1e-7)
+    _state_fields_equal(snap_a, snap_b, skip=("rng",), exact=False)
+
+
+@given(st.integers(min_value=0, max_value=2 ** 30))
+@settings(max_examples=5, deadline=None)
+def test_property_epochs_midserve_cycle_exact(seed):
+    """Property: random churn + randomly-placed epochs (regrow and/or
+    rebalance) never change the served trajectory (engine backend, which
+    exercises both migration paths)."""
+    rng = np.random.default_rng(seed)
+    base = topology.grid(16)
+    centers, x = _problem(20, seed=int(rng.integers(100)))
+    epoch_at = int(rng.integers(1, 4))
+    epoch_kind = ["grow", "rebalance", "both"][int(rng.integers(3))]
+
+    def run(with_epochs):
+        dyn = DynTopology.from_topology(base, n_cap=20, deg_cap=5)
+        svc = Service(dyn, ServiceConfig(
+            capacity=2, k_max=3, d=2, cycles_per_dispatch=2,
+            backend="engine", engine_shards=2))
+        q = svc.admit(_spec(centers, x, seed=1))
+        ev_rng = np.random.default_rng(seed + 1)
+        out = []
+        for disp in range(5):
+            # a couple of random in-capacity membership events
+            for _ in range(2):
+                op = ev_rng.integers(3)
+                try:
+                    if op == 0:
+                        p = svc.join_peer()
+                        svc.link_peers(int(p), int(ev_rng.choice(
+                            np.flatnonzero(svc.topo.present))))
+                    elif op == 1:
+                        svc.leave_peer(int(ev_rng.choice(
+                            np.flatnonzero(svc.topo.present))))
+                    else:
+                        edges = svc.topo.edge_list()
+                        if edges:
+                            svc.unlink_peers(
+                                *edges[ev_rng.integers(len(edges))])
+                except (ValueError, RuntimeError):
+                    pass
+            if with_epochs and disp == epoch_at:
+                if epoch_kind in ("grow", "both"):
+                    svc.grow_capacity(n_cap=26, deg_cap=6)
+                if epoch_kind in ("rebalance", "both"):
+                    svc.rebalance_now()
+            out.append(svc.tick()[0])
+        return out, svc.snapshot(q)
+
+    recs_a, snap_a = run(True)
+    recs_b, snap_b = run(False)
+    for ra, rb in zip(recs_a, recs_b):
+        assert ra["msgs"] == rb["msgs"]
+        assert ra["quiescent"] == rb["quiescent"]
+        np.testing.assert_allclose(ra["accuracy"], rb["accuracy"], atol=1e-7)
+    n, D = snap_b.alive.shape[0], snap_b.out_c.shape[-1]
+    np.testing.assert_allclose(np.asarray(snap_a.out_m)[:n, :D],
+                               np.asarray(snap_b.out_m), atol=1e-6)
+    assert np.array_equal(np.asarray(snap_a.pending)[:n, :D],
+                          np.asarray(snap_b.pending))
+    assert np.array_equal(np.asarray(snap_a.alive)[:n],
+                          np.asarray(snap_b.alive))
+
+
+# ---------------------------------------------------------------------------
+# zero-recompile steady state; recompiles only at epochs
+# ---------------------------------------------------------------------------
+
+
+def test_steady_state_zero_recompile_with_controlplane():
+    centers, x = _problem(30, seed=4)
+    dyn = DynTopology.from_topology(topology.grid(25), n_cap=30, deg_cap=6)
+    cp = ControlPlaneConfig(scheduler="priority", preempt=True)
+    svc = Service(dyn, ServiceConfig(capacity=2, k_max=3, d=2,
+                                     cycles_per_dispatch=2, control=cp))
+    a = svc.admit(_spec(centers, x, 0, priority=0))
+    a2 = svc.admit(_spec(centers, x, 2, priority=1))
+    svc.tick()  # warm
+    if not hasattr(svc._step, "_cache_size"):
+        pytest.skip("jit cache stats unavailable on this jax")
+    warm = svc._step._cache_size()
+
+    # Contention: preempt, resume, churn, SLO tracking — all data-only.
+    b = svc.admit(_spec(centers, x, 1, priority=5,
+                        slo=SLOSpec(target_accuracy=0.5, within_cycles=2)))
+    svc.tick()
+    assert svc.admission_status(a) == "preempted"
+    assert svc.admission_status(a2) == "active"
+    svc.retire(b)
+    p = svc.join_peer(value=[0.1, 0.1])
+    svc.link_peers(p, 0)
+    svc.tick()
+    svc.tick()
+    assert svc._step._cache_size() == warm
+
+    # A regrow epoch is the one allowed recompile (traced shapes grew).
+    svc.grow_capacity(n_cap=36)
+    svc.tick()
+    assert svc._step._cache_size() == warm + 1
+    svc.tick()
+    assert svc._step._cache_size() == warm + 1  # steady again
+
+
+# ---------------------------------------------------------------------------
+# contention: priority policy beats FIFO on high-priority attainment
+# ---------------------------------------------------------------------------
+
+
+def _contended_run(scheduler):
+    """Capacity-2 service, 6 tenants (2 high-priority with SLOs).  Low
+    tenants hold slots; high tenants arrive late and need slots to meet
+    an accuracy-within-T SLO.  Returns mean high-priority attainment."""
+    centers, x = _problem(25, seed=11)
+    topo = topology.grid(25)
+    cp = ControlPlaneConfig(scheduler=scheduler, preempt=True,
+                            aging=0.1, preempt_margin=1.0)
+    svc = Service(topo, ServiceConfig(capacity=2, k_max=3, d=2,
+                                      cycles_per_dispatch=2,
+                                      admission_queue=8, control=cp))
+    slo = SLOSpec(target_accuracy=0.9, within_cycles=8)
+    lows = [svc.admit(_spec(centers, x, seed=i, priority=0))
+            for i in range(2)]
+    svc.tick()
+    highs = [svc.admit(_spec(centers, x, seed=10 + i, priority=5, slo=slo))
+             for i in range(2)]
+    spare = [svc.admit(_spec(centers, x, seed=20 + i, priority=0))
+             for i in range(2)]
+    for _ in range(8):
+        svc.tick()
+    return float(np.mean([svc.slo.attainment(q) for q in highs]))
+
+
+def test_priority_improves_high_priority_attainment_vs_fifo():
+    fifo = _contended_run("fifo")
+    prio = _contended_run("priority")
+    # Under FIFO the high-priority tenants wait behind the low ones and
+    # burn their SLO windows in the queue; the priority policy preempts.
+    assert prio > fifo
+    assert prio == 1.0
+
+
+# ---------------------------------------------------------------------------
+# admission telemetry: reasons, depth, terminal statuses
+# ---------------------------------------------------------------------------
+
+
+def test_admission_eviction_reason_and_queue_depth_telemetry():
+    centers, x = _problem(16, seed=1)
+    topo = topology.grid(16)
+    svc = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                      cycles_per_dispatch=1,
+                                      admission_queue=1,
+                                      admission_overflow="evict-oldest"))
+    svc.admit(_spec(centers, x, 0))
+    old = svc.admit(_spec(centers, x, 1))
+    new = svc.admit(_spec(centers, x, 2))  # evicts `old`
+    assert svc.admission_status(old) == "evicted"
+    assert "overflow" in svc.admission.terminal_reason(old)
+    svc.tick()
+    ctrl = svc.telemetry.controls()
+    assert ctrl, "control record expected while the queue is non-empty"
+    assert ctrl[-1]["queue_depth"] == 1
+    ev = [e for c in ctrl for e in c.get("evicted", [])]
+    assert ev and ev[0]["query"] == old and "overflow" in ev[0]["reason"]
+    del new
+
+
+def test_admission_rejection_keeps_terminal_status():
+    centers, x = _problem(16, seed=1)
+    topo = topology.grid(16)
+    svc = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                      admission_queue=1))
+    svc.admit(_spec(centers, x, 0))
+    svc.admit(_spec(centers, x, 1))
+    with pytest.raises(RuntimeError, match="admission"):
+        svc.admit(_spec(centers, x, 2), query_id="doomed")
+    assert svc.admission_status("doomed") == "rejected"
+    assert "full" in svc.admission.terminal_reason("doomed")
+
+
+# ---------------------------------------------------------------------------
+# eager capacity walls + membership validation indices
+# ---------------------------------------------------------------------------
+
+
+def test_membership_eager_degree_capacity_error():
+    dyn = DynTopology.from_topology(topology.grid(16), n_cap=18, deg_cap=4)
+    centers, x = _problem(18, seed=1)
+    svc = Service(dyn, ServiceConfig(capacity=1, k_max=3, d=2))
+    # Corner peer 0 holds 2 links; two queued links fill its row.
+    svc.link_peers(0, 3)
+    svc.link_peers(0, 12)
+    with pytest.raises(topology.CapacityError, match="degree capacity"):
+        svc.link_peers(0, 15)
+    # The queued events themselves still apply cleanly.
+    svc.tick()
+    assert not svc.membership.failures
+
+
+def test_membership_eager_degree_capacity_autogrows():
+    dyn = DynTopology.from_topology(topology.grid(16), n_cap=18, deg_cap=4)
+    centers, x = _problem(18, seed=1)
+    svc = Service(dyn, ServiceConfig(
+        capacity=1, k_max=3, d=2,
+        control=ControlPlaneConfig(auto_regrow=True)))
+    svc.admit(_spec(centers, x, 0))
+    svc.tick()
+    svc.link_peers(0, 3)
+    svc.link_peers(0, 12)
+    svc.link_peers(0, 15)  # would exceed deg_cap=4: regrows transparently
+    assert svc.topo.deg_cap > 4
+    svc.tick()
+    assert not svc.membership.failures
+    assert svc.topo.has_edge(0, 15)
+
+
+def test_membership_noop_unlink_keeps_degree_projection():
+    """A no-op unlink (absent edge, or a duplicate) must not decrement
+    the projected degree — otherwise the eager capacity wall (and the
+    auto-regrow trigger behind it) is silently bypassed and the link is
+    dropped at the drain instead."""
+    dyn = DynTopology.from_topology(topology.grid(16), n_cap=18, deg_cap=4)
+    svc = Service(dyn, ServiceConfig(capacity=1, k_max=3, d=2))
+    svc.link_peers(0, 3)
+    svc.link_peers(0, 12)  # corner 0 projected at deg_cap=4
+    svc.unlink_peers(0, 15)  # no such edge: no-op
+    svc.unlink_peers(0, 1)  # real: frees one slot
+    svc.unlink_peers(0, 1)  # duplicate: second is a no-op
+    assert svc.membership.projected_degree(0) == 3
+    svc.link_peers(0, 15)  # fits the freed slot
+    with pytest.raises(topology.CapacityError, match="degree capacity"):
+        svc.link_peers(0, 13)  # the two no-op unlinks must not count
+    svc.tick()
+    assert not svc.membership.failures
+    assert svc.topo.has_edge(0, 15) and not svc.topo.has_edge(0, 1)
+
+
+def test_grow_carries_version_forward():
+    dyn = DynTopology.from_topology(topology.grid(16), strict=True)
+    dyn.remove_edge(0, 1)
+    v = dyn.version
+    grown = dyn.grow(n_cap=20)
+    assert grown.version == v
+    with pytest.raises(ValueError, match="journal floor"):
+        grown.events_since(0)
+    assert grown.events_since(v) == []

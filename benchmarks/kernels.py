@@ -1,0 +1,114 @@
+"""Kernel-suite benchmark: fused vs unfused CYCLE time through the service.
+
+Measures the tentpole path end to end — the service's one-dispatch-per-K-
+cycles vmapped query axis over :func:`repro.core.lss.cycle_impl` — with
+the per-cycle hot loop on the ``reference`` (unfused jnp) vs the ``fused``
+(packed Pallas) kernel suite, at n in {10k, 100k} x Q in {1, 64}
+(100k rows in ``--full`` mode; smoke clamps n).  Every row records the
+suite the dispatch ACTUALLY ran (``fused=`` from ``Service.
+dispatch_info()``), so an unfused fallback cannot be mislabeled.
+
+On this CPU container the fused suite executes in interpret mode —
+bit-exact but orders of magnitude slower than Mosaic — so fused rows are
+only taken at Q=1 and n <= 10k here (calibration: the number proves the
+path runs, NOT the TPU speed); the skipped combinations are logged, never
+silently dropped.  On a TPU backend the same code takes fused rows across
+the full grid.
+
+``msgs_per_link`` is deterministic for the fixed workload AND equal
+between the suites (the fused path is bitwise-equal to the reference),
+which gives the ``--check`` gate a semantic invariant on top of the wall
+tolerances.  Emits the fourth gated JSON artifact, BENCH_kernels.json.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import regions, topology
+from repro.service import Service, ServiceConfig
+from repro.service.query import QuerySpec
+
+from . import common
+from .common import Row
+
+_REPS = 3
+
+
+def _specs(n: int, q: int, d: int = 2):
+    """q tenants, mixed Voronoi (ragged k) + halfspace kinds."""
+    rng = np.random.default_rng(7)
+    out = []
+    for i in range(q):
+        inputs = rng.standard_normal((n, d)).astype(np.float32)
+        if i % 3 == 2:
+            fam = regions.HalfspaceRegions(
+                w=np.asarray([1.0, -0.5], np.float32),
+                b=np.float32(0.1 * (i % 5)))
+        else:
+            k = 2 + (i % 3)
+            fam = regions.VoronoiRegions(
+                rng.standard_normal((k, d)).astype(np.float32))
+        out.append(QuerySpec(region=fam, inputs=inputs, seed=i))
+    return out
+
+
+def _measure(n: int, q: int, fused: bool):
+    topo = topology.grid(n)
+    svc = Service(topo, ServiceConfig(
+        capacity=q, k_max=4, d=2, cycles_per_dispatch=1,
+        use_kernels=fused))
+    for spec in _specs(topo.n, q):
+        svc.admit(spec)
+    svc.tick()  # warm: compiles the dispatch
+    # Cycle-1 sends are counted at cycle-2 delivery: read the second
+    # tick's records for the (deterministic) per-link message rate.
+    records = svc.tick()
+    msgs_per_link = float(np.median([r["msgs_per_link"] for r in records]))
+    reps = _REPS if not (fused and _interpret()) else 2
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        svc.tick()
+    dt = (time.perf_counter() - t0) / reps  # 1 cycle per tick
+    info = svc.dispatch_info()
+    return dt, msgs_per_link, info, topo.n
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def run(full: bool = False):
+    rows = []
+    ns = [10_000] + ([100_000] if full else [])
+    interp = _interpret()
+    if not full:
+        print("# kernels: n=100k rows are --full only", file=sys.stderr)
+    for n in ns:
+        n_eff = common.clamp_n(n)
+        for q in (1, 64):
+            for fused in (False, True):
+                if fused and interp and (q > 1 or n_eff > 10_000):
+                    # Interpret-mode Pallas is the exactness path, not a
+                    # speed path: full-grid fused rows need TPU hardware.
+                    print(f"# kernels: skipping fused row n={n_eff} Q={q} "
+                          "(interpret mode; rerun on TPU)", file=sys.stderr)
+                    continue
+                dt, mpl, info, n_real = _measure(n_eff, q, fused)
+                name = (f"kernels/{info['suite']}/n{n_real}/q{q}")
+                rows.append(Row(
+                    name, dt * 1e6,
+                    f"fused={int(info['fused'])};msgs_per_link={mpl:.4f}",
+                    extra={
+                        "suite_name": info["suite"],
+                        "fused": bool(info["fused"]),
+                        "interpret": bool(interp and info["fused"]),
+                        "n": n_real, "q": q,
+                        "msgs_per_link": mpl,
+                        "peers_per_s": n_real * q / dt,
+                    }))
+    return rows

@@ -29,7 +29,7 @@ import os
 import statistics
 import sys
 
-JSON_SUITES = ("service", "engine", "controlplane")
+JSON_SUITES = ("service", "engine", "controlplane", "kernels")
 
 
 def _summary(rows) -> dict:
@@ -100,8 +100,8 @@ def main(argv=None) -> None:
     from . import (controlplane, engine_scaleup, fig2_scaleup,
                    fig3_connectivity, fig4_message_loss, fig5_difficulty,
                    fig6_dynamic_data, fig7_loss_dynamic, fig8_churn,
-                   figD_ineffective, kernel_bench, membership_churn,
-                   service_throughput)
+                   figD_ineffective, kernel_bench, kernels,
+                   membership_churn, service_throughput)
 
     suites = {
         "fig2": fig2_scaleup, "fig3": fig3_connectivity,
@@ -110,7 +110,7 @@ def main(argv=None) -> None:
         "fig8": fig8_churn, "figD": figD_ineffective,
         "kernel": kernel_bench, "engine": engine_scaleup,
         "service": service_throughput, "membership": membership_churn,
-        "controlplane": controlplane,
+        "controlplane": controlplane, "kernels": kernels,
     }
     if args.check:
         suites = {k: v for k, v in suites.items() if k in JSON_SUITES}

@@ -36,6 +36,10 @@ def main():
     ap.add_argument("--joins", type=int, default=24,
                     help="peer joins at mid-run (forces a regrow epoch)")
     ap.add_argument("--jsonl", default=None, help="telemetry JSONL path")
+    ap.add_argument("--kernels", action="store_true",
+                    help="fused Pallas kernel suite for the hot loop "
+                         "(interpret mode off-TPU: bit-exact but slow — "
+                         "keep --n small; auto-selected on TPU)")
     args = ap.parse_args()
 
     side = int(round(args.n ** 0.5))
@@ -49,8 +53,11 @@ def main():
     svc = Service(dyn, ServiceConfig(capacity=args.slots, k_max=4, d=2,
                                      cycles_per_dispatch=args.k,
                                      admission_queue=args.queries,
-                                     control=cp),
+                                     control=cp,
+                                     use_kernels=args.kernels or None),
                   telemetry=sink)
+    print(f"dispatch runs the {svc.dispatch_info()['suite']!r} kernel suite"
+          f" (fused={svc.dispatch_info()['fused']})")
 
     # Three priority classes; the high class declares an accuracy SLO.
     slo = SLOSpec(target_accuracy=0.95, within_cycles=4 * args.k)

@@ -40,7 +40,7 @@ from . import correction, stopping, topology, wvs
 __all__ = [
     "LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle",
     "cycle_impl", "clear_slots", "pad_bucket", "metrics", "metrics_impl",
-    "counter_dtype",
+    "counter_dtype", "suite_hooks",
 ]
 
 
@@ -306,8 +306,32 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
 correction_loop = _correction_loop
 
 
+def suite_hooks(suite, state: LSSState, live, regions, cfg: LSSConfig):
+    """Bind a :class:`repro.kernels.suite.KernelSuite` to one state.
+
+    Returns ``(status_viol, corrected, entry)`` in the shape
+    :func:`correction_loop` consumes — the one adapter every layer (core
+    cycle, engine ``_peer_update``, service vmapped dispatch) shares.
+    ``regions`` is the packed :class:`~repro.core.regions.PackedSlot`
+    whose table the suite's decide runs against; ``cfg.beta``/``cfg.eps``
+    may be traced per-query scalars (they reach the kernels as data).
+    """
+    def status_viol(out_m, out_c):
+        return suite.status_viol(state.x_m, state.x_c, out_m, out_c,
+                                 state.in_m, state.in_c, live, regions,
+                                 cfg.eps)
+
+    def corrected(old_s, a0, in_m, in_c, v):
+        return suite.corrected(old_s, a0, in_m, in_c, v, cfg.beta, cfg.eps)
+
+    s, viol = status_viol(state.out_m, state.out_c)
+    a0 = stopping.agreements(state.out_m, state.out_c,
+                             state.in_m, state.in_c)
+    return status_viol, corrected, (s, a0, viol)
+
+
 def cycle_impl(state: LSSState, topo: TopoArrays, cfg: LSSConfig, decide,
-               gate=None):
+               gate=None, suite=None, regions=None):
     """Untraced body of :func:`cycle` — the query-batchable form.
 
     Unlike :func:`cycle` this takes ``decide`` explicitly and is not jitted,
@@ -322,24 +346,46 @@ def cycle_impl(state: LSSState, topo: TopoArrays, cfg: LSSConfig, decide,
     a padding query slot whose state starts quiescent therefore never
     posts a message and its ``msgs`` counter stays exactly zero, while the
     cycle/RNG bookkeeping still advances in lockstep with the live slots.
+
+    ``suite`` + ``regions`` (a :class:`repro.kernels.suite.KernelSuite`
+    and a packed :class:`~repro.core.regions.PackedSlot`) route the hot
+    loop — status/violations and the Eq.-10 correction — through that
+    suite (e.g. the fused Pallas kernels) instead of ``decide``-based
+    formulas; ``decide`` may then be None.  Because the packed table and
+    the knobs are traced data, a vmapped query axis batches the kernels
+    into a leading grid dimension and slot updates never recompile.
     """
     rng, kdrop = jax.random.split(state.rng)
     state = state._replace(rng=rng)
     state, _ = _deliver(state, topo, cfg.drop_rate, kdrop)
 
     live = _live_mask(topo, state.alive)
-    s = stopping.status(
-        state.x_m, state.x_c, state.out_m, state.out_c, state.in_m, state.in_c, live
-    )
-    a = stopping.agreements(state.out_m, state.out_c, state.in_m, state.in_c)
-    viol = _violations(decide, s, a, live, cfg.eps)
+    status_viol = corrected = None
+    if suite is not None:
+        if regions is None:
+            raise ValueError("cycle_impl(suite=...) needs packed `regions`")
+        status_viol, corrected, entry = suite_hooks(
+            suite, state, live, regions, cfg)
+        s, _a0, viol = entry
+        # decide (possibly None) is unused downstream: correction_loop
+        # only consults it through the default hooks, which are supplied.
+    else:
+        s = stopping.status(
+            state.x_m, state.x_c, state.out_m, state.out_c, state.in_m,
+            state.in_c, live
+        )
+        a = stopping.agreements(state.out_m, state.out_c, state.in_m,
+                                state.in_c)
+        viol = _violations(decide, s, a, live, cfg.eps)
+        entry = (s, a, viol)
     timer_ok = (state.t - state.last_send) >= cfg.ell
     active = state.alive & timer_ok & jnp.any(viol, axis=1)
     if gate is not None:
         active = active & gate
 
     out_m, out_c, v, did_send = _correction_loop(
-        decide, state, topo, live, active, cfg, entry=(s, a, viol))
+        decide, state, topo, live, active, cfg, status_viol=status_viol,
+        corrected=corrected, entry=entry)
     pending = state.pending | (v & did_send[:, None])
     last_send = jnp.where(did_send, state.t, state.last_send)
     sent_now = jnp.sum(v & did_send[:, None])
@@ -350,12 +396,29 @@ def cycle_impl(state: LSSState, topo: TopoArrays, cfg: LSSConfig, decide,
     ), sent_now
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "decide"))
+@functools.partial(jax.jit, static_argnames=("cfg", "decide", "suite"))
 def cycle(state: LSSState, topo: TopoArrays, centers: jax.Array, cfg: LSSConfig,
-          decide=None):
-    """One synchronous simulator cycle.  Returns (state', sent_this_cycle)."""
+          decide=None, suite=None):
+    """One synchronous simulator cycle.  Returns (state', sent_this_cycle).
+
+    ``suite`` (a registered :class:`~repro.kernels.suite.KernelSuite`,
+    static) routes the hot loop through that suite's fused path with
+    ``centers`` packed as a Voronoi slot; ``decide`` remains the general
+    escape hatch for opaque decision functions (reference formulas only).
+    """
     from . import regions as _regions
 
+    if suite is not None:
+        if decide is not None:
+            # Mirror the engine's contract: never drop a requested
+            # kernel path silently.
+            raise ValueError(
+                "cycle() cannot honor both `decide` and `suite` — an "
+                "opaque decide cannot feed the packed kernels; drop one "
+                "(or pack the family and use cycle_impl(suite=, "
+                "regions=))")
+        return cycle_impl(state, topo, cfg, None, suite=suite,
+                          regions=_regions.PackedSlot.voronoi(centers))
     if decide is None:
         decide = lambda v: _regions.decide_voronoi(v, centers)
     return cycle_impl(state, topo, cfg, decide)

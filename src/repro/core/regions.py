@@ -28,8 +28,10 @@ __all__ = [
     "VoronoiRegions",
     "HalfspaceRegions",
     "PackedRegions",
+    "PackedSlot",
     "decide_voronoi",
     "decide_packed",
+    "as_packed_slot",
     "KIND_VORONOI",
     "KIND_HALFSPACE",
 ]
@@ -102,6 +104,74 @@ def decide_packed(v: jax.Array, kind, centers, cmask, w, b) -> jax.Array:
     vor = jnp.argmin(scores, axis=-1).astype(jnp.int32)
     half = (jnp.einsum("...d,d->...", v, w) >= b).astype(jnp.int32)
     return jnp.where(kind == KIND_VORONOI, vor, half)
+
+
+class PackedSlot(NamedTuple):
+    """ONE family in the packed ``(kind, centers, cmask, w, b)`` form.
+
+    This is the currency every execution layer passes around: it is what
+    :class:`PackedRegions` holds per query slot, what the fused Pallas
+    kernels (:mod:`repro.kernels`) take as their region table, and what
+    the engine/core fused paths build from a concrete family.  All fields
+    may be traced — under the service's query-axis ``vmap`` each leaf is
+    a per-slot slice of the (Q, ...) batch.  Field order matches
+    :class:`PackedRegions` so ``PackedSlot(*packed_slice)`` works.
+    """
+
+    kind: jax.Array  # int32 ()  KIND_VORONOI | KIND_HALFSPACE
+    centers: jax.Array  # (Kmax, d)
+    cmask: jax.Array  # bool (Kmax,)
+    w: jax.Array  # (d,)
+    b: jax.Array  # ()
+
+    @property
+    def k_max(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.centers.shape[1]
+
+    @classmethod
+    def voronoi(cls, centers) -> "PackedSlot":
+        """Pack unpadded Voronoi centers (all-valid ``cmask``)."""
+        centers = jnp.asarray(centers)
+        k, d = centers.shape
+        return cls(
+            kind=jnp.asarray(KIND_VORONOI, jnp.int32),
+            centers=centers,
+            cmask=jnp.ones((k,), bool),
+            w=jnp.zeros((d,), centers.dtype),
+            b=jnp.zeros((), centers.dtype),
+        )
+
+    @classmethod
+    def halfspace(cls, w, b, k_max: int = 1) -> "PackedSlot":
+        w = jnp.asarray(w)
+        return cls(
+            kind=jnp.asarray(KIND_HALFSPACE, jnp.int32),
+            centers=jnp.zeros((k_max, w.shape[0]), w.dtype),
+            cmask=jnp.zeros((k_max,), bool),
+            w=w,
+            b=jnp.asarray(b, w.dtype),
+        )
+
+    def decide(self, v: jax.Array) -> jax.Array:
+        return decide_packed(v, *self)
+
+
+def as_packed_slot(region) -> PackedSlot:
+    """Coerce a region family (or bare Voronoi centers) to a PackedSlot."""
+    if isinstance(region, PackedSlot):
+        return region
+    if isinstance(region, VoronoiRegions):
+        return PackedSlot.voronoi(region.centers)
+    if isinstance(region, HalfspaceRegions):
+        return PackedSlot.halfspace(region.w, region.b)
+    arr = jnp.asarray(region)
+    if arr.ndim == 2:  # bare (k, d) Voronoi centers
+        return PackedSlot.voronoi(arr)
+    raise TypeError(f"cannot pack region family {type(region)!r}")
 
 
 class PackedRegions(NamedTuple):
@@ -198,8 +268,11 @@ class PackedRegions(NamedTuple):
             b=self.b.at[slot].set(0.0),
         )
 
+    def slot(self, i: int) -> PackedSlot:
+        """One slot's packed parameters (indexable under tracing)."""
+        return PackedSlot(self.kind[i], self.centers[i], self.cmask[i],
+                          self.w[i], self.b[i])
+
     def decide_slot(self, slot: int) -> RegionFamily:
         """The decision function of one slot (host-side convenience)."""
-        return lambda v: decide_packed(
-            v, self.kind[slot], self.centers[slot], self.cmask[slot],
-            self.w[slot], self.b[slot])
+        return self.slot(slot).decide

@@ -10,8 +10,11 @@ cycle is::
                    (:mod:`.exchange`);
     2. update    — status / violation / selective-correction math, reused
                    VERBATIM from the core (``stopping``, ``correction``,
-                   ``lss.correction_loop``), or routed through the fused
-                   Pallas kernels (:mod:`repro.kernels.ops`) per shard.
+                   ``lss.correction_loop``), or routed through a
+                   :class:`~repro.kernels.suite.KernelSuite` — e.g. the
+                   fused Pallas kernels over the packed region
+                   representation — per shard (``EngineConfig.
+                   use_kernels``).
 
 Because step 2 is peer-local and step 1 reproduces exactly the core's
 "message (i, k) lands at (nbr[i,k], rev[i,k])" delivery, the engine is
@@ -39,14 +42,15 @@ recompiles.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import warnings
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.compat import shard_map
 from repro.core import lss, regions, stopping, topology, wvs
-from repro.kernels import ops as kernel_ops
+from repro.kernels import suite as kernel_suite
 
 from . import exchange, partition
 
@@ -93,7 +97,11 @@ class EngineConfig(NamedTuple):
     num_shards: int = 2
     cycles_per_dispatch: int = 8  # K cycles fused per jit dispatch
     method: str = "bfs"  # partitioner: "bfs" | "stride"
-    use_kernels: Optional[bool] = None  # None = auto (Pallas on TPU only)
+    # Kernel suite for the per-peer hot loop: None = auto (fused Pallas on
+    # TPU, reference elsewhere), bool, or a registered suite name
+    # (repro.kernels.suite).  Works for ANY packed region family
+    # (Voronoi + halfspace) and composes with the service query axis.
+    use_kernels: Union[bool, str, None] = None
     halo_slack: float = 1.0  # >1 pads halo width for membership headroom
 
 
@@ -122,18 +130,30 @@ class ShardedLSS:
       centers: (k, d) Voronoi option points.
       cfg: the simulator :class:`~repro.core.lss.LSSConfig` (semantics).
       ecfg: :class:`EngineConfig` (execution: shards, dispatch fusion).
-      decide: optional region decision fn; default Voronoi on ``centers``.
+      decide: optional OPAQUE region decision fn (reference formulas only
+        — the packed kernels cannot represent it; prefer ``region=``).
+      region: optional region family (``VoronoiRegions`` /
+        ``HalfspaceRegions`` / :class:`~repro.core.regions.PackedSlot`)
+        replacing the default Voronoi-on-``centers``; packed, so it rides
+        the fused kernel path.
     """
 
     def __init__(self, topo: topology.Topology, centers,
                  cfg: lss.LSSConfig = lss.LSSConfig(),
-                 ecfg: EngineConfig = EngineConfig(), decide=None):
+                 ecfg: EngineConfig = EngineConfig(), decide=None,
+                 region=None):
         self.cfg = cfg
         self.ecfg = ecfg
         self.centers = jnp.asarray(centers)
-        custom_decide = decide is not None
-        self.decide = decide or (
-            lambda v: regions.decide_voronoi(v, self.centers))
+        if region is not None:
+            self.region_slot = regions.as_packed_slot(region)
+            self.decide = decide or self.region_slot.decide
+        elif decide is None:
+            self.region_slot = regions.PackedSlot.voronoi(self.centers)
+            self.decide = lambda v: regions.decide_voronoi(v, self.centers)
+        else:
+            self.region_slot = None  # opaque decide: not packable
+            self.decide = decide
         part = partition.make_partition(topo, ecfg.num_shards, ecfg.method)
         # halo_slack > 1 pads the halo width for membership headroom: edge
         # churn that grows a boundary stays a data-only update until the
@@ -149,17 +169,29 @@ class ShardedLSS:
         # catches up incrementally from here.
         self._topo_version = getattr(topo, "version", 0)
         self._pos = jnp.asarray(part.new_of_old)  # (n,) orig -> flattened
-        use_kernels = ecfg.use_kernels
-        if use_kernels is None:
-            # The fused kernels hardwire Voronoi-on-centers; a custom
-            # decide function must stay on the reference formulas.
-            use_kernels = (jax.default_backend() == "tpu"
-                           and not custom_decide)
-        elif use_kernels and custom_decide:
-            raise ValueError(
-                "use_kernels=True routes decisions through the Voronoi "
-                "Pallas kernel and cannot honor a custom `decide`")
-        self.use_kernels = bool(use_kernels)
+        if self.region_slot is None:
+            # An opaque decide callable cannot feed the packed kernels:
+            # auto falls back to the reference suite, an explicitly
+            # requested FUSED suite is an error (a non-fused suite name
+            # honors the opaque decide and is fine).
+            requested = (kernel_suite.get_suite("reference")
+                         if ecfg.use_kernels in (None, False)
+                         else kernel_suite.resolve_suite(ecfg.use_kernels))
+            if requested.fused:
+                raise ValueError(
+                    "use_kernels routes decisions through the packed "
+                    "Pallas kernels and cannot honor an opaque `decide` "
+                    "callable — pass `region=` (a region family) instead")
+            self.suite = requested
+        else:
+            self.suite = kernel_suite.resolve_suite(ecfg.use_kernels)
+        self.use_kernels = self.suite.fused
+        # Host-visible record of what the most recently TRACED dispatch
+        # runs (benchmarks read this so unfused fallbacks can't mislabel
+        # runs; _peer_update keeps "fused" current per compilation).
+        self.dispatch_info = {"suite": self.suite.name,
+                              "fused": self.suite.fused}
+        self._warned_unfused = False
         self._mesh = None
         self._axis = None
         # Donation lets XLA reuse the K-cycle block's state buffers in
@@ -295,35 +327,30 @@ class ShardedLSS:
 
     # -- per-peer update (flattened), shared with the collective path ------
     def _peer_update(self, out_m, out_c, in_m, in_c, x_m, x_c, live,
-                     last_send, alive, t, decide=None, cfg=None, gate=None):
+                     last_send, alive, t, decide=None, cfg=None, gate=None,
+                     pregions=None):
         """Violation test + selective correction on flattened (N, ...) rows.
 
         This is exactly the post-delivery half of :func:`repro.core.lss.
         cycle`; ``lss.correction_loop`` is the same do-while object.
 
-        ``decide``/``cfg``/``gate`` override the engine's own (used by the
-        service layer, which vmaps a query axis of per-query region
-        families, traceable knobs and an active-slot gate over this body).
-        Overrides bypass the fused kernels — those hardwire the engine's
-        Voronoi decide and static knobs.
+        ``decide``/``cfg``/``gate``/``pregions`` override the engine's own
+        (used by the service layer, which vmaps a query axis of per-query
+        region families, traceable knobs and an active-slot gate over this
+        body).  A packed ``pregions`` slot — or a family given at
+        construction — rides the fused kernel suite, per-query knobs
+        included; only an OPAQUE ``decide`` override forces the reference
+        formulas (noted once via warning + ``dispatch_info["fused"]``).
         """
-        use_kernels = (self.use_kernels and decide is None
-                       and (cfg is None or cfg is self.cfg))
         cfg = cfg if cfg is not None else self.cfg
+        slot = pregions if pregions is not None else self.region_slot
+        fused = self.suite.fused and (decide is None or pregions is not None)
+        # Trace-time record of what THIS compilation runs (not latched:
+        # a later fused trace flips it back to True).
+        self.dispatch_info["fused"] = fused
+        if self.suite.fused and not fused:
+            self._note_unfused()
         decide = decide if decide is not None else self.decide
-        entry = None
-        if use_kernels:
-            s, viol = self._status_viol_kernel(x_m, x_c, out_m, out_c,
-                                               in_m, in_c, live)
-        else:
-            s = stopping.status(x_m, x_c, out_m, out_c, in_m, in_c, live)
-            a = stopping.agreements(out_m, out_c, in_m, in_c)
-            viol = stopping.violations_alg1(decide, s, a, live, cfg.eps)
-            entry = (s, a, viol)
-        timer_ok = (t - last_send) >= cfg.ell
-        active = alive & timer_ok & jnp.any(viol, axis=1)
-        if gate is not None:
-            active = active & gate
 
         flat_state = lss.LSSState(
             out_m=out_m, out_c=out_c, in_m=in_m, in_c=in_c,
@@ -332,16 +359,21 @@ class ShardedLSS:
         flat_topo = lss.TopoArrays(nbr=jnp.zeros(live.shape, jnp.int32),
                                    mask=live, rev=jnp.zeros_like(live, jnp.int32))
         status_viol = corrected = None
-        if use_kernels:
+        if fused:
             # Same do-while, fused Pallas paths for the per-peer math.
-            def status_viol(om, oc):
-                return self._status_viol_kernel(x_m, x_c, om, oc,
-                                                in_m, in_c, live)
+            status_viol, corrected, entry = lss.suite_hooks(
+                self.suite, flat_state, live, slot, cfg)
+        else:
+            s = stopping.status(x_m, x_c, out_m, out_c, in_m, in_c, live)
+            a = stopping.agreements(out_m, out_c, in_m, in_c)
+            viol = stopping.violations_alg1(decide, s, a, live, cfg.eps)
+            entry = (s, a, viol)
+        s, _a0, viol = entry
+        timer_ok = (t - last_send) >= cfg.ell
+        active = alive & timer_ok & jnp.any(viol, axis=1)
+        if gate is not None:
+            active = active & gate
 
-            def corrected(old_s, a0, i_m, i_c, v):
-                return kernel_ops.correction(
-                    old_s.m, old_s.c, a0.m, a0.c, i_m, i_c, v,
-                    beta=cfg.beta, eps=cfg.eps)
         out_m2, out_c2, v, did_send = lss.correction_loop(
             decide, flat_state, flat_topo, live, active, cfg,
             status_viol=status_viol, corrected=corrected, entry=entry)
@@ -349,22 +381,34 @@ class ShardedLSS:
         new_last = jnp.where(did_send, t, last_send)
         return out_m2, out_c2, pending, new_last
 
-    def _status_viol_kernel(self, x_m, x_c, out_m, out_c, in_m, in_c, live):
-        s_m, s_c, viol, _ = kernel_ops.lss_state(
-            x_m, x_c, out_m, out_c, in_m, in_c, live, self.centers,
-            eps=self.cfg.eps)
-        return wvs.WV(s_m, s_c), viol
+    def _note_unfused(self) -> None:
+        """An opaque per-call decide bypassed the fused path: the caller
+        already recorded ``fused=False`` in the dispatch telemetry (so
+        benchmarks can't mislabel runs); warn once.  Runs at trace time —
+        once per compilation."""
+        if not self._warned_unfused:
+            self._warned_unfused = True
+            warnings.warn(
+                "ShardedLSS: a per-call `decide` override without packed "
+                "region parameters bypasses the fused kernel path; this "
+                "dispatch runs the reference formulas (recorded as "
+                "fused=False in dispatch_info). Pass packed regions (a "
+                "PackedSlot / QueryParams.regions slice) to keep the "
+                "fused path.", RuntimeWarning, stacklevel=3)
 
     # -- one cycle, gather-fallback (full arrays, one device) --------------
     def _cycle_full(self, state: ShardedState, tables: DeviceTopo,
-                    decide=None, cfg=None, gate=None) -> ShardedState:
+                    decide=None, cfg=None, gate=None,
+                    pregions=None) -> ShardedState:
         """One engine cycle on full ``(S, B, ...)`` arrays.
 
         ``tables`` is the traced :class:`DeviceTopo` (membership edits swap
-        its data between dispatches).  ``decide``/``cfg``/``gate`` are
-        per-call overrides (see :meth:`_peer_update`); the service layer
-        vmaps this body over a query axis, composing Q concurrent
-        monitoring queries with the shard axis in a single dispatch.
+        its data between dispatches).  ``decide``/``cfg``/``gate``/
+        ``pregions`` are per-call overrides (see :meth:`_peer_update`); the
+        service layer vmaps this body over a query axis, composing Q
+        concurrent monitoring queries with the shard axis in a single
+        dispatch — with packed per-query ``pregions`` the whole Q x S
+        batch rides the fused kernels.
         """
         cfg = cfg if cfg is not None else self.cfg
         S, B, D = self.S, self.B, self.D
@@ -411,7 +455,8 @@ class ShardedLSS:
         out_m, out_c, pending, last_send = self._peer_update(
             fl(state.out_m), fl(state.out_c), fl(in_m), fl(in_c),
             fl(state.x_m), fl(state.x_c), fl(live), fl(state.last_send),
-            fl(state.alive), state.t, decide=decide, cfg=cfg, gate=gate)
+            fl(state.alive), state.t, decide=decide, cfg=cfg, gate=gate,
+            pregions=pregions)
         sh = lambda a: a.reshape(S, B, *a.shape[1:])
         return state._replace(
             out_m=sh(out_m), out_c=sh(out_c), in_m=in_m, in_c=in_c,

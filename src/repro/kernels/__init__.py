@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the LSS hot loop + the KernelSuite registry.
+
+The kernels fuse the paper's per-cycle hot path (region decision f +
+correction do-while, Sec. V) over the packed ``(kind, centers, cmask,
+w, b)`` region representation; :mod:`.suite` exposes them — and the
+pure-jnp reference formulas — behind one pluggable interface that the
+core loop, the sharded engine and the service's vmapped query axis all
+share.
+"""
+
+from .suite import (FusedSuite, KernelSuite, ReferenceSuite, get_suite,
+                    register_suite, resolve_suite, suite_names)
+
+__all__ = ["KernelSuite", "ReferenceSuite", "FusedSuite", "get_suite",
+           "register_suite", "resolve_suite", "suite_names"]

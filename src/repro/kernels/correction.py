@@ -7,12 +7,13 @@ For a block of peers with violating sets V_i, computes in one VMEM pass:
     X'_ik    = (|A'_ik| / |T_i|) (.) T_i  (-)  X_ki  (Eq. 10)
 
 Everything is elementwise + a D-slot reduction per peer: VPU work, blocked
-(BN, D, dp) to stream the message arrays through VMEM once.
+(BN, D, dp) to stream the message arrays through VMEM once.  ``beta`` and
+``eps`` arrive in the traced ``meta`` row ``[kind, b, eps, beta]`` (see
+:mod:`.ops`), so per-query knob overrides never recompile and the service
+query axis batches straight into a leading grid dimension under ``vmap``.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +25,7 @@ BLOCK_N = 64
 
 
 def correction_kernel(s_m_ref, s_c_ref, a_m_ref, a_c_ref, in_m_ref, in_c_ref,
-                      v_ref, o_m_ref, o_c_ref, *, beta: float, eps: float):
+                      v_ref, meta_ref, o_m_ref, o_c_ref):
     s_m = s_m_ref[...]  # (BN, dp)
     s_c = s_c_ref[...][:, 0]  # (BN,)
     a_m = a_m_ref[...]  # (BN, D, dp)
@@ -32,6 +33,7 @@ def correction_kernel(s_m_ref, s_c_ref, a_m_ref, a_c_ref, in_m_ref, in_c_ref,
     i_m = in_m_ref[...]
     i_c = in_c_ref[...]
     v = v_ref[...] != 0  # (BN, D)
+    eps, beta = meta_ref[0, 2], meta_ref[0, 3]
 
     t_m = s_m + jnp.sum(jnp.where(v[..., None], a_m, 0.0), axis=1)
     t_c = s_c + jnp.sum(jnp.where(v, a_c, 0.0), axis=1)
@@ -43,13 +45,12 @@ def correction_kernel(s_m_ref, s_c_ref, a_m_ref, a_c_ref, in_m_ref, in_c_ref,
     o_c_ref[...] = scale * t_c[:, None] - i_c
 
 
-def correction_call(s_m, s_c, a_m, a_c, in_m, in_c, v_set,
-                    *, beta: float, eps: float, interpret: bool):
+def correction_call(s_m, s_c, a_m, a_c, in_m, in_c, v_set, meta,
+                    *, interpret: bool):
     n, D, dp = a_m.shape
     grid = (n // BLOCK_N,)
-    kern = functools.partial(correction_kernel, beta=beta, eps=eps)
     return pl.pallas_call(
-        kern,
+        correction_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((BLOCK_N, dp), lambda i: (i, 0)),
@@ -59,6 +60,7 @@ def correction_call(s_m, s_c, a_m, a_c, in_m, in_c, v_set,
             pl.BlockSpec((BLOCK_N, D, dp), lambda i: (i, 0, 0)),
             pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
             pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((BLOCK_N, D, dp), lambda i: (i, 0, 0)),
@@ -69,4 +71,4 @@ def correction_call(s_m, s_c, a_m, a_c, in_m, in_c, v_set,
             jax.ShapeDtypeStruct((n, D), jnp.float32),
         ],
         interpret=interpret,
-    )(s_m, s_c, a_m, a_c, in_m, in_c, v_set)
+    )(s_m, s_c, a_m, a_c, in_m, in_c, v_set, meta)

@@ -7,11 +7,19 @@ One pass over a block of peers computes, entirely in VMEM:
     f(vec(S)), f(vec(A)), f(vec(S (-) A))                (region decisions)
     viol = a_zero | f(A) != f(S) | f(S-A) != f(S)        (Alg.-1 V_i)
 
-The three decision batches share one (rows, dp) x (dp, k) MXU matmul by
-stacking [S; A; S-A] rows.  Unfused, this is 6+ HBM round-trips over the
-(n, D, d) message arrays per cycle; fused it is one read + one small write —
-the simulator is memory-bound (arith intensity < 1 flop/byte without the
-decision matmul), so the fusion is the win.
+``f`` is the packed family decision (:func:`repro.kernels.region_decide.
+packed_decide`): Voronoi and halfspace kinds share one (rows, dp) x
+(dp, k+1) MXU matmul by stacking [S; A; S-A] rows against the
+``[centers^T | w]`` table; masked padding centers score +inf and the
+``meta`` row ``[kind, b, eps, beta]`` selects the kind per call — all
+traced data, so per-query families/knobs are zero-recompile and
+``jax.vmap`` turns the service's query axis into a leading grid dimension
+with each slot's table resident in VMEM.
+
+Unfused, this is 6+ HBM round-trips over the (n, D, d) message arrays per
+cycle; fused it is one read + one small write — the simulator is
+memory-bound (arith intensity < 1 flop/byte without the decision matmul),
+so the fusion is the win.
 
 Blocking: BN = 64 peers per grid step; slots D and lane-padded dp are kept
 whole per block (D <= ~64 after degree capping, dp = 128): VMEM per step
@@ -24,14 +32,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .region_decide import packed_decide
+
 __all__ = ["lss_state_kernel", "lss_state_call"]
 
 BLOCK_N = 64
 
 
 def lss_state_kernel(x_m_ref, x_c_ref, out_m_ref, out_c_ref, in_m_ref,
-                     in_c_ref, mask_ref, ct_ref, cn_ref,
-                     s_m_ref, s_c_ref, viol_ref, dec_ref, *, eps: float):
+                     in_c_ref, mask_ref, cthw_ref, cn_ref, meta_ref,
+                     s_m_ref, s_c_ref, viol_ref, dec_ref):
     x_m = x_m_ref[...]  # (BN, dp)
     x_c = x_c_ref[...]  # (BN, 1)
     o_m = out_m_ref[...]  # (BN, D, dp)
@@ -39,8 +49,7 @@ def lss_state_kernel(x_m_ref, x_c_ref, out_m_ref, out_c_ref, in_m_ref,
     i_m = in_m_ref[...]
     i_c = in_c_ref[...]
     msk = mask_ref[...] != 0  # (BN, D)
-    ct = ct_ref[...]  # (dp, k)
-    cn = cn_ref[...]  # (1, k)
+    eps = meta_ref[0, 2]
     BN, D, dp = o_m.shape
 
     # --- status and agreements (moment form) ---------------------------
@@ -60,8 +69,7 @@ def lss_state_kernel(x_m_ref, x_c_ref, out_m_ref, out_c_ref, in_m_ref,
         [vec(s_m, s_c),
          vec(a_m, a_c).reshape(BN * D, dp),
          vec(sa_m, sa_c).reshape(BN * D, dp)], axis=0)
-    scores = -2.0 * jnp.dot(rows, ct, preferred_element_type=jnp.float32) + cn
-    dec = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+    dec = packed_decide(rows, cthw_ref[...], cn_ref[...], meta_ref[...])
     dec_s = dec[:BN]
     dec_a = dec[BN: BN + BN * D].reshape(BN, D)
     dec_sa = dec[BN + BN * D:].reshape(BN, D)
@@ -78,16 +86,14 @@ def lss_state_kernel(x_m_ref, x_c_ref, out_m_ref, out_c_ref, in_m_ref,
     dec_ref[...] = dec_s[:, None]
 
 
-def lss_state_call(x_m, x_c, out_m, out_c, in_m, in_c, mask, ct, cn,
-                   *, eps: float, interpret: bool):
+def lss_state_call(x_m, x_c, out_m, out_c, in_m, in_c, mask, cthw, cn, meta,
+                   *, interpret: bool):
     """Padded inputs; returns (s_m, s_c(n,1), viol int8 (n,D), dec (n,1))."""
     n, D, dp = out_m.shape
-    k = ct.shape[1]
-    import functools
+    k1 = cthw.shape[1]
     grid = (n // BLOCK_N,)
-    kern = functools.partial(lss_state_kernel, eps=eps)
     return pl.pallas_call(
-        kern,
+        lss_state_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((BLOCK_N, dp), lambda i: (i, 0)),
@@ -97,8 +103,9 @@ def lss_state_call(x_m, x_c, out_m, out_c, in_m, in_c, mask, ct, cn,
             pl.BlockSpec((BLOCK_N, D, dp), lambda i: (i, 0, 0)),
             pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
             pl.BlockSpec((BLOCK_N, D), lambda i: (i, 0)),
-            pl.BlockSpec((dp, k), lambda i: (0, 0)),
-            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((dp, k1), lambda i: (0, 0)),
+            pl.BlockSpec((1, k1 - 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((BLOCK_N, dp), lambda i: (i, 0)),
@@ -113,4 +120,4 @@ def lss_state_call(x_m, x_c, out_m, out_c, in_m, in_c, mask, ct, cn,
             jax.ShapeDtypeStruct((n, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(x_m, x_c, out_m, out_c, in_m, in_c, mask, ct, cn)
+    )(x_m, x_c, out_m, out_c, in_m, in_c, mask, cthw, cn, meta)

@@ -1,23 +1,38 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 Handle padding to hardware-aligned shapes (peers -> block multiple, vector
-dim -> 128 lanes), dtype normalization, and CPU fallback (interpret=True
-executes the kernel bodies in Python — the correctness path this container
-validates; on TPU the same calls compile to Mosaic).
+dim -> 128 lanes), dtype normalization, the packed-region table layout,
+and CPU fallback (interpret=True executes the kernel bodies in Python —
+the correctness path this container validates; on TPU the same calls
+compile to Mosaic).
+
+Region families arrive as a :class:`repro.core.regions.PackedSlot` (or
+anything :func:`repro.core.regions.as_packed_slot` coerces: bare Voronoi
+``(k, d)`` centers, ``VoronoiRegions``, ``HalfspaceRegions``).  The slot
+is prepared into the kernel table layout:
+
+* ``cthw`` (dp, k+1): lane-padded ``[centers^T | w]`` — the Voronoi
+  contraction and the halfspace projection share one MXU matmul;
+* ``cn`` (1, k): center norms, ``+inf`` on masked padding slots (so a
+  padded family decides bitwise like the unpadded one);
+* ``meta`` (1, 4): ``[kind, b, eps, beta]`` — the family kind plus the
+  traceable knobs.  Everything is traced DATA: swapping families or knobs
+  between dispatches never recompiles, and ``jax.vmap`` batches a service
+  query axis into a leading Pallas grid dimension.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
+
+from repro.core import regions as _regions
 
 from . import correction as _corr
 from . import lss_state as _state
 from . import region_decide as _dec
 
-__all__ = ["region_decide", "lss_state", "correction"]
+__all__ = ["region_decide", "lss_state", "correction", "prep_slot"]
 
 LANES = 128
 
@@ -36,24 +51,41 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def _prep_centers(centers):
-    ct = _pad_to(centers.astype(jnp.float32), LANES, 1).T  # (dp, k)
-    cn = jnp.sum(centers.astype(jnp.float32) ** 2, -1)[None, :]  # (1, k)
-    return ct, cn
+def prep_slot(region, eps=1e-9, beta=0.0):
+    """Kernel table layout of one packed family: ``(cthw, cn, meta)``.
+
+    ``eps``/``beta`` may be traced scalars; they ride in the meta row so
+    per-query knob overrides stay zero-recompile.
+    """
+    slot = _regions.as_packed_slot(region)
+    f32 = jnp.float32
+    centers = slot.centers.astype(f32)
+    ct = _pad_to(centers, LANES, 1).T  # (dp, k)
+    wt = _pad_to(slot.w.astype(f32)[None, :], LANES, 1).T  # (dp, 1)
+    cthw = jnp.concatenate([ct, wt], axis=1)  # (dp, k+1)
+    cn = jnp.where(slot.cmask, jnp.sum(centers * centers, -1),
+                   jnp.inf)[None, :]  # (1, k)
+    meta = jnp.stack([
+        slot.kind.astype(f32),
+        slot.b.astype(f32),
+        jnp.asarray(eps, f32),
+        jnp.asarray(beta, f32),
+    ]).reshape(1, 4)
+    return cthw, cn, meta
 
 
-@functools.partial(jax.jit, static_argnames=())
-def region_decide(v, centers):
-    """Nearest-center ids, kernel-accelerated: (n, d) -> (n,) int32."""
+@jax.jit
+def region_decide(v, region):
+    """Packed-family region ids, kernel-accelerated: (n, d) -> (n,) int32."""
     n = v.shape[0]
     vp = _pad_to(_pad_to(v.astype(jnp.float32), LANES, 1), _dec.BLOCK_N, 0)
-    ct, cn = _prep_centers(centers)
-    out = _dec.region_decide_call(vp, ct, cn, interpret=_interpret())
+    cthw, cn, meta = prep_slot(region)
+    out = _dec.region_decide_call(vp, cthw, cn, meta, interpret=_interpret())
     return out[:n, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("eps",))
-def lss_state(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers, eps=1e-9):
+@jax.jit
+def lss_state(x_m, x_c, out_m, out_c, in_m, in_c, mask, region, eps=1e-9):
     """Fused S/A/violations/decision.  Unpadded moment-form inputs.
 
     Returns (s_m (n,d), s_c (n,), viol bool (n,D), decision (n,) int32).
@@ -73,20 +105,27 @@ def lss_state(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers, eps=1e-9):
         pad0(in_c.astype(f32)),
         pad0(mask.astype(jnp.int8)),
     )
-    ct, cn = _prep_centers(centers)
+    cthw, cn, meta = prep_slot(region, eps=eps)
     s_m, s_c, viol, dec = _state.lss_state_call(
-        *args, ct, cn, eps=eps, interpret=_interpret())
+        *args, cthw, cn, meta, interpret=_interpret())
     return s_m[:n, :d], s_c[:n, 0], viol[:n].astype(bool), dec[:n, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "eps"))
+@jax.jit
 def correction(s_m, s_c, a_m, a_c, in_m, in_c, v_set, beta=1e-3, eps=1e-9):
-    """Eq.-10 corrected messages: returns (out_m' (n,D,d), out_c' (n,D))."""
+    """Eq.-10 corrected messages: returns (out_m' (n,D,d), out_c' (n,D)).
+
+    ``beta``/``eps`` may be traced per-query scalars (they ride the meta
+    row, not the compiled program).
+    """
     n, D, d = a_m.shape
     BN = _corr.BLOCK_N
     f32 = jnp.float32
     pad0 = lambda a: _pad_to(a, BN, 0)
     padl = lambda a: _pad_to(a, LANES, a.ndim - 1)
+    meta = jnp.stack([jnp.zeros((), f32), jnp.zeros((), f32),
+                      jnp.asarray(eps, f32),
+                      jnp.asarray(beta, f32)]).reshape(1, 4)
     o_m, o_c = _corr.correction_call(
         pad0(padl(s_m.astype(f32))),
         pad0(s_c.astype(f32)[:, None]),
@@ -95,5 +134,5 @@ def correction(s_m, s_c, a_m, a_c, in_m, in_c, v_set, beta=1e-3, eps=1e-9):
         pad0(padl(in_m.astype(f32))),
         pad0(in_c.astype(f32)),
         pad0(v_set.astype(jnp.int8)),
-        beta=beta, eps=eps, interpret=_interpret())
+        meta, interpret=_interpret())
     return o_m[:n, :, :d], o_c[:n]

@@ -16,12 +16,18 @@ from repro.core import regions, stopping, wvs
 __all__ = ["region_decide_ref", "lss_state_ref", "correction_ref"]
 
 
-def region_decide_ref(v, centers):
-    """v: (n, d), centers: (k, d) -> (n,) int32 nearest-center ids."""
-    return regions.decide_voronoi(v, centers)
+def _decide(region):
+    """Decision fn of a packed slot / family / bare Voronoi centers."""
+    slot = regions.as_packed_slot(region)
+    return lambda u: regions.decide_packed(u, *slot)
 
 
-def lss_state_ref(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers,
+def region_decide_ref(v, region):
+    """v: (n, d), region: packed family (or (k, d) centers) -> (n,) int32."""
+    return _decide(region)(v)
+
+
+def lss_state_ref(x_m, x_c, out_m, out_c, in_m, in_c, mask, region,
                   eps: float = 1e-9):
     """Fused S / A / Alg.-1 violations / decision.
 
@@ -29,7 +35,7 @@ def lss_state_ref(x_m, x_c, out_m, out_c, in_m, in_c, mask, centers,
     """
     s = stopping.status(x_m, x_c, out_m, out_c, in_m, in_c, mask)
     a = stopping.agreements(out_m, out_c, in_m, in_c)
-    decide = lambda u: regions.decide_voronoi(u, centers)
+    decide = _decide(region)
     viol = stopping.violations_alg1(decide, s, a, mask, eps)
     decision = decide(wvs.vec(s, eps))
     return s.m, s.c, viol, decision

@@ -1,20 +1,29 @@
-"""Pallas TPU kernel: nearest-source decision (Sec. V's f) as an MXU matmul.
+"""Pallas TPU kernel: the packed region decision f as one MXU matmul.
 
 ``argmin_k ||v - c_k||^2  ==  argmin_k (-2 v . c_k + ||c_k||^2)`` — the
-per-peer decision becomes one (BN, dp) x (dp, k) matmul against the option
-matrix plus a row argmin: exactly the contraction shape the MXU wants.
+per-peer Voronoi decision becomes one (BN, dp) x (dp, k+1) matmul against
+the option matrix plus a row argmin.  The packed ``(kind, centers, cmask,
+w, b)`` representation from :mod:`repro.core.regions` rides the same
+contraction: the halfspace normal ``w`` is appended as one extra column of
+the center matrix, so ``v . w`` falls out of the SAME matmul and the
+halfspace decision is a compare against ``b``; masked (padding) center
+slots carry ``+inf`` in the precomputed norm row and contribute exactly
+the +inf score :func:`repro.core.regions.decide_packed` gives them.  A
+per-call ``meta`` row ``[kind, b, eps, beta]`` (see :mod:`.ops`) selects
+the family kind — traced data, so per-query families and knobs never
+recompile, and ``jax.vmap`` batches a service query axis into a leading
+grid dimension with each slot's region table resident in VMEM.
 
 Blocking: peers are tiled BN = 128 rows per grid step (sublane-aligned);
 the vector dim is lane-padded to a multiple of 128 by ``ops.py`` (zero
-padding leaves the scores unchanged); the (k, dp) center matrix and its
+padding leaves the contractions unchanged); the (dp, k+1) table and its
 norms live fully in VMEM (k <= a few hundred in every experiment —
-Sec. VI-D sweeps k to 243; ~243*128*4B = 124 KiB).
-VMEM per step ~ BN*dp*4 + k*dp*4 + BN*k*4 bytes — ~0.5 MiB at defaults.
+Sec. VI-D sweeps k to 243; ~244*128*4B = 125 KiB).
+VMEM per step ~ BN*dp*4 + (k+1)*dp*4 + BN*(k+1)*4 bytes — ~0.5 MiB at
+defaults.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -25,29 +34,41 @@ __all__ = ["region_decide_kernel", "region_decide_call"]
 BLOCK_N = 128
 
 
-def region_decide_kernel(v_ref, ct_ref, cn_ref, out_ref):
-    v = v_ref[...]  # (BN, dp) f32
-    ct = ct_ref[...]  # (dp, k) f32 — centers, transposed
-    cn = cn_ref[...]  # (1, k)  f32 — ||c_k||^2
-    scores = jnp.dot(v, ct, preferred_element_type=jnp.float32)
-    scores = -2.0 * scores + cn
-    out_ref[...] = jnp.argmin(scores, axis=-1, keepdims=True).astype(jnp.int32)
+def packed_decide(rows, cthw, cn, meta):
+    """Shared decision body: packed-family ids for a block of rows.
+
+    ``rows``: (R, dp); ``cthw``: (dp, k+1) = [centers^T | w]; ``cn``:
+    (1, k) center norms with +inf on masked slots; ``meta``: (1, 4)
+    ``[kind, b, eps, beta]``.  Returns int32 (R,).
+    """
+    big = jnp.dot(rows, cthw, preferred_element_type=jnp.float32)
+    scores = -2.0 * big[:, :-1] + cn
+    vor = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+    half = (big[:, -1] >= meta[0, 1]).astype(jnp.int32)
+    return jnp.where(meta[0, 0] == 0.0, vor, half)
 
 
-def region_decide_call(v_pad, ct, cn, *, interpret: bool):
-    """v_pad: (n_pad, dp); ct: (dp, k); cn: (1, k) -> (n_pad, 1) int32."""
+def region_decide_kernel(v_ref, cthw_ref, cn_ref, meta_ref, out_ref):
+    dec = packed_decide(v_ref[...], cthw_ref[...], cn_ref[...], meta_ref[...])
+    out_ref[...] = dec[:, None]
+
+
+def region_decide_call(v_pad, cthw, cn, meta, *, interpret: bool):
+    """v_pad: (n_pad, dp); cthw: (dp, k+1); cn: (1, k); meta: (1, 4)
+    -> (n_pad, 1) int32."""
     n_pad, dp = v_pad.shape
-    k = ct.shape[1]
+    k1 = cthw.shape[1]
     grid = (n_pad // BLOCK_N,)
     return pl.pallas_call(
         region_decide_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((BLOCK_N, dp), lambda i: (i, 0)),
-            pl.BlockSpec((dp, k), lambda i: (0, 0)),
-            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((dp, k1), lambda i: (0, 0)),
+            pl.BlockSpec((1, k1 - 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((BLOCK_N, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
         interpret=interpret,
-    )(v_pad, ct, cn)
+    )(v_pad, cthw, cn, meta)

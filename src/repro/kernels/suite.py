@@ -1,0 +1,152 @@
+"""KernelSuite — the registry every compute layer plugs its hot loop into.
+
+The paper's per-cycle hot path is the region decision ``f`` plus the
+correction do-while (Sec. V).  A :class:`KernelSuite` bundles the three
+operations that path needs — ``decide``, ``status_viol`` and
+``corrected`` — in a signature that :func:`repro.core.lss.cycle_impl`,
+the engine's :meth:`~repro.engine.ShardedLSS._cycle_full` and the
+service's vmapped dispatch all consume, with region families in the
+packed :class:`~repro.core.regions.PackedSlot` representation and the
+traceable knobs (``beta``/``eps``) as data:
+
+* ``reference`` — the pure-jnp formulas (:mod:`repro.core.stopping`,
+  :mod:`repro.core.correction`, :func:`repro.core.regions.decide_packed`).
+  This IS the algorithm; every other suite is tested bitwise against it.
+* ``fused`` — the Pallas kernels (:mod:`repro.kernels.ops`): one VMEM
+  pass per cycle instead of 6+ HBM round-trips.  On TPU it compiles to
+  Mosaic; elsewhere it runs in interpret mode (slow but exact — the CI
+  parity path).
+
+``resolve_suite`` maps the public ``use_kernels`` knob (bool | None |
+suite name) to a suite: ``None`` auto-selects ``fused`` on TPU and
+``reference`` elsewhere.  Suites are stateless singletons, so they are
+safe static (hashable) arguments to ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+import jax
+
+from repro.core import correction as corr_lib
+from repro.core import regions, stopping, wvs
+
+from . import ops
+
+__all__ = ["KernelSuite", "ReferenceSuite", "FusedSuite",
+           "register_suite", "get_suite", "resolve_suite", "suite_names"]
+
+
+class KernelSuite:
+    """Fused decide/correction operations for one execution strategy.
+
+    Subclasses implement the three hooks below; all array arguments are
+    moment-form and may carry traced per-query values (the service vmaps
+    these calls over its query axis).  ``fused`` advertises whether the
+    suite runs the Pallas path — callers use it for dispatch telemetry.
+    """
+
+    name: str = "abstract"
+    fused: bool = False
+
+    def decide(self, v, slot: regions.PackedSlot, eps=1e-9):
+        """Region ids of batched vectors ``v`` (..., d) -> int32 (...)."""
+        raise NotImplementedError
+
+    def status_viol(self, x_m, x_c, out_m, out_c, in_m, in_c, live,
+                    slot: regions.PackedSlot, eps):
+        """One pass: returns ``(S: WV, viol bool (n, D))`` (Alg. 1)."""
+        raise NotImplementedError
+
+    def corrected(self, old_s: wvs.WV, a0: wvs.WV, in_m, in_c, v_set,
+                  beta, eps):
+        """Eq.-10 corrected out-messages on the ``v_set`` slots."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<KernelSuite {self.name!r} fused={self.fused}>"
+
+
+class ReferenceSuite(KernelSuite):
+    """The pure-jnp formulas — the semantics every suite must match."""
+
+    name = "reference"
+    fused = False
+
+    def decide(self, v, slot, eps=1e-9):
+        return regions.decide_packed(v, *slot)
+
+    def status_viol(self, x_m, x_c, out_m, out_c, in_m, in_c, live, slot,
+                    eps):
+        s = stopping.status(x_m, x_c, out_m, out_c, in_m, in_c, live)
+        a = stopping.agreements(out_m, out_c, in_m, in_c)
+        decide = lambda u: regions.decide_packed(u, *slot)
+        viol = stopping.violations_alg1(decide, s, a, live, eps)
+        return s, viol
+
+    def corrected(self, old_s, a0, in_m, in_c, v_set, beta, eps):
+        return corr_lib.corrected_messages(old_s, a0, in_m, in_c, v_set,
+                                           beta, eps)
+
+
+class FusedSuite(KernelSuite):
+    """The Pallas kernels (Mosaic on TPU, interpret elsewhere)."""
+
+    name = "fused"
+    fused = True
+
+    def decide(self, v, slot, eps=1e-9):
+        batch = v.shape[:-1]
+        flat = v.reshape(-1, v.shape[-1])
+        return ops.region_decide(flat, slot).reshape(batch)
+
+    def status_viol(self, x_m, x_c, out_m, out_c, in_m, in_c, live, slot,
+                    eps):
+        s_m, s_c, viol, _ = ops.lss_state(x_m, x_c, out_m, out_c, in_m,
+                                          in_c, live, slot, eps=eps)
+        return wvs.WV(s_m, s_c), viol
+
+    def corrected(self, old_s, a0, in_m, in_c, v_set, beta, eps):
+        return ops.correction(old_s.m, old_s.c, a0.m, a0.c, in_m, in_c,
+                              v_set, beta=beta, eps=eps)
+
+
+_REGISTRY: Dict[str, KernelSuite] = {}
+
+
+def register_suite(suite: KernelSuite) -> KernelSuite:
+    """Add a suite to the registry (keyed by ``suite.name``)."""
+    _REGISTRY[suite.name] = suite
+    return suite
+
+
+register_suite(ReferenceSuite())
+register_suite(FusedSuite())
+
+
+def suite_names():
+    return tuple(_REGISTRY)
+
+
+def get_suite(name: str) -> KernelSuite:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel suite {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def resolve_suite(use_kernels: Union[bool, str, None]) -> KernelSuite:
+    """Map the public ``use_kernels`` knob to a suite.
+
+    ``True`` -> ``fused``; ``False`` -> ``reference``; a string -> that
+    registered suite; ``None`` (auto) -> ``fused`` on TPU, ``reference``
+    elsewhere (interpret-mode Pallas is exact but slow — tests opt in
+    explicitly).
+    """
+    if isinstance(use_kernels, str):
+        return get_suite(use_kernels)
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    return get_suite("fused" if use_kernels else "reference")

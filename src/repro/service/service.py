@@ -40,13 +40,14 @@ or rebuild engine tables (rebalance), and each recompiles at most once.
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lss, topology, wvs
+from repro.core import lss, regions, topology, wvs
+from repro.kernels import suite as kernel_suite
 
 from . import query as qmod
 from .admission import AdmissionQueue
@@ -79,6 +80,14 @@ class ServiceConfig(NamedTuple):
     (:class:`~repro.service.controlplane.ControlPlaneConfig`; the
     default is FIFO / no preemption / no auto-regrow / no rebalance —
     exactly the pre-control-plane behavior).
+
+    ``use_kernels`` picks the :class:`~repro.kernels.suite.KernelSuite`
+    for the per-cycle hot loop on BOTH backends: ``None`` = auto (fused
+    Pallas on TPU, reference elsewhere), bool, or a registered suite
+    name.  The fused path composes with the vmapped query axis — each
+    tenant's packed region table becomes one grid step's VMEM table —
+    and admit/retire stays zero-recompile (region tables are traced
+    data, exactly like the topology tables).
     """
 
     capacity: int = 64  # Q query slots
@@ -98,6 +107,7 @@ class ServiceConfig(NamedTuple):
     admission_queue: int = 16  # waiting specs bound (0 = fail fast)
     admission_overflow: str = "reject"  # "reject" | "evict-oldest"
     control: ControlPlaneConfig = ControlPlaneConfig()  # control plane
+    use_kernels: Union[bool, str, None] = None  # kernel suite (see above)
 
 
 class _Preempted(NamedTuple):
@@ -159,6 +169,11 @@ class _CoreBackend:
     def __init__(self, topo, scfg: ServiceConfig):
         self.topo = topo
         self.ta = lss.TopoArrays.from_topology(topo)
+        self.suite = kernel_suite.resolve_suite(scfg.use_kernels)
+
+    def dispatch_info(self) -> dict:
+        """What the compiled dispatch runs (mirrors the engine's)."""
+        return {"suite": self.suite.name, "fused": self.suite.fused}
 
     def topo_args(self):
         """The traced topology pytree each dispatch takes as an argument."""
@@ -177,8 +192,13 @@ class _CoreBackend:
                   alive=None) -> lss.LSSState:
         return lss.init_state(self.ta, inputs, seed=seed, alive=alive)
 
-    def cycle(self, st: lss.LSSState, cfg: lss.LSSConfig, decide, gate, topo):
-        st, _ = lss.cycle_impl(st, topo, cfg, decide, gate=gate)
+    def cycle(self, st: lss.LSSState, cfg: lss.LSSConfig, decide, gate, topo,
+              pregions=None):
+        if self.suite.fused and pregions is not None:
+            st, _ = lss.cycle_impl(st, topo, cfg, None, gate=gate,
+                                   suite=self.suite, regions=pregions)
+        else:
+            st, _ = lss.cycle_impl(st, topo, cfg, decide, gate=gate)
         return st
 
     def metrics(self, st: lss.LSSState, decide, eps, topo):
@@ -249,14 +269,19 @@ class _EngineBackend:
         base = lss.LSSConfig(beta=scfg.beta, ell=scfg.ell,
                              drop_rate=scfg.drop_rate, policy=scfg.policy,
                              max_corr_iters=scfg.max_corr_iters, eps=scfg.eps)
-        # The per-query decide overrides bypass the fused Voronoi kernels,
-        # so the engine is pinned to the reference formulas here.
+        # The per-query packed region slices ride the engine's kernel
+        # suite (the vmapped query axis becomes a leading Pallas grid
+        # dimension), so use_kernels composes with Q x S.
         return ShardedLSS(
             topo, jnp.zeros((1, scfg.d), jnp.float32), base,
             EngineConfig(num_shards=scfg.engine_shards,
                          cycles_per_dispatch=scfg.cycles_per_dispatch,
-                         method=scfg.engine_method, use_kernels=False,
+                         method=scfg.engine_method,
+                         use_kernels=scfg.use_kernels,
                          halo_slack=scfg.engine_halo_slack))
+
+    def dispatch_info(self) -> dict:
+        return dict(self.eng.dispatch_info)
 
     def topo_args(self):
         return self.eng._tables
@@ -270,9 +295,10 @@ class _EngineBackend:
     def init_slot(self, inputs: wvs.WV, seed: int, alive=None):
         return self.eng.init(inputs, seed=seed, alive=alive)
 
-    def cycle(self, st, cfg: lss.LSSConfig, decide, gate, topo):
+    def cycle(self, st, cfg: lss.LSSConfig, decide, gate, topo,
+              pregions=None):
         return self.eng._cycle_full(st, topo, decide=decide, cfg=cfg,
-                                    gate=gate)
+                                    gate=gate, pregions=pregions)
 
     def metrics(self, st, decide, eps, topo):
         return self.eng._metrics_impl(st, topo, eps=eps, decide=decide)
@@ -454,11 +480,21 @@ class Service:
         """Suspended queries currently waiting to resume."""
         return len(self._preempted)
 
+    def dispatch_info(self) -> dict:
+        """Which kernel suite the compiled dispatch runs (``suite`` name +
+        ``fused`` flag) — benchmark/telemetry ground truth, so an unfused
+        fallback can't be mislabeled as a kernel run."""
+        return self.backend.dispatch_info()
+
     # -- the batched step --------------------------------------------------
     def _one_cycle(self, st, qp: qmod.QueryParams, topo):
         cfg = self.base_cfg._replace(beta=qp.beta, ell=qp.ell, eps=qp.eps)
+        # Under the query-axis vmap each leaf of qp.regions is a per-slot
+        # slice — exactly one packed region table (PackedSlot), which the
+        # backend's kernel suite consumes directly.
         return self.backend.cycle(st, cfg, qmod.decide_fn(qp.regions),
-                                  qp.active, topo)
+                                  qp.active, topo,
+                                  pregions=regions.PackedSlot(*qp.regions))
 
     def _step_impl(self, states, params: qmod.QueryParams, topo, k: int):
         def body(_, sts):

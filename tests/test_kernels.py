@@ -1,9 +1,14 @@
-"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes."""
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes,
+plus bitwise sweeps of the packed (kind/centers/cmask/w/b) families vs the
+jit-compiled oracle (eager-vs-jit FMA contraction differs by a last ulp,
+so the bitwise contract is jitted-kernel == jitted-oracle)."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import regions
 from repro.kernels import ops, ref
 
 
@@ -71,6 +76,68 @@ def test_correction_sweep(n, D, d, k, beta):
                                    atol=1e-4)
         np.testing.assert_allclose(np.asarray(oc)[sel], np.asarray(roc)[sel],
                                    atol=1e-5)
+
+
+def _packed_family(fam: str, d: int, k: int, rng):
+    if fam == "halfspace":
+        return regions.HalfspaceRegions(
+            w=jnp.asarray(rng.standard_normal((d,)).astype(np.float32)),
+            b=jnp.asarray(np.float32(rng.standard_normal())))
+    vor = regions.VoronoiRegions(
+        jnp.asarray(rng.standard_normal((k, d)).astype(np.float32)))
+    if fam == "padded":  # masked padding center slots must change nothing
+        return regions.PackedRegions.pack([vor], k_max=k + 3).slot(0)
+    return vor
+
+
+PACKED_FAMS = ["voronoi", "padded", "halfspace"]
+
+
+@pytest.mark.parametrize("n", [64, 130, 333])  # incl. non-multiples of 128
+@pytest.mark.parametrize("fam", PACKED_FAMS)
+def test_region_decide_packed_bitwise(n, fam):
+    rng = np.random.default_rng(n)
+    d, k = 3, 4
+    v = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    family = _packed_family(fam, d, k, rng)
+    got = ops.region_decide(v, family)
+    want = jax.jit(ref.region_decide_ref)(v, family)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("n", [64, 130, 333])
+@pytest.mark.parametrize("fam", PACKED_FAMS)
+def test_lss_state_packed_bitwise(n, fam):
+    rng = np.random.default_rng(n * 3 + 1)
+    d, D, k = 2, 5, 3
+    family = _packed_family(fam, d, k, rng)
+    x_m, x_c, out_m, out_c, in_m, in_c, mask, _ = _mk(
+        rng, n, D, d, k, np.float32)
+    got = ops.lss_state(x_m, x_c, out_m, out_c, in_m, in_c, mask, family)
+    want = jax.jit(ref.lss_state_ref)(x_m, x_c, out_m, out_c, in_m, in_c,
+                                      mask, family)
+    for g, w, name in zip(got, want, ("s_m", "s_c", "viol", "dec")):
+        assert (np.asarray(g) == np.asarray(w)).all(), (fam, n, name)
+
+
+def test_correction_traced_beta_bitwise():
+    """beta/eps as traced jax scalars (the per-query knob path) give the
+    same bits as the jitted oracle with Python floats."""
+    rng = np.random.default_rng(11)
+    n, D, d, k = 130, 4, 2, 3
+    x_m, x_c, out_m, out_c, in_m, in_c, mask, centers = _mk(
+        rng, n, D, d, k, np.float32, zero_frac=0.0)
+    _, _, rviol, _ = ref.lss_state_ref(x_m, x_c, out_m, out_c, in_m, in_c,
+                                       mask, centers)
+    a_m, a_c = out_m + in_m, out_c + in_c
+    v = jnp.asarray(np.asarray(rviol) & np.asarray(mask))
+    om, oc = ops.correction(x_m, x_c, a_m, a_c, in_m, in_c, v,
+                            beta=jnp.float32(0.05), eps=jnp.float32(1e-8))
+    rom, roc = jax.jit(lambda *a: ref.correction_ref(*a, 0.05, eps=1e-8))(
+        x_m, x_c, a_m, a_c, in_m, in_c, v)
+    sel = np.asarray(v)
+    assert (np.asarray(om)[sel] == np.asarray(rom)[sel]).all()
+    assert (np.asarray(oc)[sel] == np.asarray(roc)[sel]).all()
 
 
 def test_lss_state_bf16_inputs_upcast():

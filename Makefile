@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: verify test bench bench-full bench-smoke bench-check dev-deps
+.PHONY: verify test bench bench-full bench-smoke bench-check obs-validate dev-deps
 
 # The tier-1 gate (ROADMAP.md): full suite, fail fast.
 verify:
@@ -28,3 +28,9 @@ bench-smoke:
 # committed baselines (default mode, wall tolerance 3x, msgs/link 1%).
 bench-check:
 	PYTHONPATH=src $(PY) -m benchmarks.run --check
+
+# Telemetry contract: self-contained churn run through a JsonlTracker,
+# every emitted record validated against the repro.obs.schema, boundary
+# spans required nonzero in a control record.
+obs-validate:
+	PYTHONPATH=src $(PY) -m repro.obs.validate

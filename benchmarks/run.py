@@ -4,11 +4,12 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs paper-scale
 (slow); default sizes fit the CI budget; ``--smoke`` clamps every suite
 to toy sizes (a does-it-still-run gate for CI).  ``--only fig2`` filters.
 
-Machine-readable perf tracking: the systems suites ("service", "engine")
-additionally write ``BENCH_service.json`` / ``BENCH_engine.json`` next to
-the working directory (``--json-dir`` to relocate, ``--no-json`` to
-skip) with per-row extras (median wall-time, msgs/link, peers/s) so the
-perf trajectory is diffable across PRs.
+Machine-readable perf tracking: the systems suites (``JSON_SUITES``:
+service, engine, controlplane, kernels, obs) additionally write
+``BENCH_<suite>.json`` next to the working directory (``--json-dir`` to
+relocate, ``--no-json`` to skip) with per-row extras (median wall-time,
+msgs/link, peers/s, tracker overhead) so the perf trajectory is diffable
+across PRs.
 
 ``--check`` turns the committed baselines into a regression gate: it runs
 only the JSON suites, compares the fresh summary medians against the
@@ -29,7 +30,11 @@ import os
 import statistics
 import sys
 
-JSON_SUITES = ("service", "engine", "controlplane", "kernels")
+JSON_SUITES = ("service", "engine", "controlplane", "kernels", "obs")
+
+# Tracker overhead is budgeted absolutely (fraction of dispatch wall),
+# not relative to a baseline: observability must stay cheap everywhere.
+OBS_OVERHEAD_BUDGET = 0.05
 
 
 def _summary(rows) -> dict:
@@ -41,6 +46,7 @@ def _summary(rows) -> dict:
         if rows else None,
         "median_msgs_per_link": med("msgs_per_link"),
         "median_peers_per_s": med("peers_per_s"),
+        "median_overhead_frac": med("overhead_frac"),
     }
 
 
@@ -57,9 +63,17 @@ def _check_summary(suite: str, fresh: dict, baseline: dict,
         ("median_us_per_call", "wall"),
         ("median_peers_per_s", "rate"),
         ("median_msgs_per_link", "exact"),
+        ("median_overhead_frac", "budget"),
     )
     for key, kind in checks:
         b, f = bs.get(key), fs.get(key)
+        if kind == "budget":
+            # Absolute bound — no baseline scaling, no tolerance factor.
+            if f is not None and f > OBS_OVERHEAD_BUDGET:
+                errors.append(f"{suite}.{key}: {f:.3f} exceeds the absolute "
+                              f"{OBS_OVERHEAD_BUDGET:.0%} tracker-overhead "
+                              "budget")
+            continue
         if b is None or f is None:
             continue
         if kind == "wall" and f > b * tol:
@@ -101,7 +115,7 @@ def main(argv=None) -> None:
                    fig3_connectivity, fig4_message_loss, fig5_difficulty,
                    fig6_dynamic_data, fig7_loss_dynamic, fig8_churn,
                    figD_ineffective, kernel_bench, kernels,
-                   membership_churn, service_throughput)
+                   membership_churn, obs_overhead, service_throughput)
 
     suites = {
         "fig2": fig2_scaleup, "fig3": fig3_connectivity,
@@ -111,6 +125,7 @@ def main(argv=None) -> None:
         "kernel": kernel_bench, "engine": engine_scaleup,
         "service": service_throughput, "membership": membership_churn,
         "controlplane": controlplane, "kernels": kernels,
+        "obs": obs_overhead,
     }
     if args.check:
         suites = {k: v for k, v in suites.items() if k in JSON_SUITES}

@@ -8,7 +8,9 @@ accuracy-within-T SLO.  The priority scheduler preempts and resumes
 low-priority tenants to keep the high class inside its SLO; mid-run, a
 burst of peer joins exhausts the membership capacity and the control
 plane transparently regrows it (one recompile, logged as an epoch).
-Prints per-class SLO attainment and the control-plane activity trail.
+Prints per-class SLO attainment, the control-plane activity trail, and
+the :mod:`repro.obs` convergence dashboard (per-tenant accuracy
+sparklines, quiescence times, boundary-span costs).
 
     PYTHONPATH=src python examples/serve_monitor.py --n 4096 --queries 64
 """
@@ -20,6 +22,7 @@ import time
 import numpy as np
 
 from repro.core import topology
+from repro.obs import render_controls, render_dashboard
 from repro.service import (ControlPlaneConfig, SLOSpec, Service,
                            ServiceConfig, TelemetrySink,
                            heterogeneous_tenants)
@@ -123,6 +126,13 @@ def main():
     n_res = sum(len(c.get("resumed", [])) for c in ctrl)
     print(f"\ncontrol plane: {n_pre} preemptions, {n_res} resumes, "
           f"epochs={[e['kind'] for e in svc.capman.epochs]}")
+
+    # Convergence dashboard straight off the telemetry the service kept.
+    print()
+    print(render_dashboard(sink.records, sort_by="accuracy"))
+    print()
+    print(render_controls(sink.records))
+    svc.close()  # flushes the (borrowed) sink
     sink.close()
 
 

@@ -248,6 +248,10 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
     computed them (every caller has — it needed ``viol0`` for the
     ``active`` test), saving one full status/violation evaluation per
     cycle.
+
+    Returns ``(out_m, out_c, v, did_send, iters)`` — ``iters`` is the
+    do-while's fixed-point iteration count (scalar int32), the
+    convergence-effort number telemetry aggregates into histograms.
     """
     n, D = topo.nbr.shape
     if status_viol is None:
@@ -294,12 +298,12 @@ def _correction_loop(decide, state, topo, live, active, cfg: LSSConfig,
         _, running, it = carry
         return jnp.any(running) & (it < max_iters)
 
-    v, _, _ = jax.lax.while_loop(
+    v, _, iters = jax.lax.while_loop(
         cond, body, (v0, running0, jnp.zeros((), jnp.int32))
     )
     out_m, out_c = apply_v(v)
     did_send = active & jnp.any(v, axis=1)
-    return out_m, out_c, v, did_send
+    return out_m, out_c, v, did_send, iters
 
 
 # Public alias: the engine re-runs the same do-while per shard block.
@@ -331,7 +335,7 @@ def suite_hooks(suite, state: LSSState, live, regions, cfg: LSSConfig):
 
 
 def cycle_impl(state: LSSState, topo: TopoArrays, cfg: LSSConfig, decide,
-               gate=None, suite=None, regions=None):
+               gate=None, suite=None, regions=None, with_stats=False):
     """Untraced body of :func:`cycle` — the query-batchable form.
 
     Unlike :func:`cycle` this takes ``decide`` explicitly and is not jitted,
@@ -354,6 +358,12 @@ def cycle_impl(state: LSSState, topo: TopoArrays, cfg: LSSConfig, decide,
     formulas; ``decide`` may then be None.  Because the packed table and
     the knobs are traced data, a vmapped query axis batches the kernels
     into a leading grid dimension and slot updates never recompile.
+
+    ``with_stats=True`` (a Python static: it selects the return arity)
+    additionally returns the correction loop's iteration count —
+    ``(state', sent_now, corr_iters)`` — so instrumented callers get the
+    convergence-effort number from the same compiled program at zero
+    extra cost; the default 2-tuple contract is unchanged.
     """
     rng, kdrop = jax.random.split(state.rng)
     state = state._replace(rng=rng)
@@ -383,17 +393,20 @@ def cycle_impl(state: LSSState, topo: TopoArrays, cfg: LSSConfig, decide,
     if gate is not None:
         active = active & gate
 
-    out_m, out_c, v, did_send = _correction_loop(
+    out_m, out_c, v, did_send, corr_iters = _correction_loop(
         decide, state, topo, live, active, cfg, status_viol=status_viol,
         corrected=corrected, entry=entry)
     pending = state.pending | (v & did_send[:, None])
     last_send = jnp.where(did_send, state.t, state.last_send)
     sent_now = jnp.sum(v & did_send[:, None])
 
-    return state._replace(
+    state = state._replace(
         out_m=out_m, out_c=out_c, pending=pending, last_send=last_send,
         t=state.t + 1,
-    ), sent_now
+    )
+    if with_stats:
+        return state, sent_now, corr_iters
+    return state, sent_now
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "decide", "suite"))

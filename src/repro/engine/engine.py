@@ -136,14 +136,21 @@ class ShardedLSS:
         ``HalfspaceRegions`` / :class:`~repro.core.regions.PackedSlot`)
         replacing the default Voronoi-on-``centers``; packed, so it rides
         the fused kernel path.
+      tracker: optional :class:`repro.obs.Tracker`; :meth:`run` wraps
+        every jit dispatch in an ``engine.dispatch`` span (wall time, k,
+        recompile delta) recorded into the tracker's registry.  Default
+        is a :class:`~repro.obs.NoopTracker` (timing only, nothing kept).
     """
 
     def __init__(self, topo: topology.Topology, centers,
                  cfg: lss.LSSConfig = lss.LSSConfig(),
                  ecfg: EngineConfig = EngineConfig(), decide=None,
-                 region=None):
+                 region=None, tracker=None):
+        from repro.obs import NoopTracker  # local: keep engine import light
+
         self.cfg = cfg
         self.ecfg = ecfg
+        self.tracker = tracker if tracker is not None else NoopTracker()
         self.centers = jnp.asarray(centers)
         if region is not None:
             self.region_slot = regions.as_packed_slot(region)
@@ -374,12 +381,12 @@ class ShardedLSS:
         if gate is not None:
             active = active & gate
 
-        out_m2, out_c2, v, did_send = lss.correction_loop(
+        out_m2, out_c2, v, did_send, corr_iters = lss.correction_loop(
             decide, flat_state, flat_topo, live, active, cfg,
             status_viol=status_viol, corrected=corrected, entry=entry)
         pending = v & did_send[:, None]
         new_last = jnp.where(did_send, t, last_send)
-        return out_m2, out_c2, pending, new_last
+        return out_m2, out_c2, pending, new_last, corr_iters
 
     def _note_unfused(self) -> None:
         """An opaque per-call decide bypassed the fused path: the caller
@@ -399,7 +406,7 @@ class ShardedLSS:
     # -- one cycle, gather-fallback (full arrays, one device) --------------
     def _cycle_full(self, state: ShardedState, tables: DeviceTopo,
                     decide=None, cfg=None, gate=None,
-                    pregions=None) -> ShardedState:
+                    pregions=None, with_stats=False):
         """One engine cycle on full ``(S, B, ...)`` arrays.
 
         ``tables`` is the traced :class:`DeviceTopo` (membership edits swap
@@ -409,6 +416,10 @@ class ShardedLSS:
         concurrent monitoring queries with the shard axis in a single
         dispatch — with packed per-query ``pregions`` the whole Q x S
         batch rides the fused kernels.
+
+        ``with_stats=True`` (Python static, selects the return arity)
+        returns ``(state', corr_iters)`` — the correction do-while's
+        iteration count, mirroring ``lss.cycle_impl(with_stats=True)``.
         """
         cfg = cfg if cfg is not None else self.cfg
         S, B, D = self.S, self.B, self.D
@@ -452,17 +463,20 @@ class ShardedLSS:
 
         # Peer-local update on flattened rows.
         fl = lambda a: a.reshape(S * B, *a.shape[2:])
-        out_m, out_c, pending, last_send = self._peer_update(
+        out_m, out_c, pending, last_send, corr_iters = self._peer_update(
             fl(state.out_m), fl(state.out_c), fl(in_m), fl(in_c),
             fl(state.x_m), fl(state.x_c), fl(live), fl(state.last_send),
             fl(state.alive), state.t, decide=decide, cfg=cfg, gate=gate,
             pregions=pregions)
         sh = lambda a: a.reshape(S, B, *a.shape[1:])
-        return state._replace(
+        state = state._replace(
             out_m=sh(out_m), out_c=sh(out_c), in_m=in_m, in_c=in_c,
             pending=sh(pending), last_send=sh(last_send),
             t=state.t + 1, msgs=state.msgs + sent.astype(state.msgs.dtype),
             rng=rng)
+        if with_stats:
+            return state, corr_iters
+        return state
 
     def _run_block(self, state: ShardedState, tables: DeviceTopo,
                    k: int) -> ShardedState:
@@ -511,7 +525,7 @@ class ShardedLSS:
         in_m, in_c = exchange.scatter_block(in_m, in_c, buf_m, buf_c, flag,
                                             halo.recv_row, halo.recv_slot)
 
-        out_m2, out_c2, pending, last_send = self._peer_update(
+        out_m2, out_c2, pending, last_send, _ = self._peer_update(
             out_m, out_c, in_m, in_c, sq(state.x_m), sq(state.x_c), live,
             sq(state.last_send), alive, state.t)
         ex = lambda a: a[None]
@@ -544,12 +558,32 @@ class ShardedLSS:
 
     # -- driver ------------------------------------------------------------
     def run(self, state: ShardedState, cycles: int) -> ShardedState:
-        """Advance ``cycles`` cycles, ``cycles_per_dispatch`` per jit call."""
+        """Advance ``cycles`` cycles, ``cycles_per_dispatch`` per jit call.
+
+        Each jit call is an ``engine.dispatch`` span in the tracker: wall
+        time, ``k``, suite/fused attributes, and the compiled-variant
+        delta (``recompiled``) accumulated into the registry's
+        ``engine_dispatch_recompiles_total`` counter.
+        """
+        from repro.obs import jit_cache_size
+
         k = max(1, self.ecfg.cycles_per_dispatch)
         done = 0
         while done < cycles:
             step = min(k, cycles - done)
-            state = self._run_jit(state, self._tables, k=step)
+            before = jit_cache_size(self._run_jit)
+            with self.tracker.span("engine.dispatch", k=step,
+                                   suite=self.suite.name) as sp:
+                state = self._run_jit(state, self._tables, k=step)
+                after = jit_cache_size(self._run_jit)
+                if (before is not None and after is not None
+                        and after > before):
+                    sp.set("recompiled", after - before)
+                    self.tracker.counter(
+                        "engine_dispatch_recompiles_total",
+                        "jit cache growth across engine run dispatches").inc(
+                            after - before)
+                sp.set("fused", self.dispatch_info["fused"])
             done += step
         return state
 

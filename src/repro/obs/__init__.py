@@ -1,0 +1,58 @@
+"""Fleet observability: pluggable trackers, spans, metrics, dashboards.
+
+The paper's peers certify a *global* threshold decision from purely
+*local* state; operating a fleet of them inverts the problem — the only
+way to see the deployment's health is through aggregate observables
+(convergence fraction, msgs/link, stopping-rule violations).  This
+package is the one interface those observables flow through:
+
+* :mod:`.metrics` — counter / gauge / histogram registry with label
+  sets and Prometheus text exposition.
+* :mod:`.tracker` — the pluggable :class:`Tracker` protocol
+  (``log_record`` / ``log_metrics`` / ``span`` / registry) with
+  :class:`NoopTracker`, :class:`InMemoryTracker`, :class:`JsonlTracker`
+  (bitwise-compatible with the legacy sink's JSONL) and
+  :class:`PrometheusTextTracker` backends.
+* :mod:`.schema` — the golden record schema + validators.
+* :mod:`.dashboard` — per-tenant / fleet text dashboards over a record
+  stream.
+
+Everything is stdlib-only host-side code: trackers never touch device
+arrays, so instrumenting the service adds no transfers — the numbers
+all come from the one batched observe round-trip it already makes.
+"""
+
+from .metrics import (Counter, DEFAULT_COUNT_BUCKETS, DEFAULT_TIME_BUCKETS,
+                      Gauge, Histogram, MetricsRegistry)
+from .schema import (CONTROL_OPTIONAL, CONTROL_REQUIRED, PER_QUERY_OPTIONAL,
+                     PER_QUERY_REQUIRED, validate_record, validate_stream)
+from .tracker import (InMemoryTracker, JsonlTracker, NoopTracker,
+                      PrometheusTextTracker, Span, Tracker, jit_cache_size)
+from .dashboard import (render_controls, render_dashboard,
+                        render_fleet_header, sparkline)
+
+__all__ = [
+    "CONTROL_OPTIONAL",
+    "CONTROL_REQUIRED",
+    "Counter",
+    "DEFAULT_COUNT_BUCKETS",
+    "DEFAULT_TIME_BUCKETS",
+    "Gauge",
+    "Histogram",
+    "InMemoryTracker",
+    "JsonlTracker",
+    "MetricsRegistry",
+    "NoopTracker",
+    "PER_QUERY_OPTIONAL",
+    "PER_QUERY_REQUIRED",
+    "PrometheusTextTracker",
+    "Span",
+    "Tracker",
+    "jit_cache_size",
+    "render_controls",
+    "render_dashboard",
+    "render_fleet_header",
+    "sparkline",
+    "validate_record",
+    "validate_stream",
+]

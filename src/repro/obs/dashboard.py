@@ -1,0 +1,131 @@
+"""Text convergence dashboards over a tracker's record stream.
+
+Turns the per-query records a :class:`~repro.obs.tracker.Tracker`
+retained (or any parsed JSONL list) into a fleet-level text view: one
+row per tenant with an accuracy-trajectory sparkline, quiescence state,
+message cost, and SLO standing, plus a control-activity tail.  The
+renderer is pure (records in, string out) so it works equally on a live
+``InMemoryTracker``, a ``JsonlTracker``, or a replayed file.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+__all__ = ["sparkline", "render_dashboard", "render_fleet_header",
+           "render_controls"]
+
+_BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: Iterable[float], width: int = 24,
+              lo: float = 0.0, hi: float = 1.0) -> str:
+    """Unicode block sparkline of a trajectory, resampled to ``width``."""
+    vals = [float(v) for v in values]
+    if not vals:
+        return ""
+    if len(vals) > width:
+        # Tail-biased resample: the most recent point always survives.
+        step = len(vals) / width
+        vals = [vals[min(int(i * step), len(vals) - 1)]
+                for i in range(width - 1)] + [vals[-1]]
+    span = hi - lo if hi > lo else 1.0
+    out = []
+    for v in vals:
+        frac = min(max((v - lo) / span, 0.0), 1.0)
+        out.append(_BLOCKS[min(int(frac * len(_BLOCKS)), len(_BLOCKS) - 1)])
+    return "".join(out)
+
+
+def _by_query(records: Iterable[dict]) -> Dict[str, List[dict]]:
+    out: Dict[str, List[dict]] = {}
+    for r in records:
+        q = r.get("query")
+        if q is not None:
+            out.setdefault(q, []).append(r)
+    return out
+
+
+def render_fleet_header(records: List[dict]) -> str:
+    """One-line fleet summary: tenants, quiesced fraction, msgs/link."""
+    hist = _by_query(records)
+    if not hist:
+        return "fleet: no per-query records"
+    last = {q: rs[-1] for q, rs in hist.items()}
+    n = len(last)
+    quiesced = sum(1 for r in last.values() if r.get("quiescent"))
+    acc = sum(r.get("accuracy", 0.0) for r in last.values()) / n
+    mpl = sum(r.get("msgs_per_link", 0.0) for r in last.values())
+    t = max(r.get("t", 0) for r in last.values())
+    return (f"fleet @ t={t}: {n} tenants, {quiesced}/{n} quiescent, "
+            f"mean accuracy {acc:.3f}, msgs/link {mpl:.3f}")
+
+
+def _quiesce_time(rs: List[dict]) -> Optional[int]:
+    """Cycle count at which the tenant quiesced and stayed quiesced."""
+    t = None
+    for r in rs:
+        if r.get("quiescent"):
+            if t is None:
+                t = r.get("t")
+        else:
+            t = None
+    return t
+
+
+def render_dashboard(records: List[dict], width: int = 24,
+                     sort_by: str = "query") -> str:
+    """Per-tenant table: accuracy sparkline + convergence/cost columns.
+
+    ``sort_by``: ``"query"`` (id order) or ``"accuracy"`` (worst first).
+    """
+    hist = _by_query(records)
+    if not hist:
+        return "no per-query records"
+    rows = []
+    for q, rs in hist.items():
+        last = rs[-1]
+        accs = [r.get("accuracy", 0.0) for r in rs]
+        qt = _quiesce_time(rs)
+        slo = ""
+        if "slo_ok" in last:
+            slo = ("ok" if last["slo_ok"] else
+                   f"VIOL x{last.get('slo_violations', 0)}")
+        rows.append((q, last.get("accuracy", 0.0), sparkline(accs, width),
+                     "yes" if last.get("quiescent") else "no",
+                     "-" if qt is None else str(qt),
+                     last.get("msgs_per_link", 0.0), slo))
+    if sort_by == "accuracy":
+        rows.sort(key=lambda r: r[1])
+    else:
+        rows.sort(key=lambda r: r[0])
+    qw = max(5, max(len(r[0]) for r in rows))
+    lines = [render_fleet_header(records),
+             f"{'query':<{qw}}  {'accuracy':<{width}}  {'acc':>6}  "
+             f"{'quiet':>5}  {'t_q':>6}  {'msg/lnk':>8}  slo"]
+    for q, acc, spark, quiet, qt, mpl, slo in rows:
+        lines.append(f"{q:<{qw}}  {spark:<{width}}  {acc:>6.3f}  "
+                     f"{quiet:>5}  {qt:>6}  {mpl:>8.3f}  {slo}")
+    return "\n".join(lines)
+
+
+def render_controls(records: List[dict], tail: int = 5) -> str:
+    """The last few control records as activity lines."""
+    ctrl = [r for r in records if r.get("kind") == "control"]
+    if not ctrl:
+        return "control: no activity"
+    lines = []
+    for r in ctrl[-tail:]:
+        bits = [f"dispatch {r.get('dispatch')}",
+                f"queue {r.get('queue_depth')}",
+                f"preempted {r.get('preempted_depth')}"]
+        for key in ("activated", "resumed", "preempted", "evicted",
+                    "epochs"):
+            if r.get(key):
+                bits.append(f"{key} {len(r[key])}")
+        if r.get("spans"):
+            busiest = max(r["spans"].items(), key=lambda kv: kv[1])
+            bits.append(f"spans {len(r['spans'])} "
+                        f"(max {busiest[0]} {busiest[1] * 1e3:.2f}ms)")
+        lines.append("control: " + ", ".join(bits))
+    return "\n".join(lines)

@@ -1,0 +1,146 @@
+"""Golden schema for the service's telemetry records.
+
+Two record kinds flow through a tracker's ``log_record`` stream:
+
+**Per-query** (one per dispatch per active slot; no ``kind`` key)::
+
+    dispatch       int    dispatch ordinal
+    t              int    global cycle count after the dispatch
+    query          str    tenant's query id
+    slot           int    slot index
+    accuracy       float  fraction of live peers deciding correctly
+    quiescent      bool   no pending messages / violations for this query
+    region         int    ground-truth region of the global average
+    msgs           int    sends by this query in this dispatch window
+    msgs_per_link  float  ditto, normalized per link (current edge count)
+    topo_version   int    topology version the dispatch executed under
+
+    (SLO tenants only)
+    slo_ok         bool   every declared check passed this window
+    slo_violations int    cumulative violation count
+    accuracy_ok    bool   accuracy target met (when declared)
+    msgs_ok        bool   msgs/link bound met (when declared)
+
+**Control** (``kind: "control"``; at most one per dispatch, emitted only
+when the boundary did something)::
+
+    kind            "control"
+    dispatch        int   dispatch ordinal
+    t               int   global cycle count
+    queue_depth     int   admission queue occupancy after the boundary
+    preempted_depth int   suspended queries waiting to resume
+
+    (only when non-empty / present)
+    activated  [str]             queries activated at this boundary
+    resumed    [str]             preempted queries resumed
+    preempted  [str]             queries suspended
+    evicted    [{query, reason}] queue evictions with reasons
+    epochs     [dict]            regrow / rebalance epoch records
+    spans      {name: float}     host-boundary span wall times (seconds)
+    boundary   {name: int}       boundary work counts (events drained,
+                                 batches applied, activations, recompiles)
+
+:func:`validate_record` checks one dict against this schema and returns
+a list of problem strings (empty = valid); :func:`validate_stream` maps
+it over an iterable of records (e.g. parsed JSONL lines).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+__all__ = ["PER_QUERY_REQUIRED", "PER_QUERY_OPTIONAL", "CONTROL_REQUIRED",
+           "CONTROL_OPTIONAL", "validate_record", "validate_stream"]
+
+_BOOL = (bool,)
+_INT = (int,)          # bool is excluded explicitly below
+_NUM = (int, float)
+_STR = (str,)
+_LIST = (list,)
+_DICT = (dict,)
+
+PER_QUERY_REQUIRED = {
+    "dispatch": _INT,
+    "t": _INT,
+    "query": _STR,
+    "slot": _INT,
+    "accuracy": _NUM,
+    "quiescent": _BOOL,
+    "region": _INT,
+    "msgs": _INT,
+    "msgs_per_link": _NUM,
+    "topo_version": _INT,
+}
+
+PER_QUERY_OPTIONAL = {
+    "slo_ok": _BOOL,
+    "slo_violations": _INT,
+    "accuracy_ok": _BOOL,
+    "msgs_ok": _BOOL,
+}
+
+CONTROL_REQUIRED = {
+    "kind": _STR,
+    "dispatch": _INT,
+    "t": _INT,
+    "queue_depth": _INT,
+    "preempted_depth": _INT,
+}
+
+CONTROL_OPTIONAL = {
+    "activated": _LIST,
+    "resumed": _LIST,
+    "preempted": _LIST,
+    "evicted": _LIST,
+    "epochs": _LIST,
+    "spans": _DICT,
+    "boundary": _DICT,
+}
+
+
+def _check_type(key: str, value, types: tuple, errs: List[str]) -> None:
+    # bool is an int subclass: reject it for int/float-typed keys, and
+    # require it for bool-typed keys.
+    if bool in types:
+        if not isinstance(value, bool):
+            errs.append(f"{key}: expected bool, got {type(value).__name__}")
+        return
+    if isinstance(value, bool) or not isinstance(value, types):
+        names = "/".join(t.__name__ for t in types)
+        errs.append(f"{key}: expected {names}, got {type(value).__name__}")
+
+
+def validate_record(record: dict) -> List[str]:
+    """Problems with one record against the golden schema ([] = valid)."""
+    if not isinstance(record, dict):
+        return [f"record is {type(record).__name__}, not dict"]
+    kind = record.get("kind")
+    if kind == "control":
+        required, optional = CONTROL_REQUIRED, CONTROL_OPTIONAL
+    elif kind is None:
+        required, optional = PER_QUERY_REQUIRED, PER_QUERY_OPTIONAL
+    else:
+        return [f"unknown record kind {kind!r}"]
+    errs: List[str] = []
+    for key, types in required.items():
+        if key not in record:
+            errs.append(f"missing required key {key!r}")
+        else:
+            _check_type(key, record[key], types, errs)
+    for key, value in record.items():
+        if key in required:
+            continue
+        if key not in optional:
+            errs.append(f"unknown key {key!r}")
+        else:
+            _check_type(key, value, optional[key], errs)
+    return errs
+
+
+def validate_stream(records: Iterable[dict]) -> List[Tuple[int, str]]:
+    """(index, problem) pairs over a record stream ([] = all valid)."""
+    out: List[Tuple[int, str]] = []
+    for i, rec in enumerate(records):
+        for err in validate_record(rec):
+            out.append((i, err))
+    return out

@@ -18,12 +18,16 @@ Components:
   ``sim.run_dynamic``'s resampling noise to real update streams).
 * :class:`Service` — the driver: K cycles per jit dispatch over all Q
   slots (donated state buffers off-CPU), admission + ingest between
-  dispatches, per-tenant telemetry to a :class:`TelemetrySink`.
+  dispatches, per-tenant telemetry through a pluggable
+  :class:`repro.obs.Tracker` (records + host-boundary spans + the shared
+  metrics registry; :class:`TelemetrySink` is the legacy JSONL-flavored
+  tracker and remains the default).
 * :mod:`.controlplane` — the self-management layer: per-tenant SLOs
-  (:class:`SLOSpec`) with violation tracking, priority scheduling with
-  preemption under slot contention, and the capacity epochs (auto-regrow,
-  drift-triggered partition rebalance), configured through
-  :class:`ControlPlaneConfig`.
+  (:class:`SLOSpec`) with violation tracking *published into the metrics
+  registry*, priority scheduling with preemption under slot contention,
+  SLO-driven queue eviction reading the registry back, and the capacity
+  epochs (auto-regrow, drift-triggered partition rebalance), configured
+  through :class:`ControlPlaneConfig`.
 """
 
 from .admission import AdmissionQueue

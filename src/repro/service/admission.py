@@ -122,6 +122,17 @@ class AdmissionQueue:
                 return spec
         raise KeyError(f"query id {query_id!r} is not waiting")
 
+    def evict(self, query_id: str, reason: str) -> bool:
+        """Drop a waiting spec with an ``"evicted"`` terminal status and
+        an explicit reason (control-plane policy evictions, e.g.
+        SLO-driven).  Returns False for ids not waiting."""
+        for i, (qid, _) in enumerate(self._queue):
+            if qid == query_id:
+                del self._queue[i]
+                self._record_terminal(query_id, "evicted", reason)
+                return True
+        return False
+
     def cancel(self, query_id: str) -> bool:
         """Drop a waiting spec (a retire() before it ever got a slot)."""
         for i, (qid, _) in enumerate(self._queue):

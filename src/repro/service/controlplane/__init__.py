@@ -5,9 +5,12 @@ multi-tenant service; this package makes that service *self-managing*
 under heavy traffic:
 
 * :mod:`.slo` — per-tenant service-level objectives evaluated from the
-  telemetry the service already computes, with violation/attainment books.
+  telemetry the service already computes, with violation/attainment books
+  published into the shared :class:`repro.obs.MetricsRegistry`.
 * :mod:`.scheduler` — admission-order + preemption policy when the Q
   compiled slots are contended (priority classes, violation-aware aging).
+* :mod:`.eviction` — SLO-driven queue eviction: a policy that reads the
+  registry the SLO tracker publishes (not its private books).
 * :mod:`.capacity` — auto-regrow on membership-capacity exhaustion and
   drift-triggered partition-rebalance epochs.
 
@@ -22,6 +25,7 @@ pre-control-plane behavior).
 from typing import NamedTuple
 
 from .capacity import CapacityManager
+from .eviction import SLOEvictionPolicy
 from .scheduler import (ActiveView, FifoScheduler, Plan, PriorityScheduler,
                         WaitingView)
 from .slo import SLOSpec, SLOTracker
@@ -33,6 +37,7 @@ __all__ = [
     "FifoScheduler",
     "Plan",
     "PriorityScheduler",
+    "SLOEvictionPolicy",
     "SLOSpec",
     "SLOTracker",
     "WaitingView",
@@ -52,6 +57,8 @@ class ControlPlaneConfig(NamedTuple):
     grow_factor: float = 1.5  # capacity growth per regrow epoch
     rebalance_drift: float = 0.0  # cut-frac increase triggering an epoch
     rebalance_check_every: int = 8  # dispatches between drift checks
+    evict_attainment_below: float = 0.0  # SLO-driven queue eviction floor
+    evict_min_windows: int = 4  # evaluated windows before eligibility
 
 
 def make_scheduler(cfg: ControlPlaneConfig):

@@ -18,6 +18,13 @@ The tracker keeps per-tenant violation counts and attainment (fraction of
 evaluated windows that met the SLO); the scheduler's violation-aware
 aging reads the counts, and the service folds the per-window fields into
 each telemetry record so the sink carries the SLO trail.
+
+Given a :class:`repro.obs.MetricsRegistry`, the tracker also *publishes*
+its books as shared metrics — ``slo_attainment`` / ``slo_evaluated``
+gauges and a ``slo_violations_total`` counter, all labeled by query — so
+control-plane policies (e.g. :class:`~repro.service.controlplane.
+eviction.SLOEvictionPolicy`) and dashboards consume the one metrics
+interface instead of reaching into private accounting.
 """
 
 from __future__ import annotations
@@ -66,12 +73,26 @@ class SLOTracker:
     the service's terminal-status bound.
     """
 
-    def __init__(self, cap: int = 1 << 16):
+    def __init__(self, cap: int = 1 << 16, registry=None):
         self.cap = cap
+        self.registry = registry  # optional repro.obs.MetricsRegistry
         self._books: Dict[str, _Book] = {}
         self._violations: Dict[str, int] = {}
         self._evaluated: Dict[str, int] = {}
         self._met: Dict[str, int] = {}
+
+    def _publish(self, query_id: str) -> None:
+        """Mirror one tenant's book into the shared metrics registry."""
+        if self.registry is None:
+            return
+        self.registry.gauge(
+            "slo_attainment",
+            "fraction of evaluated SLO windows met, per query").set(
+                self.attainment(query_id), query=query_id)
+        self.registry.gauge(
+            "slo_evaluated",
+            "SLO windows evaluated, per query").set(
+                self._evaluated.get(query_id, 0), query=query_id)
 
     def submit(self, query_id: str, slo: Optional[SLOSpec],
                now_cycles: int) -> None:
@@ -85,6 +106,7 @@ class SLOTracker:
         for d in (self._books, self._violations, self._evaluated, self._met):
             while len(d) > self.cap:
                 d.pop(next(iter(d)))
+        self._publish(query_id)
 
     def observe(self, query_id: str, record: dict) -> Optional[dict]:
         """Evaluate one per-dispatch record; returns the SLO fields to
@@ -100,6 +122,12 @@ class SLOTracker:
                 self._met[query_id] += 1
             else:
                 self._violations[query_id] += 1
+                if self.registry is not None:
+                    self.registry.counter(
+                        "slo_violations_total",
+                        "SLO window violations, per query").inc(
+                            1, query=query_id)
+            self._publish(query_id)
         return {"slo_ok": ok, "slo_violations": self._violations[query_id],
                 **checks}
 
@@ -120,6 +148,11 @@ class SLOTracker:
             return
         self._evaluated[query_id] += 1
         self._violations[query_id] += 1
+        if self.registry is not None:
+            self.registry.counter(
+                "slo_violations_total",
+                "SLO window violations, per query").inc(1, query=query_id)
+        self._publish(query_id)
 
     def violations(self, query_id: str) -> int:
         return self._violations.get(query_id, 0)

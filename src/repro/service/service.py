@@ -48,11 +48,14 @@ import numpy as np
 
 from repro.core import lss, regions, topology, wvs
 from repro.kernels import suite as kernel_suite
+from repro.obs import Tracker, jit_cache_size
+from repro.obs import metrics as obs_metrics
 
 from . import query as qmod
 from .admission import AdmissionQueue
 from .controlplane import (ActiveView, CapacityManager, ControlPlaneConfig,
-                           SLOTracker, WaitingView, make_scheduler)
+                           SLOEvictionPolicy, SLOTracker, WaitingView,
+                           make_scheduler)
 from .ingest import StreamIngest, UpdateBatch
 from .membership import MembershipQueue
 from .registry import QueryRegistry
@@ -195,11 +198,13 @@ class _CoreBackend:
     def cycle(self, st: lss.LSSState, cfg: lss.LSSConfig, decide, gate, topo,
               pregions=None):
         if self.suite.fused and pregions is not None:
-            st, _ = lss.cycle_impl(st, topo, cfg, None, gate=gate,
-                                   suite=self.suite, regions=pregions)
+            st, _, iters = lss.cycle_impl(st, topo, cfg, None, gate=gate,
+                                          suite=self.suite, regions=pregions,
+                                          with_stats=True)
         else:
-            st, _ = lss.cycle_impl(st, topo, cfg, decide, gate=gate)
-        return st
+            st, _, iters = lss.cycle_impl(st, topo, cfg, decide, gate=gate,
+                                          with_stats=True)
+        return st, iters
 
     def metrics(self, st: lss.LSSState, decide, eps, topo):
         return lss.metrics_impl(st, topo, decide, eps=eps)
@@ -243,6 +248,9 @@ class _CoreBackend:
 
     def cut_frac(self) -> Optional[float]:
         return None  # one device, no partition to drift
+
+    def halo_bytes_per_cycle(self) -> int:
+        return 0  # one device, nothing crosses a shard boundary
 
     def regrow(self, dyn, states):
         """Adopt a grown topology (shape change: the service's jitted
@@ -298,7 +306,8 @@ class _EngineBackend:
     def cycle(self, st, cfg: lss.LSSConfig, decide, gate, topo,
               pregions=None):
         return self.eng._cycle_full(st, topo, decide=decide, cfg=cfg,
-                                    gate=gate, pregions=pregions)
+                                    gate=gate, pregions=pregions,
+                                    with_stats=True)
 
     def metrics(self, st, decide, eps, topo):
         return self.eng._metrics_impl(st, topo, eps=eps, decide=decide)
@@ -367,6 +376,14 @@ class _EngineBackend:
         st = self.eng.stopo
         return st.cut_edges() / max(st.num_edges, 1)
 
+    def halo_bytes_per_cycle(self) -> int:
+        """Bytes the dense halo transport moves per cycle per query slot:
+        the (S, S, H) exchange buffers — messages ``(m: d x f32, c: f32)``
+        plus the presence flag.  A capacity figure (the buffers ship
+        whole), which is exactly the transport's real footprint."""
+        S, H, d = self.eng.S, self.eng.stopo.halo_width, self.scfg.d
+        return S * S * H * (4 * d + 4 + 1)
+
     def _reshard(self, dyn, states):
         """Fresh partition of ``dyn`` + state migration across
         ``new_of_old`` — the mechanics shared by both epoch kinds."""
@@ -396,7 +413,19 @@ class Service:
         (:meth:`join_peer`/:meth:`leave_peer`/:meth:`link_peers`/
         :meth:`unlink_peers`).
       scfg: :class:`ServiceConfig` (slot capacity, dispatch fusion, knobs).
-      telemetry: optional :class:`TelemetrySink` (default: in-memory only).
+      telemetry: optional :class:`TelemetrySink` (legacy spelling of
+        ``tracker``; a sink IS a tracker).
+      tracker: optional :class:`repro.obs.Tracker` the service routes ALL
+        observability through — per-query / control records
+        (``log_record``), host-boundary and dispatch spans (``span``),
+        and convergence / control-plane metrics (the shared registry).
+        Default: an owned, ring-buffered :class:`TelemetrySink`
+        (in-memory only, bounded at ``_STATUS_CAP`` records) that
+        :meth:`close` disposes of.  Mutually exclusive with ``telemetry``.
+
+    The service is a context manager: ``with Service(...) as svc: ...``
+    closes the tracker it owns on exit (a caller-supplied tracker is
+    borrowed and stays open).
     """
 
     # Bound on remembered terminal query statuses (retired ids) and, at
@@ -405,7 +434,11 @@ class Service:
 
     def __init__(self, topo,
                  scfg: ServiceConfig = ServiceConfig(),
-                 telemetry: Optional[TelemetrySink] = None):
+                 telemetry: Optional[TelemetrySink] = None,
+                 tracker: Optional[Tracker] = None):
+        if telemetry is not None and tracker is not None:
+            raise ValueError(
+                "pass either telemetry= (legacy) or tracker=, not both")
         self.topo = topo
         self.scfg = scfg
         self.base_cfg = lss.LSSConfig(
@@ -423,11 +456,28 @@ class Service:
         self.ingest = StreamIngest()
         self.admission = AdmissionQueue(scfg.admission_queue,
                                         scfg.admission_overflow)
+        # One tracker carries every observability surface; the service
+        # owns (and closes) the default it builds for itself.
+        self._owns_tracker = telemetry is None and tracker is None
+        if tracker is not None:
+            self.tracker = tracker
+        elif telemetry is not None:
+            self.tracker = telemetry
+        else:
+            self.tracker = TelemetrySink(max_records=self._STATUS_CAP)
+        # Legacy alias: callers historically read svc.telemetry.records.
+        self.telemetry = self.tracker
         # Control plane: SLO books, the admission/preemption scheduler,
-        # and the capacity (regrow / rebalance-epoch) policy.
+        # and the capacity (regrow / rebalance-epoch) policy.  The SLO
+        # tracker publishes its books into the shared metrics registry;
+        # the eviction policy reads them back from the same registry.
         cp = scfg.control
         self.cp = cp
-        self.slo = SLOTracker()
+        self.slo = SLOTracker(registry=self.tracker.registry)
+        self.evictor = SLOEvictionPolicy(
+            self.tracker.registry,
+            attainment_below=cp.evict_attainment_below,
+            min_windows=cp.evict_min_windows)
         self.scheduler = make_scheduler(cp)
         self.capman = CapacityManager(
             auto_regrow=cp.auto_regrow, grow_factor=cp.grow_factor,
@@ -444,10 +494,18 @@ class Service:
                                  if self._dyn is not None else 0)
         self._present = (self._dyn.present.copy()
                          if self._dyn is not None else None)
-        self.telemetry = telemetry if telemetry is not None else TelemetrySink()
         self.dispatches = 0
         self.cycles = 0
         self._edges = max(topo.num_edges, 1)
+        # Per-boundary span timings / work counts, folded into the next
+        # control record (epoch spans land here too, from grow_capacity /
+        # rebalance_now calls between ticks).
+        self._boundary_spans: Dict[str, float] = {}
+        self._boundary_counts: Dict[str, int] = {}
+        self._recompiles = 0  # cumulative _step cache growth (incl. cold)
+        self._corr_iters = None  # (Q,) per-slot do-while iters last window
+        self._last_k = scfg.cycles_per_dispatch  # cycles in last window
+        self._quiesced_at: Dict[str, int] = {}  # qid -> first quiescent t
         self._total_msgs = {}  # query_id -> host-side exact total
         # Ids that held a slot and released it (bounded: oldest evicted
         # past _STATUS_CAP so a long-lived service's memory tracks live
@@ -483,8 +541,33 @@ class Service:
     def dispatch_info(self) -> dict:
         """Which kernel suite the compiled dispatch runs (``suite`` name +
         ``fused`` flag) — benchmark/telemetry ground truth, so an unfused
-        fallback can't be mislabeled as a kernel run."""
-        return self.backend.dispatch_info()
+        fallback can't be mislabeled as a kernel run — plus the compile
+        books: ``recompiles`` (cumulative ``_step`` cache growth observed
+        across ticks, cold compile included) and ``step_cache_size`` (the
+        jit cache's current variant count, None when the running jax
+        doesn't expose it).  The same numbers live in the registry as
+        ``service_dispatch_recompiles_total``."""
+        info = dict(self.backend.dispatch_info())
+        info["recompiles"] = self._recompiles
+        info["step_cache_size"] = jit_cache_size(self._step)
+        return info
+
+    def close(self) -> None:
+        """Deterministically dispose of observability resources: flushes
+        the tracker and, when the service built its own (no ``tracker=``/
+        ``telemetry=`` argument), closes it.  Borrowed trackers stay
+        open — the caller owns their lifecycle.  Idempotent."""
+        if self._owns_tracker:
+            self.tracker.close()
+        else:
+            self.tracker.flush()
+
+    def __enter__(self) -> "Service":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # -- the batched step --------------------------------------------------
     def _one_cycle(self, st, qp: qmod.QueryParams, topo):
@@ -497,10 +580,16 @@ class Service:
                                   pregions=regions.PackedSlot(*qp.regions))
 
     def _step_impl(self, states, params: qmod.QueryParams, topo, k: int):
-        def body(_, sts):
-            return jax.vmap(
+        # The carry also accumulates each slot's correction do-while
+        # iteration count across the K cycles — convergence effort rides
+        # the dispatch it already pays for, no extra device work.
+        def body(_, carry):
+            sts, iters = carry
+            sts, it = jax.vmap(
                 lambda st, qp: self._one_cycle(st, qp, topo))(sts, params)
-        return jax.lax.fori_loop(0, k, body, states)
+            return sts, iters + it
+        zero = jnp.zeros((states.alive.shape[0],), jnp.int32)
+        return jax.lax.fori_loop(0, k, body, (states, zero))
 
     def _observe_impl(self, states, params: qmod.QueryParams, topo):
         def one(st, qp):
@@ -696,6 +785,10 @@ class Service:
     def _record_retired(self, query_id: str) -> None:
         self._retired[query_id] = None
         self._activated_at.pop(query_id, None)
+        self._quiesced_at.pop(query_id, None)
+        # Per-tenant metric series die with the tenant (the record stream
+        # keeps the history; the registry tracks the live fleet).
+        self.tracker.registry.remove_labels(query=query_id)
         while len(self._retired) > self._STATUS_CAP:
             self._retired.pop(next(iter(self._retired)))
             # _total_msgs keeps pace: final totals stay queryable for as
@@ -810,7 +903,12 @@ class Service:
         new_dyn = dyn.grow(n_cap=n_cap, deg_cap=deg_cap)
         self.topo = self._dyn = new_dyn
         self.membership.rebind(new_dyn)
-        self.states = self.backend.regrow(new_dyn, self.states)
+        with self.tracker.span("epoch_regrow", n_cap=new_dyn.n_cap,
+                               deg_cap=new_dyn.deg_cap) as sp:
+            self.states = self.backend.regrow(new_dyn, self.states)
+        self._boundary_spans["epoch_regrow"] = sp.seconds
+        self._boundary_counts["epochs"] = (
+            self._boundary_counts.get("epochs", 0) + 1)
         self._present = new_dyn.present.copy()
         self._applied_version = new_dyn.version
         self._edges = max(new_dyn.num_edges, 1)
@@ -833,7 +931,11 @@ class Service:
         if before is None:
             return None
         drift = self.capman.drift(before)
-        self.states = self.backend.rebalance(self.topo, self.states)
+        with self.tracker.span("epoch_rebalance", drift=drift) as sp:
+            self.states = self.backend.rebalance(self.topo, self.states)
+        self._boundary_spans["epoch_rebalance"] = sp.seconds
+        self._boundary_counts["epochs"] = (
+            self._boundary_counts.get("epochs", 0) + 1)
         ev = self.capman.note_epoch(
             "rebalance", self.backend.cut_frac(),
             cut_before=before, drift=drift)
@@ -946,19 +1048,63 @@ class Service:
         admission queue, apply queued updates, run K cycles over all Q
         slots in one jit call, observe, emit per-tenant telemetry.
 
+        Every host boundary runs inside a tracker span (``membership_
+        drain`` / ``admission_drain`` / ``ingest_apply`` / ``dispatch``,
+        plus ``epoch_regrow`` / ``epoch_rebalance`` when an epoch fires);
+        the timings and work counts land in the registry and in the next
+        control record's ``spans`` / ``boundary`` maps.
+
         Returns this dispatch's telemetry records (active slots only).
         """
         k = cycles if cycles is not None else self.scfg.cycles_per_dispatch
-        self._apply_membership()
+        tr = self.tracker
+        with tr.span("membership_drain") as sp:
+            n_events = self._apply_membership()
+        self._boundary_spans["membership_drain"] = sp.seconds
+        self._boundary_counts["membership_events"] = n_events
         self._maybe_rebalance()
-        self._drain_admission()
-        self._apply_ingest()
+        self._evict_unrecoverable()
+        with tr.span("admission_drain") as sp:
+            n_act = self._drain_admission()
+        self._boundary_spans["admission_drain"] = sp.seconds
+        self._boundary_counts["activations"] = n_act
+        with tr.span("ingest_apply") as sp:
+            n_batches = self._apply_ingest()
+        self._boundary_spans["ingest_apply"] = sp.seconds
+        self._boundary_counts["ingest_batches"] = n_batches
         params = self.registry.params
         topo = self.backend.topo_args()
-        self.states = self._step(self.states, params, topo, k=k)
+        info = self.backend.dispatch_info()
+        before = jit_cache_size(self._step)
+        with tr.span("dispatch", k=k, backend=self.scfg.backend,
+                     suite=info.get("suite"), fused=info.get("fused")) as sp:
+            self.states, self._corr_iters = self._step(
+                self.states, params, topo, k=k)
+            after = jit_cache_size(self._step)
+            if before is not None and after is not None and after > before:
+                sp.set("recompiled", after - before)
+                self._recompiles += after - before
+                tr.counter(
+                    "service_dispatch_recompiles_total",
+                    "jit cache growth across service dispatches "
+                    "(includes the cold compile)").inc(after - before)
+        self._boundary_spans["dispatch"] = sp.seconds
         self.dispatches += 1
         self.cycles += k
+        self._last_k = k
         return self._emit_telemetry(params, topo)
+
+    def _evict_unrecoverable(self) -> None:
+        """SLO-driven eviction: drop *waiting* tenants whose published
+        attainment says their SLO is already lost (policy reads the
+        shared metrics registry — see :class:`~repro.service.controlplane.
+        eviction.SLOEvictionPolicy`)."""
+        if not self.evictor.enabled:
+            return
+        for qid, reason in self.evictor.victims(self.admission.queued_ids()):
+            if self.admission.evict(qid, reason):
+                self._enqueued_at.pop(qid, None)
+                self._ctrl_events.append(("evicted", (qid, reason)))
 
     def serve(self, dispatches: int) -> list:
         """Run ``dispatches`` ticks; returns the final tick's records."""
@@ -969,11 +1115,23 @@ class Service:
 
     # -- observation -------------------------------------------------------
     def _emit_telemetry(self, params: qmod.QueryParams, topo) -> list:
-        acc, quiescent, want = self._observe(self.states, params, topo)
-        msgs = self.backend.msgs_of(self.states)  # per-slot window counts
-        self.states = self.backend.reset_msgs(self.states)
-        acc, quiescent, want = (np.asarray(acc), np.asarray(quiescent),
-                                np.asarray(want))
+        with self.tracker.span("observe") as sp:
+            acc, quiescent, want = self._observe(self.states, params, topo)
+            msgs = self.backend.msgs_of(self.states)  # per-slot counts
+            self.states = self.backend.reset_msgs(self.states)
+            # ONE host sync for the whole fleet: metrics, message counts
+            # and the correction-iteration totals ride the same batched
+            # round trip the observation pass always made.
+            acc, quiescent, want = (np.asarray(acc), np.asarray(quiescent),
+                                    np.asarray(want))
+            corr_iters = (np.asarray(self._corr_iters)
+                          if self._corr_iters is not None else None)
+        self._boundary_spans["observe"] = sp.seconds
+        reg = self.tracker.registry
+        corr_hist = self.tracker.histogram(
+            "service_corr_iters",
+            "correction do-while iterations per slot per dispatch window",
+            buckets=obs_metrics.DEFAULT_COUNT_BUCKETS)
         records = []
         for qid, slot, _spec in self.registry.active_items():
             sent = int(msgs[slot])
@@ -993,8 +1151,44 @@ class Service:
             slo_fields = self.slo.observe(qid, rec)
             if slo_fields is not None:
                 rec.update(slo_fields)
-            self.telemetry.emit(rec)
+            # Convergence metrics, per tenant, into the shared registry.
+            reg.gauge("tenant_accuracy",
+                      "fraction of live peers deciding correctly").set(
+                          rec["accuracy"], query=qid)
+            reg.gauge("tenant_msgs_per_link",
+                      "sends per link in the last dispatch window").set(
+                          rec["msgs_per_link"], query=qid)
+            reg.counter("tenant_msgs_total",
+                        "cumulative sends, per query").inc(sent, query=qid)
+            if rec["quiescent"]:
+                if qid not in self._quiesced_at:
+                    self._quiesced_at[qid] = self.cycles
+                    reg.gauge(
+                        "tenant_quiesced_at_cycles",
+                        "cycle count at which the tenant first "
+                        "quiesced and stayed quiescent").set(
+                            self.cycles, query=qid)
+            else:
+                if self._quiesced_at.pop(qid, None) is not None:
+                    reg.gauge("tenant_quiesced_at_cycles").remove(query=qid)
+            if corr_iters is not None:
+                corr_hist.observe(int(corr_iters[slot]), query=qid)
+            self.tracker.log_record(rec)
             records.append(rec)
+        halo_bytes = self.backend.halo_bytes_per_cycle()
+        if halo_bytes and records:
+            reg.counter(
+                "engine_halo_bytes_total",
+                "halo exchange buffer bytes moved (dense transport "
+                "footprint), summed over cycles and active slots").inc(
+                    halo_bytes * self._last_k * len(records))
+        reg.gauge("service_queue_depth",
+                  "admission queue occupancy").set(len(self.admission))
+        reg.gauge("service_preempted_depth",
+                  "suspended queries waiting to resume").set(
+                      len(self._preempted))
+        reg.gauge("service_active_slots",
+                  "occupied query slots").set(len(records))
         # Tenants holding no slot still burn their SLO deadline.
         for qid in self.admission.queued_ids():
             self.slo.observe_waiting(qid, self.cycles)
@@ -1005,9 +1199,21 @@ class Service:
 
     def _emit_control_record(self) -> None:
         """One record per dispatch with the control plane's activity —
-        only when there is any (idle services emit nothing extra)."""
+        only when there is any (idle services emit nothing extra).
+
+        "Activity" covers scheduler/capacity events, non-empty waiting
+        pools, and boundary work (membership events drained, ingest
+        batches applied) — the record then carries the boundary ``spans``
+        (seconds) and ``boundary`` (work counts) maps, which is how the
+        host-boundary costs reach the JSONL trail."""
         events, self._ctrl_events = self._ctrl_events, []
-        if not events and not len(self.admission) and not self._preempted:
+        spans, self._boundary_spans = self._boundary_spans, {}
+        counts, self._boundary_counts = self._boundary_counts, {}
+        boundary_work = (counts.get("membership_events", 0)
+                         or counts.get("ingest_batches", 0)
+                         or counts.get("epochs", 0))
+        if (not events and not len(self.admission) and not self._preempted
+                and not boundary_work):
             return
         agg: dict = {"activated": [], "resumed": [], "preempted": [],
                      "evicted": [], "epochs": []}
@@ -1019,13 +1225,16 @@ class Service:
                     {"query": payload[0], "reason": payload[1]})
             else:
                 agg[kind].append(payload)
-        self.telemetry.emit({
+        self.tracker.log_record({
             "kind": "control",
             "dispatch": self.dispatches,
             "t": self.cycles,
             "queue_depth": len(self.admission),
             "preempted_depth": len(self._preempted),
             **{k: v for k, v in agg.items() if v},
+            **({"spans": spans} if spans else {}),
+            **({"boundary": {k: v for k, v in counts.items() if v}}
+               if any(counts.values()) else {}),
         })
 
     def total_msgs(self, query_id: str) -> int:

@@ -1,6 +1,14 @@
 """Per-tenant telemetry: one record per (dispatch, active query), JSONL.
 
-The sink is deliberately dumb — the :class:`~repro.service.service.
+:class:`TelemetrySink` is the legacy name for what is now a thin shim
+over :class:`repro.obs.JsonlTracker` — same constructor, same byte-level
+JSONL output, same convenience accessors — kept so existing callers
+(`TelemetrySink(path)`, ``sink.emit(rec)``, ``sink.records``) keep
+working unchanged.  New code should construct a tracker from
+:mod:`repro.obs` directly and pass it to the service as ``tracker=``;
+the record schema both speak is documented in :mod:`repro.obs.schema`.
+
+The sink stays deliberately dumb — the :class:`~repro.service.service.
 Service` computes the numbers (batched, one device round-trip per
 dispatch) and hands plain dicts here; the sink timestamps nothing and
 never touches device arrays, so it can be swapped for a real exporter.
@@ -8,75 +16,33 @@ never touches device arrays, so it can be swapped for a real exporter.
 
 from __future__ import annotations
 
-import json
-from typing import IO, List, Optional, Union
+from typing import IO, Optional, Union
+
+from repro.obs import JsonlTracker, MetricsRegistry
 
 __all__ = ["TelemetrySink"]
 
 
-class TelemetrySink:
+class TelemetrySink(JsonlTracker):
     """Collects per-query records; optionally streams them as JSONL.
 
-    Record schema (written by the service per dispatch per active query):
+    Record schema: see :mod:`repro.obs.schema` (per-query records plus
+    ``kind="control"`` control-plane records).
 
-    ``dispatch``      int   dispatch ordinal
-    ``t``             int   global cycle count after the dispatch
-    ``query``         str   tenant's query id
-    ``slot``          int   slot index
-    ``accuracy``      float fraction of live peers deciding correctly
-    ``quiescent``     bool  no pending messages / violations for this query
-    ``region``        int   ground-truth region of the global average
-    ``msgs``          int   sends by this query in this dispatch window
-    ``msgs_per_link`` float ditto, normalized per link (current edge count)
-    ``topo_version``  int   topology version the dispatch executed under
-
-    Tenants with an :class:`~repro.service.controlplane.slo.SLOSpec`
-    additionally carry ``slo_ok`` / ``slo_violations`` (cumulative) and
-    the per-check booleans (``accuracy_ok`` / ``msgs_ok``).
-
-    The control plane emits one extra *control record* per dispatch with
-    scheduler/capacity activity — distinguished by ``kind: "control"``
-    and carrying no ``query`` key: ``queue_depth``, ``preempted_depth``,
-    plus this boundary's ``activated`` / ``preempted`` /
-    ``evicted`` (with reasons) lists and any ``epochs``
-    (regrow / rebalance, with drift numbers).
+    ``max_records`` bounds the in-memory copy with a ring buffer (the
+    JSONL file still receives every record); the default ``None`` keeps
+    everything, matching the historical behavior — the service's *own*
+    default sink is bounded.  A str ``path`` is opened in append mode
+    (and owned: closed by :meth:`close` / the context manager); a
+    file-like object is borrowed.
     """
 
     def __init__(self, path: Optional[Union[str, IO[str]]] = None,
-                 keep: bool = True):
-        self.records: List[dict] = []
-        self._keep = keep
-        self._own_file = isinstance(path, str)
-        self._fh: Optional[IO[str]] = (
-            open(path, "a") if self._own_file else path)
+                 keep: bool = True, max_records: Optional[int] = None,
+                 registry: Optional[MetricsRegistry] = None):
+        super().__init__(path, keep=keep, max_records=max_records,
+                         mode="a", registry=registry)
 
+    # Legacy spelling of log_record.
     def emit(self, record: dict) -> None:
-        if self._keep:
-            self.records.append(record)
-        if self._fh is not None:
-            self._fh.write(json.dumps(record) + "\n")
-
-    def flush(self) -> None:
-        if self._fh is not None:
-            self._fh.flush()
-
-    def close(self) -> None:
-        self.flush()
-        if self._own_file and self._fh is not None:
-            self._fh.close()
-            self._fh = None
-
-    # -- convenience for tests / examples ---------------------------------
-    def for_query(self, query_id: str) -> List[dict]:
-        return [r for r in self.records if r.get("query") == query_id]
-
-    def controls(self) -> List[dict]:
-        """The control plane's records (scheduler/capacity activity)."""
-        return [r for r in self.records if r.get("kind") == "control"]
-
-    def last_by_query(self) -> dict:
-        out = {}
-        for r in self.records:
-            if "query" in r:
-                out[r["query"]] = r
-        return out
+        self.log_record(record)

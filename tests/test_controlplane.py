@@ -27,6 +27,7 @@ except ImportError:  # pragma: no cover
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import lss, regions, sim, topology, wvs
+from repro.obs import jit_cache_size
 from repro.engine import EngineConfig, ShardedLSS
 from repro.service import (ControlPlaneConfig, QuerySpec, SLOSpec, Service,
                            ServiceConfig)
@@ -484,9 +485,9 @@ def test_steady_state_zero_recompile_with_controlplane():
     a = svc.admit(_spec(centers, x, 0, priority=0))
     a2 = svc.admit(_spec(centers, x, 2, priority=1))
     svc.tick()  # warm
-    if not hasattr(svc._step, "_cache_size"):
+    warm = jit_cache_size(svc._step)
+    if warm is None:
         pytest.skip("jit cache stats unavailable on this jax")
-    warm = svc._step._cache_size()
 
     # Contention: preempt, resume, churn, SLO tracking — all data-only.
     b = svc.admit(_spec(centers, x, 1, priority=5,
@@ -499,14 +500,16 @@ def test_steady_state_zero_recompile_with_controlplane():
     svc.link_peers(p, 0)
     svc.tick()
     svc.tick()
-    assert svc._step._cache_size() == warm
+    assert jit_cache_size(svc._step) == warm
 
     # A regrow epoch is the one allowed recompile (traced shapes grew).
     svc.grow_capacity(n_cap=36)
     svc.tick()
-    assert svc._step._cache_size() == warm + 1
+    assert jit_cache_size(svc._step) == warm + 1
     svc.tick()
-    assert svc._step._cache_size() == warm + 1  # steady again
+    assert jit_cache_size(svc._step) == warm + 1  # steady again
+    # dispatch_info surfaces the same books the hand checks used to.
+    assert svc.dispatch_info()["step_cache_size"] == warm + 1
 
 
 # ---------------------------------------------------------------------------

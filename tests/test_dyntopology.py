@@ -20,6 +20,7 @@ except ImportError:  # pragma: no cover
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import lss, sim, topology
+from repro.obs import jit_cache_size
 
 DynTopology = topology.DynTopology
 
@@ -282,9 +283,9 @@ def test_membership_edit_does_not_recompile_core_cycle():
     state = lss.init_state(ta, inputs, seed=0, alive=dyn.present.copy())
     cfg = lss.LSSConfig()
     state, _ = lss.cycle(state, ta, centers, cfg)  # warm the cache
-    if not hasattr(lss.cycle, "_cache_size"):
+    warm = jit_cache_size(lss.cycle)
+    if warm is None:
         pytest.skip("jit cache stats unavailable on this jax")
-    warm = lss.cycle._cache_size()
 
     p = dyn.add_peer()
     dyn.add_edge(p, 0)
@@ -299,4 +300,4 @@ def test_membership_edit_does_not_recompile_core_cycle():
     state = lss.clear_slots(state, rows, slots)
     for _ in range(3):
         state, _ = lss.cycle(state, ta, centers, cfg)
-    assert lss.cycle._cache_size() == warm
+    assert jit_cache_size(lss.cycle) == warm

@@ -15,6 +15,7 @@ import numpy as np
 import pytest
 
 from repro.core import lss, regions, sim, topology, wvs
+from repro.obs import jit_cache_size
 from repro.engine import (EngineConfig, ShardedLSS, make_partition,
                           repair_sharded_topo, shard_topology)
 from repro.service import QuerySpec, Service, ServiceConfig
@@ -172,9 +173,9 @@ def test_engine_membership_zero_recompile_within_headroom():
                                   halo_slack=2.0))
     est = eng.init(inputs, seed=0, alive=dyn.present.copy())
     est = eng.run(est, 4)  # warm
-    if not hasattr(eng._run_jit, "_cache_size"):
+    warm = jit_cache_size(eng._run_jit)
+    if warm is None:
         pytest.skip("jit cache stats unavailable on this jax")
-    warm = eng._run_jit._cache_size()
 
     p = dyn.add_peer()
     dyn.add_edge(p, 0)
@@ -185,7 +186,7 @@ def test_engine_membership_zero_recompile_within_headroom():
     est = eng.set_alive(est, [p], True)
     est = eng.set_alive(est, [12], False)
     est = eng.run(est, 8)
-    assert eng._run_jit._cache_size() == warm
+    assert jit_cache_size(eng._run_jit) == warm
 
 
 def test_device_tables_do_not_alias_mutable_buffers():
@@ -380,8 +381,7 @@ def test_service_membership_zero_recompile_and_padding_silence():
     svc.admit(QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
                         inputs=x, seed=0))
     svc.tick()  # warm
-    has_stats = hasattr(svc._step, "_cache_size")
-    warm = svc._step._cache_size() if has_stats else None
+    warm = jit_cache_size(svc._step)
 
     p = svc.join_peer(value=[0.1, 0.2])
     svc.link_peers(p, 0)
@@ -389,8 +389,8 @@ def test_service_membership_zero_recompile_and_padding_silence():
     svc.leave_peer(3)
     svc.tick()
     assert svc.topo_version == dyn.version
-    if has_stats:
-        assert svc._step._cache_size() == warm
+    if warm is not None:
+        assert jit_cache_size(svc._step) == warm
     # Padding slots: still zero messages, zero pending.
     assert all(int(m) == 0 for m in svc.backend.msgs_of(svc.states)[1:])
     assert not bool(jnp.any(svc.states.pending[1:]))

@@ -1,0 +1,408 @@
+"""Observability layer: trackers, metrics, schema, spans, dashboards.
+
+The contract under test: instrumentation is a pure observer.  Serving
+with any tracker backend produces bitwise-identical results to serving
+with none; every emitted record satisfies :mod:`repro.obs.schema`; the
+host-boundary spans carry real timings; and control-plane policies (SLO
+eviction) consume the shared metrics registry rather than private books.
+"""
+
+import io
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import regions, sim, topology
+from repro.obs import (InMemoryTracker, JsonlTracker, MetricsRegistry,
+                       NoopTracker, PrometheusTextTracker, jit_cache_size,
+                       render_controls, render_dashboard, sparkline,
+                       validate_record, validate_stream)
+from repro.obs.validate import (_check_boundary_spans, _churn_run,
+                                validate_file)
+from repro.service import (ControlPlaneConfig, QuerySpec, Service,
+                           ServiceConfig, SLOSpec, TelemetrySink,
+                           heterogeneous_tenants)
+from repro.service.controlplane import SLOEvictionPolicy
+
+import jax.numpy as jnp
+
+
+def _specs(n, q, seed=3):
+    centers, sample, _, _ = sim.make_problem(sim.ProblemSpec(n=n, seed=seed))
+    rng = np.random.default_rng(seed + 1)
+    return [QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
+                      inputs=sample(rng, n), seed=i) for i in range(q)]
+
+
+def _small_service(tracker=None, telemetry=None, backend="core", **cfg_kw):
+    topo = topology.grid(36)
+    kw = dict(capacity=3, k_max=3, d=2, cycles_per_dispatch=2)
+    if backend == "engine":
+        kw.update(backend="engine", engine_shards=2)
+    kw.update(cfg_kw)
+    svc = Service(topo, ServiceConfig(**kw), tracker=tracker,
+                  telemetry=telemetry)
+    for s in _specs(topo.n, 3):
+        svc.admit(s)
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_units():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests")
+    c.inc(query="a")
+    c.inc(2, query="a")
+    c.inc(query="b")
+    assert c.value(query="a") == 3.0
+    assert c.value(query="b") == 1.0
+    assert c.value(query="zzz") == 0.0  # counters default to 0
+    with pytest.raises(ValueError):
+        c.inc(-1)  # counters only go up
+
+    g = reg.gauge("depth")
+    assert g.value() is None  # gauges are unset until written
+    g.set(4)
+    g.inc(1.5)
+    assert g.value() == 5.5
+    assert g.remove() and g.value() is None
+
+    h = reg.histogram("lat", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v, span="x")
+    assert h.count(span="x") == 3
+    assert h.total(span="x") == 55.5
+    assert h.mean(span="x") == pytest.approx(18.5)
+    ((labels, (counts, _)),) = list(h.series())
+    assert labels == {"span": "x"}
+    assert counts == [1, 1, 1]  # one per bucket (cumulated at exposition)
+
+
+def test_registry_idempotent_and_kind_checked():
+    reg = MetricsRegistry()
+    a = reg.counter("x", "first")
+    assert reg.counter("x") is a  # same instrument back
+    with pytest.raises(TypeError):
+        reg.gauge("x")  # same name, different kind
+    assert reg.get("x") is a and reg.get("nope") is None
+    a.inc(query="q1")
+    reg.gauge("y").set(1.0, query="q1")
+    assert reg.remove_labels(query="q1") == 2  # scrubbed from every metric
+    assert a.value(query="q1") == 0.0
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("msgs_total", "messages").inc(3, query="q1")
+    reg.gauge("depth", "queue depth").set(2)
+    reg.histogram("lat", "latency", buckets=(0.1,)).observe(0.05)
+    text = reg.prometheus_text()
+    assert "# HELP msgs_total messages" in text
+    assert "# TYPE msgs_total counter" in text
+    assert 'msgs_total{query="q1"} 3' in text
+    assert "depth 2" in text
+    assert 'lat_bucket{le="0.1"} 1' in text
+    assert 'lat_bucket{le="+Inf"} 1' in text
+    assert "lat_sum 0.05" in text and "lat_count 1" in text
+
+
+# ---------------------------------------------------------------------------
+# trackers
+# ---------------------------------------------------------------------------
+
+
+def test_spans_timed_even_under_noop():
+    for tracker in (NoopTracker(), InMemoryTracker()):
+        with tracker.span("work", k=4) as sp:
+            time.sleep(0.002)
+            sp.set("extra", 1)
+        assert sp.seconds > 0.0
+        assert sp.attrs == {"k": 4, "extra": 1}
+    # InMemory kept the span and fed the histogram; Noop kept nothing.
+    assert tracker.spans_named("work")[0] is sp
+    assert tracker.registry.get("span_seconds").count(span="work") == 1
+    noop = NoopTracker()
+    with noop.span("work"):
+        pass
+    assert noop.registry.names() == []
+
+
+def test_jsonl_ring_buffer_file_gets_everything(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    with JsonlTracker(path, max_records=2) as tr:
+        for i in range(5):
+            tr.log_record({"kind": "control", "dispatch": i, "t": i,
+                           "queue_depth": 0, "preempted_depth": 0})
+    assert [r["dispatch"] for r in tr.records] == [3, 4]  # bounded memory
+    lines = [json.loads(l) for l in open(path)]
+    assert [r["dispatch"] for r in lines] == [0, 1, 2, 3, 4]  # full file
+
+
+def test_tracker_close_is_deterministic_and_idempotent(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tr = JsonlTracker(path)
+    tr.log_record({"kind": "control", "dispatch": 0, "t": 0,
+                   "queue_depth": 0, "preempted_depth": 0})
+    tr.close()
+    tr.close()  # idempotent
+    assert len(open(path).readlines()) == 1
+    # Borrowed file-like: flushed but NOT closed by the tracker.
+    buf = io.StringIO()
+    with JsonlTracker(buf) as tr2:
+        tr2.log_record({"kind": "control", "dispatch": 1, "t": 1,
+                        "queue_depth": 0, "preempted_depth": 0})
+    assert not buf.closed and buf.getvalue().count("\n") == 1
+
+
+def test_telemetry_sink_is_a_jsonl_tracker(tmp_path):
+    """The legacy sink is a thin shim: same type, same bytes, bounded."""
+    path = str(tmp_path / "sink.jsonl")
+    sink = TelemetrySink(path=path, max_records=3)
+    assert isinstance(sink, JsonlTracker)
+    rec = {"kind": "control", "dispatch": 0, "t": 4,
+           "queue_depth": 1, "preempted_depth": 0}
+    sink.emit(rec)  # legacy spelling of log_record
+    sink.close()
+    assert open(path).read() == json.dumps(rec) + "\n"
+    for i in range(10):
+        TelemetrySink(max_records=3).emit(dict(rec, dispatch=i))
+    mem = TelemetrySink(max_records=3)
+    for i in range(10):
+        mem.emit(dict(rec, dispatch=i))
+    assert len(mem.records) == 3  # unbounded-growth bug is gone
+
+
+def test_prometheus_tracker_counts_records():
+    tr = PrometheusTextTracker()
+    tr.log_record({"kind": "control"})
+    tr.log_record({"query": "q1"})
+    text = tr.expose()
+    assert 'records_total{kind="control"} 1' in text
+    assert 'records_total{kind="query"} 1' in text
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+def test_schema_validators():
+    good_q = {"dispatch": 1, "t": 2, "query": "q0", "slot": 0,
+              "accuracy": 1.0, "quiescent": True, "region": 1,
+              "msgs": 3, "msgs_per_link": 0.1, "topo_version": 0}
+    good_c = {"kind": "control", "dispatch": 1, "t": 2, "queue_depth": 0,
+              "preempted_depth": 0, "spans": {"dispatch": 0.1},
+              "boundary": {"epochs": 1}}
+    assert validate_record(good_q) == []
+    assert validate_record(good_c) == []
+    assert validate_record({**good_q, "accuracy": "high"})  # wrong type
+    assert validate_record({**good_q, "mystery": 1})  # unknown key
+    assert validate_record({"kind": "martian"})  # unknown kind
+    missing = dict(good_c)
+    del missing["queue_depth"]
+    assert validate_record(missing)
+    probs = validate_stream([good_q, {**good_q, "quiescent": 1}])
+    assert [i for i, _ in probs] == [1]  # bool-typed field rejects int
+
+
+def test_golden_schema_core_backend():
+    """Every record a core-backend service emits satisfies the schema —
+    per-query and control, through the InMemory and Jsonl backends."""
+    buf = io.StringIO()
+    tr = JsonlTracker(buf)
+    svc = _small_service(tracker=tr,
+                         control=ControlPlaneConfig(scheduler="priority"))
+    svc.serve(3)
+    svc.push_updates(np.array([0, 1]), np.zeros((2, 2)), mode="set")
+    svc.tick()
+    svc.close()
+    recs = [json.loads(l) for l in buf.getvalue().splitlines()]
+    assert validate_stream(recs) == []
+    assert sum(r.get("kind") == "control" for r in recs) >= 1
+    assert sum("query" in r for r in recs) == 4 * 3  # 4 dispatches x 3 slots
+
+
+def test_golden_schema_engine_backend_and_halo_metric():
+    tr = InMemoryTracker()
+    svc = _small_service(tracker=tr, backend="engine")
+    svc.serve(2)
+    assert validate_stream(tr.records) == []
+    halo = tr.registry.get("engine_halo_bytes_total")
+    assert halo is not None and halo.value() > 0  # engine feeds transport cost
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# tracking must not perturb serving
+# ---------------------------------------------------------------------------
+
+
+def test_tracking_on_off_bitwise_parity(tmp_path):
+    """JsonlTracker-enabled serving is bitwise-identical to NoopTracker
+    serving: same records (floats equal), same final state arrays."""
+    def run(tracker):
+        svc = _small_service(tracker=tracker)
+        out = []
+        rng = np.random.default_rng(0)
+        for _ in range(4):
+            who = rng.choice(svc.topo.n, size=3, replace=False)
+            svc.push_updates(who, rng.normal(size=(who.size, 2)), mode="set")
+            out.extend(svc.tick())
+        states = svc.states
+        svc.close()
+        return out, states
+
+    rec_off, st_off = run(NoopTracker())
+    rec_on, st_on = run(JsonlTracker(str(tmp_path / "on.jsonl")))
+    assert rec_on == rec_off  # exact equality, accuracy floats included
+    for a, b in zip(st_on, st_off):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# spans + convergence metrics through a real service
+# ---------------------------------------------------------------------------
+
+
+def test_boundary_spans_nonzero_in_churn_run(tmp_path):
+    """The acceptance gate: membership drain, admission drain, ingest
+    staging, dispatch, and observe all appear with nonzero timings in
+    the control records of a churn run (same run the CI validator does)."""
+    path = str(tmp_path / "churn.jsonl")
+    _churn_run(path)
+    assert validate_file(path) == []
+    assert _check_boundary_spans(path) == []
+    ctrl = [json.loads(l) for l in open(path)
+            if json.loads(l).get("kind") == "control"]
+    assert any("boundary" in c and c["boundary"].get("epochs") for c in ctrl)
+
+
+def test_convergence_metrics_fed_from_dispatch():
+    tr = InMemoryTracker()
+    svc = _small_service(tracker=tr)
+    svc.serve(6)
+    reg = tr.registry
+    qid = svc.registry.active_items()[0][0]
+    assert reg.gauge("tenant_accuracy").value(query=qid) is not None
+    assert reg.counter("tenant_msgs_total").value(query=qid) >= 0
+    hist = reg.get("service_corr_iters")
+    assert hist is not None and hist.count(query=qid) == 6
+    assert reg.gauge("service_active_slots").value() == 3
+    # Quiescence time lands as a gauge once a tenant settles.
+    if any(r["quiescent"] for r in tr.records if "query" in r):
+        assert any(True for _ in reg.gauge("tenant_quiesced_at_cycles")
+                   .series())
+    svc.close()
+
+
+def test_dispatch_info_counters():
+    svc = _small_service()
+    svc.tick()
+    info = svc.dispatch_info()
+    assert info["suite"] in ("reference", "fused")
+    if jit_cache_size(svc._step) is None:
+        pytest.skip("jit cache stats unavailable on this jax")
+    assert info["recompiles"] >= 1  # the cold compile is counted
+    assert info["step_cache_size"] == jit_cache_size(svc._step)
+    svc.tick()
+    assert svc.dispatch_info()["recompiles"] == info["recompiles"]  # steady
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven eviction (control plane consuming the registry)
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_policy_reads_registry_only():
+    reg = MetricsRegistry()
+    pol = SLOEvictionPolicy(reg, attainment_below=0.5, min_windows=2)
+    assert pol.victims(["a"]) == []  # nothing published yet
+    reg.gauge("slo_attainment").set(0.1, query="a")
+    reg.gauge("slo_evaluated").set(1, query="a")
+    assert pol.victims(["a"]) == []  # too few windows to judge
+    reg.gauge("slo_evaluated").set(2, query="a")
+    ((qid, reason),) = pol.victims(["a"])
+    assert qid == "a" and "attainment" in reason
+    reg.gauge("slo_attainment").set(0.9, query="a")
+    assert pol.victims(["a"]) == []  # healthy again
+    assert SLOEvictionPolicy(reg, attainment_below=0.0).victims(["a"]) == []
+
+
+def test_service_evicts_unrecoverable_waiters():
+    """A queued tenant whose SLO deadline burns down past the attainment
+    floor is evicted — visible in admission status AND the control trail."""
+    topo = topology.grid(16)
+    cp = ControlPlaneConfig(evict_attainment_below=0.5, evict_min_windows=2)
+    tr = InMemoryTracker()
+    svc = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                      cycles_per_dispatch=2,
+                                      admission_queue=4, control=cp),
+                  tracker=tr)
+    holder, waiter = _specs(topo.n, 2)
+    import dataclasses
+    waiter = dataclasses.replace(
+        waiter, slo=SLOSpec(target_accuracy=0.99, within_cycles=2))
+    svc.admit(holder)
+    qid = svc.admit(waiter)  # no slot left: waits, burning its deadline
+    for _ in range(5):
+        svc.tick()
+    assert svc.admission_status(qid) == "evicted"
+    assert "attainment" in svc.admission.terminal_reason(qid)
+    evicted = [e for c in tr.controls() for e in c.get("evicted", [])]
+    assert [e["query"] for e in evicted] == [qid]
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# service tracker plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_service_tracker_exclusive_and_owned_close(tmp_path):
+    with pytest.raises(ValueError):
+        _small_service(tracker=NoopTracker(),
+                       telemetry=TelemetrySink())
+    # Owned default sink: service closes it; bounded retention.
+    svc = _small_service()
+    assert isinstance(svc.telemetry, TelemetrySink)
+    assert svc.telemetry is svc.tracker
+    svc.tick()
+    with svc:
+        pass
+    assert svc.tracker._closed
+    # Borrowed tracker: service flushes but does not close it.
+    tr = JsonlTracker(str(tmp_path / "b.jsonl"))
+    svc2 = _small_service(tracker=tr)
+    svc2.tick()
+    svc2.close()
+    assert not tr._closed
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# dashboard
+# ---------------------------------------------------------------------------
+
+
+def test_sparkline_and_dashboard_render():
+    assert sparkline([]) == ""
+    line = sparkline([0.0, 0.5, 1.0], width=3)
+    assert len(line) == 3 and line[0] == "▁" and line[-1] == "█"
+    tr = InMemoryTracker()
+    svc = _small_service(tracker=tr)
+    svc.serve(4)
+    qids = sorted({r["query"] for r in tr.records if "query" in r})
+    dash = render_dashboard(tr.records)
+    for qid in qids:
+        assert qid in dash
+    assert "acc" in dash
+    ctrl = render_controls(tr.records)
+    assert isinstance(ctrl, str)
+    svc.close()

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import lss, regions, sim, stopping, topology, wvs
 from repro.engine.sweep import sweep_configs, sweep_static
+from repro.obs import jit_cache_size
 from repro.service import (QuerySpec, Service, ServiceConfig, StreamIngest,
                            TelemetrySink)
 
@@ -219,9 +220,7 @@ def test_admission_lifecycle_and_no_recompile():
     with pytest.raises(RuntimeError):
         svc.admit(spec)  # full, and queueing disabled
     svc.tick()
-    compiles_after_warm = None
-    if hasattr(svc._step, "_cache_size"):
-        compiles_after_warm = svc._step._cache_size()
+    compiles_after_warm = jit_cache_size(svc._step)
 
     svc.retire(a)
     assert svc.registry.num_active == 1
@@ -237,7 +236,7 @@ def test_admission_lifecycle_and_no_recompile():
     svc.tick()
     if compiles_after_warm is not None:
         # Admission churn must not have recompiled the batched step.
-        assert svc._step._cache_size() == compiles_after_warm
+        assert jit_cache_size(svc._step) == compiles_after_warm
     # Unknown ids are rejected.
     with pytest.raises(KeyError):
         svc.retire("nope")

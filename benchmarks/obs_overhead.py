@@ -14,6 +14,12 @@ the tracker backend —
 * ``prom``   — :class:`repro.obs.PrometheusTextTracker` plus one
   ``expose()`` scrape per dispatch (a live /metrics endpoint's steady
   load).
+* ``traced`` — :class:`repro.obs.InMemoryTracker` with the full PR-7
+  instrumentation switched on: causal spans (always emitted),
+  ``profile_dispatch`` host/device attribution (adds a
+  ``block_until_ready`` fence per dispatch), and an always-firing alert
+  rule evaluated at every observe boundary.  The worst-case tracing
+  window.
 
 Timed windows are interleaved round-robin across the three services so
 slow host drift (thermal, noisy neighbors) lands on all backends alike.
@@ -33,7 +39,8 @@ import time
 import numpy as np
 
 from repro.core import topology
-from repro.obs import JsonlTracker, NoopTracker, PrometheusTextTracker
+from repro.obs import (AlertRule, InMemoryTracker, JsonlTracker, NoopTracker,
+                       PrometheusTextTracker)
 from repro.service import Service, ServiceConfig, heterogeneous_tenants
 
 from . import common
@@ -42,9 +49,9 @@ from .common import Row
 OVERHEAD_BUDGET = 0.05  # tracker overhead must stay <5% of dispatch wall
 
 
-def _build(topo, specs, k, tracker):
+def _build(topo, specs, k, tracker, **cfg_kw):
     svc = Service(topo, ServiceConfig(
-        capacity=len(specs), k_max=3, d=2, cycles_per_dispatch=k),
+        capacity=len(specs), k_max=3, d=2, cycles_per_dispatch=k, **cfg_kw),
         tracker=tracker)
     for s in specs:
         svc.admit(s)
@@ -65,14 +72,19 @@ def run(full: bool = False):
     tmp = tempfile.NamedTemporaryFile(suffix=".jsonl", delete=False)
     tmp.close()
     prom = PrometheusTextTracker()
+    traced_cfg = dict(
+        profile_dispatch=True,
+        alerts=(AlertRule(name="always", metric="service_queue_depth",
+                          above=-1.0),))
     backends = [
-        ("noop", NoopTracker(), None),
-        ("jsonl", JsonlTracker(tmp.name), None),
-        ("prom", prom, prom.expose),
+        ("noop", NoopTracker(), None, {}),
+        ("jsonl", JsonlTracker(tmp.name), None, {}),
+        ("prom", prom, prom.expose, {}),
+        ("traced", InMemoryTracker(max_records=4096), None, traced_cfg),
     ]
     try:
-        services = [(name, _build(topo, specs, k, tr), scrape)
-                    for name, tr, scrape in backends]
+        services = [(name, _build(topo, specs, k, tr, **cfg), scrape)
+                    for name, tr, scrape, cfg in backends]
         walls = {name: [] for name, _, _ in services}
         for _ in range(rounds):  # interleaved: drift hits all alike
             for name, svc, scrape in services:

@@ -103,6 +103,11 @@ class EngineConfig(NamedTuple):
     # (Voronoi + halfspace) and composes with the service query axis.
     use_kernels: Union[bool, str, None] = None
     halo_slack: float = 1.0  # >1 pads halo width for membership headroom
+    # Wrap every jit dispatch in repro.obs.ProfiledDispatch: host wall vs
+    # device compute split via a block_until_ready fence, published as
+    # gauges (backend="engine" / "engine-mesh").  The fence adds a sync
+    # per dispatch, so this is an opt-in profiling mode, not a default.
+    profile: bool = False
 
 
 class ShardedState(NamedTuple):
@@ -206,6 +211,9 @@ class ShardedLSS:
         self._donate = (0,) if jax.default_backend() != "cpu" else ()
         self._run_jit = jax.jit(self._run_block, static_argnames=("k",),
                                 donate_argnums=self._donate)
+        # Lazily-built ProfiledDispatch over _run_jit (ecfg.profile);
+        # invalidated whenever _run_jit itself is swapped (use_mesh).
+        self._profiled = None
         self._metrics_jit = jax.jit(self._metrics_impl,
                                     static_argnames=("eps",))
         self._clear_jit = jax.jit(self._clear_slots_impl)
@@ -226,6 +234,7 @@ class ShardedLSS:
         self._run_jit = jax.jit(self._run_block_collective,
                                 static_argnames=("k",),
                                 donate_argnums=self._donate)
+        self._profiled = None  # rebuilt over the collective jit on demand
         return self
 
     # -- state -------------------------------------------------------------
@@ -561,20 +570,46 @@ class ShardedLSS:
         """Advance ``cycles`` cycles, ``cycles_per_dispatch`` per jit call.
 
         Each jit call is an ``engine.dispatch`` span in the tracker: wall
-        time, ``k``, suite/fused attributes, and the compiled-variant
-        delta (``recompiled``) accumulated into the registry's
-        ``engine_dispatch_recompiles_total`` counter.
+        time, ``k``, suite/fused attributes, the halo ``transport``
+        ("all_to_all" under a mesh, "gather" fallback), the per-dispatch
+        cross-shard traffic (``halo_bytes`` / ``cut_edges`` attrs, plus
+        per-shard ``engine_shard_halo_bytes_total`` counters and
+        ``engine_shard_cut_edges`` gauges for non-noop trackers), and the
+        compiled-variant delta (``recompiled``) accumulated into the
+        registry's ``engine_dispatch_recompiles_total`` counter.  With
+        ``EngineConfig.profile`` the jit call runs through a
+        :class:`~repro.obs.ProfiledDispatch` fence, splitting host wall
+        from device compute per dispatch.
         """
-        from repro.obs import jit_cache_size
+        from repro.obs import NoopTracker, ProfiledDispatch, jit_cache_size
 
         k = max(1, self.ecfg.cycles_per_dispatch)
+        transport = "all_to_all" if self._mesh is not None else "gather"
+        # Host-side traffic model of the halo exchange, per shard: every
+        # real send-table entry moves one message slot (d-vector + weight
+        # counter + pending flag) per cycle.  Recomputed per run() — the
+        # tables are tiny and apply_membership may have rewritten them.
+        st = self.stopo
+        sends = st.halo.send_ok.reshape(self.S, -1).sum(axis=1)
+        cuts = (st.mask & ~st.intra).reshape(self.S, -1).sum(axis=1)
+        msg_bytes = 4 * int(state.x_m.shape[-1]) + 4 + 1
+        publish = not isinstance(self.tracker, NoopTracker)
+        fn = self._run_jit
+        if self.ecfg.profile:
+            if self._profiled is None or self._profiled.fn is not fn:
+                backend = ("engine-mesh" if self._mesh is not None
+                           else "engine")
+                self._profiled = ProfiledDispatch(fn, self.tracker,
+                                                  backend=backend)
+            fn = self._profiled
         done = 0
         while done < cycles:
             step = min(k, cycles - done)
             before = jit_cache_size(self._run_jit)
             with self.tracker.span("engine.dispatch", k=step,
-                                   suite=self.suite.name) as sp:
-                state = self._run_jit(state, self._tables, k=step)
+                                   suite=self.suite.name,
+                                   transport=transport) as sp:
+                state = fn(state, self._tables, k=step)
                 after = jit_cache_size(self._run_jit)
                 if (before is not None and after is not None
                         and after > before):
@@ -584,6 +619,20 @@ class ShardedLSS:
                         "jit cache growth across engine run dispatches").inc(
                             after - before)
                 sp.set("fused", self.dispatch_info["fused"])
+                sp.set("halo_bytes", int(sends.sum()) * msg_bytes * step)
+                sp.set("cut_edges", int(cuts.sum()) // 2)
+                if publish:
+                    halo_c = self.tracker.counter(
+                        "engine_shard_halo_bytes_total",
+                        "cross-shard halo traffic per shard, modeled "
+                        "from the send tables")
+                    cut_g = self.tracker.gauge(
+                        "engine_shard_cut_edges",
+                        "directed cross-shard edge slots per shard")
+                    for s in range(self.S):
+                        halo_c.inc(int(sends[s]) * msg_bytes * step,
+                                   shard=str(s), transport=transport)
+                        cut_g.set(int(cuts[s]), shard=str(s))
             done += step
         return state
 

@@ -12,31 +12,61 @@ package is the one interface those observables flow through:
   (``log_record`` / ``log_metrics`` / ``span`` / registry) with
   :class:`NoopTracker`, :class:`InMemoryTracker`, :class:`JsonlTracker`
   (bitwise-compatible with the legacy sink's JSONL) and
-  :class:`PrometheusTextTracker` backends.
+  :class:`PrometheusTextTracker` backends.  Spans carry
+  ``span_id``/``parent_id``/tenant ``trace`` ids and emit
+  ``kind="span"`` records, so the stream is causally reconstructible.
+* :mod:`.push` — :class:`PushTracker`, wandb-style step-stamped payload
+  buffering flushed to a user callback.
+* :mod:`.flight` — :class:`FlightRecorder`, a tee backend keeping a
+  bounded ring of the last N records for post-mortem JSONL dumps.
+* :mod:`.trace` — :func:`assemble` span records into per-tenant causal
+  trees (:class:`TraceForest` / :class:`TenantTrace`).
+* :mod:`.profile` — :class:`ProfiledDispatch` host/device wall
+  attribution via ``block_until_ready`` fencing (optional
+  ``jax.profiler.trace`` sessions).
+* :mod:`.alerts` — :class:`AlertRule` / :class:`AlertEngine`, sustained
+  metric predicates emitting ``kind="alert"`` records.
 * :mod:`.schema` — the golden record schema + validators.
 * :mod:`.dashboard` — per-tenant / fleet text dashboards over a record
-  stream.
+  stream, histogram bars, and the causal :func:`trace_view`.
 
 Everything is stdlib-only host-side code: trackers never touch device
-arrays, so instrumenting the service adds no transfers — the numbers
-all come from the one batched observe round-trip it already makes.
+arrays (the :class:`ProfiledDispatch` fence only *moves* a sync the
+caller already pays), so instrumenting the service adds no transfers —
+the numbers all come from the one batched observe round-trip it already
+makes.
 """
 
 from .metrics import (Counter, DEFAULT_COUNT_BUCKETS, DEFAULT_TIME_BUCKETS,
                       Gauge, Histogram, MetricsRegistry)
-from .schema import (CONTROL_OPTIONAL, CONTROL_REQUIRED, PER_QUERY_OPTIONAL,
-                     PER_QUERY_REQUIRED, validate_record, validate_stream)
+from .schema import (ALERT_OPTIONAL, ALERT_REQUIRED, CONTROL_OPTIONAL,
+                     CONTROL_REQUIRED, FLIGHT_OPTIONAL, FLIGHT_REQUIRED,
+                     PER_QUERY_OPTIONAL, PER_QUERY_REQUIRED, SPAN_OPTIONAL,
+                     SPAN_REQUIRED, validate_record, validate_stream)
 from .tracker import (InMemoryTracker, JsonlTracker, NoopTracker,
                       PrometheusTextTracker, Span, Tracker, jit_cache_size)
+from .alerts import AlertEngine, AlertRule
+from .flight import FlightRecorder
+from .profile import ProfiledDispatch, profiler_session
+from .push import PushTracker
+from .trace import SpanNode, TenantTrace, TraceForest, assemble
 from .dashboard import (render_controls, render_dashboard,
-                        render_fleet_header, sparkline)
+                        render_fleet_header, render_histogram, sparkline,
+                        trace_view)
 
 __all__ = [
+    "ALERT_OPTIONAL",
+    "ALERT_REQUIRED",
+    "AlertEngine",
+    "AlertRule",
     "CONTROL_OPTIONAL",
     "CONTROL_REQUIRED",
     "Counter",
     "DEFAULT_COUNT_BUCKETS",
     "DEFAULT_TIME_BUCKETS",
+    "FLIGHT_OPTIONAL",
+    "FLIGHT_REQUIRED",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "InMemoryTracker",
@@ -46,13 +76,24 @@ __all__ = [
     "PER_QUERY_OPTIONAL",
     "PER_QUERY_REQUIRED",
     "PrometheusTextTracker",
+    "ProfiledDispatch",
+    "PushTracker",
+    "SPAN_OPTIONAL",
+    "SPAN_REQUIRED",
     "Span",
+    "SpanNode",
+    "TenantTrace",
+    "TraceForest",
     "Tracker",
+    "assemble",
     "jit_cache_size",
+    "profiler_session",
     "render_controls",
     "render_dashboard",
     "render_fleet_header",
+    "render_histogram",
     "sparkline",
+    "trace_view",
     "validate_record",
     "validate_stream",
 ]

@@ -3,33 +3,50 @@
 Turns the per-query records a :class:`~repro.obs.tracker.Tracker`
 retained (or any parsed JSONL list) into a fleet-level text view: one
 row per tenant with an accuracy-trajectory sparkline, quiescence state,
-message cost, and SLO standing, plus a control-activity tail.  The
-renderer is pure (records in, string out) so it works equally on a live
-``InMemoryTracker``, a ``JsonlTracker``, or a replayed file.
+message cost, and SLO standing, plus a control-activity tail, a
+registry-histogram bar view (:func:`render_histogram`), and the causal
+per-tenant timeline (:func:`trace_view`, over
+:func:`repro.obs.trace.assemble`).  Renderers are pure (records in,
+string out) so they work equally on a live ``InMemoryTracker``, a
+``JsonlTracker``, a flight-recorder dump, or a replayed file — and they
+degrade to placeholders on empty or single-sample series instead of
+raising.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Union
 
 __all__ = ["sparkline", "render_dashboard", "render_fleet_header",
-           "render_controls"]
+           "render_controls", "render_histogram", "trace_view"]
 
 _BLOCKS = "▁▂▃▄▅▆▇█"
 
 
 def sparkline(values: Iterable[float], width: int = 24,
-              lo: float = 0.0, hi: float = 1.0) -> str:
-    """Unicode block sparkline of a trajectory, resampled to ``width``."""
+              lo: Optional[float] = 0.0, hi: Optional[float] = 1.0) -> str:
+    """Unicode block sparkline of a trajectory, resampled to ``width``.
+
+    ``lo`` / ``hi`` fix the range (defaults suit 0..1 accuracies); pass
+    ``None`` for either to auto-range on the data.  Degenerate series
+    degrade instead of raising: empty input renders a placeholder and a
+    flat (min == max) auto-ranged series renders mid-blocks.
+    """
     vals = [float(v) for v in values]
     if not vals:
-        return ""
+        return "·" * min(width, 3)
     if len(vals) > width:
         # Tail-biased resample: the most recent point always survives.
         step = len(vals) / width
         vals = [vals[min(int(i * step), len(vals) - 1)]
                 for i in range(width - 1)] + [vals[-1]]
-    span = hi - lo if hi > lo else 1.0
+    lo = min(vals) if lo is None else lo
+    hi = max(vals) if hi is None else hi
+    if not hi > lo:
+        # Flat series: no slope to draw — a run of mid-blocks keeps the
+        # row aligned without implying a trajectory.
+        return _BLOCKS[len(_BLOCKS) // 2] * len(vals)
+    span = hi - lo
     out = []
     for v in vals:
         frac = min(max((v - lo) / span, 0.0), 1.0)
@@ -128,4 +145,78 @@ def render_controls(records: List[dict], tail: int = 5) -> str:
             bits.append(f"spans {len(r['spans'])} "
                         f"(max {busiest[0]} {busiest[1] * 1e3:.2f}ms)")
         lines.append("control: " + ", ".join(bits))
+    return "\n".join(lines)
+
+
+def render_histogram(hist, width: int = 32, **labels) -> str:
+    """ASCII bar view of one registry histogram label series.
+
+    Safe on degenerate input: a missing / empty series renders a
+    placeholder line, an all-in-one-bucket series renders one full bar.
+    """
+    if hist is None:
+        return "histogram: (none)"
+    counts = None
+    for lbls, (cts, _total) in hist.series():
+        if lbls == {k: str(v) for k, v in labels.items()}:
+            counts = cts
+            break
+    if counts is None or not sum(counts):
+        return f"{hist.name}: no samples"
+    peak = max(counts)
+    edges = [f"<= {ub:g}" for ub in hist.buckets] + ["+Inf"]
+    ew = max(len(e) for e in edges)
+    lines = [f"{hist.name} ({sum(counts)} samples)"]
+    for edge, c in zip(edges, counts):
+        if not c:
+            continue
+        bar = "█" * max(1, round(width * c / peak))
+        lines.append(f"  {edge:>{ew}}  {bar} {c}")
+    return "\n".join(lines)
+
+
+def _fmt_attrs(attrs: dict, limit: int = 4) -> str:
+    shown = sorted(attrs.items())[:limit]
+    body = ", ".join(f"{k}={v}" for k, v in shown)
+    if len(attrs) > limit:
+        body += ", …"
+    return body
+
+
+def trace_view(records_or_forest: Union[Iterable[dict], "object"],
+               trace_id: Optional[str] = None, attrs_limit: int = 4) -> str:
+    """Render per-tenant causal timelines from span records.
+
+    Accepts a record iterable (tracker ``.records``, parsed JSONL, a
+    flight dump) or an already-assembled
+    :class:`~repro.obs.trace.TraceForest`.  ``trace_id`` narrows to one
+    tenant; default renders every tenant in first-seen order.
+    """
+    from . import trace as _trace
+
+    forest = (records_or_forest
+              if isinstance(records_or_forest, _trace.TraceForest)
+              else _trace.assemble(records_or_forest))
+    tids = [trace_id] if trace_id is not None else forest.trace_ids()
+    if not tids:
+        return "trace: no tenant spans"
+    lines: List[str] = []
+    for tid in tids:
+        tt = forest.tenant(tid)
+        if not tt.nodes:
+            lines.append(f"trace {tid}: no spans")
+            continue
+        total_ms = sum(r.seconds for r in tt.roots) * 1e3
+        lines.append(f"trace {tid} — {len(tt.nodes)} spans, "
+                     f"{total_ms:.2f}ms")
+        for root in tt.roots:
+            for depth, node in root.walk():
+                pad = "  " * depth
+                line = f"{pad}└─ {node.name} {node.seconds * 1e3:.2f}ms"
+                if node.attrs:
+                    line += f"  [{_fmt_attrs(node.attrs, attrs_limit)}]"
+                lines.append(line)
+    if forest.orphans:
+        lines.append(f"⚠ {len(forest.orphans)} orphan spans "
+                     f"(parent never recorded)")
     return "\n".join(lines)

@@ -1,0 +1,111 @@
+"""Device-time attribution for jit dispatches.
+
+A jitted dispatch returns as soon as the host has *enqueued* the
+computation; the arrays are futures.  :class:`ProfiledDispatch` wraps a
+dispatch callable and splits one wall-clock interval at the enqueue
+boundary::
+
+    t0 ──(python + trace/lowering + enqueue)── t1 ──(device compute)── t2
+          host_ms = t1 - t0                     device_ms = t2 - t1
+
+``t2`` is observed by fencing with ``jax.block_until_ready`` on the
+returned pytree, so the split costs nothing the caller wasn't already
+paying at its next host sync — it only *moves* the sync into the
+wrapper.  ``host_overhead_frac = host / (host + device)`` is the
+fraction of dispatch wall the device sat idle for: the number the
+ROADMAP's async-runtime work needs to drive toward zero.
+
+Per call the wrapper publishes ``dispatch_host_ms`` /
+``dispatch_device_ms`` / ``host_overhead_frac`` gauges (labeled by
+backend) through ``tracker.log_metrics`` — the Noop-safe path, so
+profiling under :class:`~repro.obs.NoopTracker` keeps the registry
+empty and the tracking-on/off bitwise-parity contract intact (the
+wrapper never touches the computation itself).
+
+Optionally (``profiler_dir=``) each profiled window also runs under a
+``jax.profiler.trace`` session for TensorBoard-grade device timelines;
+the flag degrades to a no-op where the profiler is unavailable.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager, nullcontext
+from time import perf_counter
+from typing import Any, Callable, Optional
+
+import jax
+
+from .tracker import NoopTracker, Tracker
+
+__all__ = ["ProfiledDispatch", "profiler_session"]
+
+
+@contextmanager
+def profiler_session(profiler_dir: Optional[str]):
+    """``jax.profiler.trace`` scope when a directory is given and the
+    profiler works here; a silent no-op otherwise."""
+    if not profiler_dir:
+        with nullcontext():
+            yield
+        return
+    try:
+        ctx = jax.profiler.trace(profiler_dir)
+    except Exception:
+        ctx = nullcontext()
+    with ctx:
+        yield
+
+
+class ProfiledDispatch:
+    """Wrap a dispatch callable with host/device wall attribution.
+
+    Args:
+      fn: the dispatch callable (typically a ``jax.jit`` wrapper or a
+        backend ``cycle``); its return value (any pytree of arrays) is
+        fenced with ``block_until_ready``.
+      tracker: the :class:`~repro.obs.Tracker` whose registry receives
+        the gauges.  Defaults to Noop (attribution still computed and
+        readable off :attr:`last`, nothing published).
+      backend: gauge label value (``"core"`` / ``"engine"`` / ...).
+      profiler_dir: when set, every call runs inside a
+        ``jax.profiler.trace(profiler_dir)`` session.
+    """
+
+    __slots__ = ("fn", "tracker", "backend", "profiler_dir", "calls",
+                 "last")
+
+    def __init__(self, fn: Callable[..., Any], tracker: Optional[Tracker]
+                 = None, backend: str = "core",
+                 profiler_dir: Optional[str] = None):
+        self.fn = fn
+        self.tracker = tracker if tracker is not None else NoopTracker()
+        self.backend = backend
+        self.profiler_dir = profiler_dir
+        self.calls = 0
+        # Most recent attribution, host-readable regardless of backend:
+        # {"host_ms", "device_ms", "total_ms", "host_overhead_frac"}.
+        self.last: dict = {}
+
+    def __call__(self, *args, **kwargs):
+        with profiler_session(self.profiler_dir):
+            t0 = perf_counter()
+            out = self.fn(*args, **kwargs)
+            t1 = perf_counter()
+            out = jax.block_until_ready(out)
+            t2 = perf_counter()
+        host_ms = (t1 - t0) * 1e3
+        device_ms = max((t2 - t1) * 1e3, 0.0)
+        total_ms = max((t2 - t0) * 1e3, 1e-12)
+        self.calls += 1
+        self.last = {
+            "host_ms": host_ms,
+            "device_ms": device_ms,
+            "total_ms": total_ms,
+            "host_overhead_frac": host_ms / total_ms,
+        }
+        self.tracker.log_metrics(
+            {"dispatch_host_ms": host_ms,
+             "dispatch_device_ms": device_ms,
+             "host_overhead_frac": host_ms / total_ms},
+            backend=self.backend)
+        return out

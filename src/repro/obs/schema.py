@@ -1,6 +1,6 @@
 """Golden schema for the service's telemetry records.
 
-Two record kinds flow through a tracker's ``log_record`` stream:
+Five record kinds flow through a tracker's ``log_record`` stream:
 
 **Per-query** (one per dispatch per active slot; no ``kind`` key)::
 
@@ -14,6 +14,7 @@ Two record kinds flow through a tracker's ``log_record`` stream:
     msgs           int    sends by this query in this dispatch window
     msgs_per_link  float  ditto, normalized per link (current edge count)
     topo_version   int    topology version the dispatch executed under
+    trace_id       str    the tenant's causal trace id (minted at admit)
 
     (SLO tenants only)
     slo_ok         bool   every declared check passed this window
@@ -40,6 +41,47 @@ when the boundary did something)::
     boundary   {name: int}       boundary work counts (events drained,
                                  batches applied, activations, recompiles)
 
+**Span** (``kind: "span"``; one per finished tracker span, emitted by
+every backend except Noop)::
+
+    kind      "span"
+    name      str    span site (tick, dispatch, admission, ...)
+    span_id   int    process-unique id, minted at span entry
+    seconds   float  wall time of the scope
+
+    (when present)
+    parent_id int    span_id of the enclosing scope (absent = root)
+    trace     [str]  tenant trace_ids this scope did work for
+    attrs     dict   caller context (backend, k, recompile delta, ...)
+
+**Alert** (``kind: "alert"``; one per alert-rule state *transition*,
+see :mod:`repro.obs.alerts`)::
+
+    kind     "alert"
+    rule     str    rule name
+    metric   str    registry metric the rule watches
+    value    float  the series value at the transition
+    state    str    "firing" | "resolved"
+    dispatch int    dispatch ordinal of the evaluation
+    t        int    global cycle count
+
+    (when present)
+    labels   dict   the matching series' label set
+    sustain  int    consecutive windows required to fire
+
+**Flight** (``kind: "flight"``; the header line of a flight-recorder
+dump, see :mod:`repro.obs.flight`)::
+
+    kind     "flight"
+    reason   str    trigger (slo_violation, eviction, epoch, alert,
+                    crash, manual)
+    records  int    ring records that follow
+
+    (when present)
+    dispatch int    dispatch ordinal at dump time
+    t        int    global cycle count at dump time
+    error    str    exception repr (crash dumps)
+
 :func:`validate_record` checks one dict against this schema and returns
 a list of problem strings (empty = valid); :func:`validate_stream` maps
 it over an iterable of records (e.g. parsed JSONL lines).
@@ -50,7 +92,9 @@ from __future__ import annotations
 from typing import Iterable, List, Tuple
 
 __all__ = ["PER_QUERY_REQUIRED", "PER_QUERY_OPTIONAL", "CONTROL_REQUIRED",
-           "CONTROL_OPTIONAL", "validate_record", "validate_stream"]
+           "CONTROL_OPTIONAL", "SPAN_REQUIRED", "SPAN_OPTIONAL",
+           "ALERT_REQUIRED", "ALERT_OPTIONAL", "FLIGHT_REQUIRED",
+           "FLIGHT_OPTIONAL", "validate_record", "validate_stream"]
 
 _BOOL = (bool,)
 _INT = (int,)          # bool is excluded explicitly below
@@ -70,6 +114,7 @@ PER_QUERY_REQUIRED = {
     "msgs": _INT,
     "msgs_per_link": _NUM,
     "topo_version": _INT,
+    "trace_id": _STR,
 }
 
 PER_QUERY_OPTIONAL = {
@@ -97,6 +142,53 @@ CONTROL_OPTIONAL = {
     "boundary": _DICT,
 }
 
+SPAN_REQUIRED = {
+    "kind": _STR,
+    "name": _STR,
+    "span_id": _INT,
+    "seconds": _NUM,
+}
+
+SPAN_OPTIONAL = {
+    "parent_id": _INT,
+    "trace": _LIST,
+    "attrs": _DICT,
+}
+
+ALERT_REQUIRED = {
+    "kind": _STR,
+    "rule": _STR,
+    "metric": _STR,
+    "value": _NUM,
+    "state": _STR,
+    "dispatch": _INT,
+    "t": _INT,
+}
+
+ALERT_OPTIONAL = {
+    "labels": _DICT,
+    "sustain": _INT,
+}
+
+FLIGHT_REQUIRED = {
+    "kind": _STR,
+    "reason": _STR,
+    "records": _INT,
+}
+
+FLIGHT_OPTIONAL = {
+    "dispatch": _INT,
+    "t": _INT,
+    "error": _STR,
+}
+
+_KINDS = {
+    "control": (CONTROL_REQUIRED, CONTROL_OPTIONAL),
+    "span": (SPAN_REQUIRED, SPAN_OPTIONAL),
+    "alert": (ALERT_REQUIRED, ALERT_OPTIONAL),
+    "flight": (FLIGHT_REQUIRED, FLIGHT_OPTIONAL),
+}
+
 
 def _check_type(key: str, value, types: tuple, errs: List[str]) -> None:
     # bool is an int subclass: reject it for int/float-typed keys, and
@@ -115,10 +207,10 @@ def validate_record(record: dict) -> List[str]:
     if not isinstance(record, dict):
         return [f"record is {type(record).__name__}, not dict"]
     kind = record.get("kind")
-    if kind == "control":
-        required, optional = CONTROL_REQUIRED, CONTROL_OPTIONAL
-    elif kind is None:
+    if kind is None:
         required, optional = PER_QUERY_REQUIRED, PER_QUERY_OPTIONAL
+    elif kind in _KINDS:
+        required, optional = _KINDS[kind]
     else:
         return [f"unknown record kind {kind!r}"]
     errs: List[str] = []

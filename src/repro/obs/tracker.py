@@ -31,6 +31,7 @@ All trackers are context managers with idempotent ``close()``.
 
 from __future__ import annotations
 
+import itertools
 import json
 import time
 from collections import deque
@@ -41,6 +42,10 @@ from .metrics import DEFAULT_TIME_BUCKETS, MetricsRegistry
 
 __all__ = ["Span", "Tracker", "NoopTracker", "InMemoryTracker",
            "JsonlTracker", "PrometheusTextTracker", "jit_cache_size"]
+
+# Process-wide span-id mint: ids stay unique (and start-ordered) even when
+# several trackers contribute to one record stream (service + engine).
+_SPAN_IDS = itertools.count(1)
 
 
 def jit_cache_size(fn) -> Optional[int]:
@@ -64,21 +69,58 @@ class Span:
     """One timed scope.  ``attrs`` carries caller context (backend, k,
     batch sizes); ``set()`` adds results discovered inside the scope
     (recompile delta, events drained).  ``seconds`` is valid once the
-    ``tracker.span(...)`` context exits."""
+    ``tracker.span(...)`` context exits.
 
-    __slots__ = ("name", "attrs", "seconds", "_t0")
+    Every span carries a process-unique ``span_id`` and the ``span_id``
+    of the enclosing span on the same tracker (``parent_id``, None for
+    roots), so the record stream reconstructs into a causal tree
+    (:func:`repro.obs.trace.assemble`).  ``trace`` lists the tenant
+    ``trace_id`` strings this scope did work for: one for per-tenant
+    scopes (admission, preempt, resume, evict), all active tenants for
+    shared scopes (dispatch, observe)."""
 
-    def __init__(self, name: str, attrs: Dict[str, Any]):
+    __slots__ = ("name", "attrs", "seconds", "span_id", "parent_id",
+                 "trace", "_t0")
+
+    def __init__(self, name: str, attrs: Dict[str, Any],
+                 parent_id: Optional[int] = None,
+                 trace: Iterable[str] = ()):
         self.name = name
         self.attrs = attrs
         self.seconds: float = 0.0
+        self.span_id = next(_SPAN_IDS)
+        self.parent_id = parent_id
+        self.trace = tuple(trace)
         self._t0 = time.perf_counter()
 
     def set(self, key: str, value: Any) -> None:
         self.attrs[key] = value
 
+    def set_trace(self, trace: Iterable[str]) -> None:
+        """Attach tenant trace ids discovered inside the scope."""
+        self.trace = tuple(trace)
+
     def _stop(self) -> None:
         self.seconds = time.perf_counter() - self._t0
+
+    def to_record(self) -> dict:
+        """The ``kind="span"`` record for this scope (schema-validated).
+
+        Deliberately has no ``query`` key: per-query record counting
+        stays keyed on the dispatch stream."""
+        rec: Dict[str, Any] = {
+            "kind": "span",
+            "name": self.name,
+            "span_id": self.span_id,
+            "seconds": self.seconds,
+        }
+        if self.parent_id is not None:
+            rec["parent_id"] = self.parent_id
+        if self.trace:
+            rec["trace"] = list(self.trace)
+        if self.attrs:
+            rec["attrs"] = dict(self.attrs)
+        return rec
 
 
 class Tracker:
@@ -92,6 +134,7 @@ class Tracker:
     def __init__(self, registry: Optional[MetricsRegistry] = None):
         self.registry = registry if registry is not None else MetricsRegistry()
         self._closed = False
+        self._span_stack: List[Span] = []
 
     # -- record stream -------------------------------------------------
     def log_record(self, record: dict) -> None:
@@ -105,18 +148,26 @@ class Tracker:
 
     # -- spans ---------------------------------------------------------
     @contextmanager
-    def span(self, name: str, **attrs):
-        sp = Span(name, attrs)
+    def span(self, name: str, trace: Iterable[str] = (), **attrs):
+        """Open a timed scope.  Nesting is tracked per tracker: a span
+        opened while another is active records it as ``parent_id``.
+        ``trace`` names the tenant trace ids this scope serves."""
+        parent = self._span_stack[-1].span_id if self._span_stack else None
+        sp = Span(name, attrs, parent_id=parent, trace=trace)
+        self._span_stack.append(sp)
         try:
             yield sp
         finally:
             sp._stop()
+            if self._span_stack and self._span_stack[-1] is sp:
+                self._span_stack.pop()
             self._finish_span(sp)
 
     def _finish_span(self, sp: Span) -> None:
         self.registry.histogram(
             "span_seconds", "wall time per named host-side span",
             buckets=DEFAULT_TIME_BUCKETS).observe(sp.seconds, span=sp.name)
+        self.log_record(sp.to_record())
 
     # -- instrument shortcuts -----------------------------------------
     def counter(self, name: str, help: str = ""):

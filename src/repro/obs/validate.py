@@ -6,11 +6,14 @@ Two modes:
   telemetry stream (every line must satisfy :mod:`repro.obs.schema`).
 * ``python -m repro.obs.validate`` (no args) — self-contained contract
   check for CI: serve a small churn workload (tenant admission, peer
-  joins/links, streaming updates, a membership-capacity regrow epoch)
-  through a :class:`~repro.obs.JsonlTracker`, then validate the emitted
-  stream AND assert the host-boundary spans (``membership_drain``,
-  ``admission_drain``, ``ingest_apply``, ``dispatch``, ``observe``)
-  appear with nonzero timings in a control record.
+  joins/links, streaming updates, a membership-capacity regrow epoch,
+  an alert rule firing) through a :class:`~repro.obs.JsonlTracker`,
+  then validate the emitted stream AND assert (a) the host-boundary
+  spans (``membership_drain``, ``admission_drain``, ``ingest_apply``,
+  ``dispatch``, ``observe``) appear with nonzero timings in a control
+  record, and (b) the ``kind="span"`` records assemble into a complete
+  causal trace forest — no orphan ``parent_id``, every tenant trace id
+  rooted at an ``admission`` span with a ``dispatch`` descendant.
 
 Exit status 0 on a clean stream, 1 with per-line diagnostics otherwise —
 wired into CI (and ``make obs-validate``) so a schema drift or a span
@@ -52,16 +55,21 @@ def _churn_run(path: str) -> None:
     import numpy as np
 
     from repro.core import topology
-    from repro.obs import JsonlTracker
+    from repro.obs import AlertRule, JsonlTracker
     from repro.service import Service, ServiceConfig, heterogeneous_tenants
 
     base = topology.grid(36)
     dyn = topology.DynTopology.from_topology(base, n_cap=base.n + 2,
                                              deg_cap=base.max_deg + 2)
     rng = np.random.default_rng(0)
+    # A rule that always fires (depth >= 0) so the stream carries a
+    # kind="alert" record through the schema check.
+    rules = (AlertRule(name="queue-depth", metric="service_queue_depth",
+                       above=-1.0, sustain=1),)
     with JsonlTracker(path, keep=False) as tracker:
         with Service(dyn, ServiceConfig(capacity=4, k_max=3, d=2,
-                                        cycles_per_dispatch=4),
+                                        cycles_per_dispatch=4,
+                                        profile_dispatch=True, alerts=rules),
                      tracker=tracker) as svc:
             for spec in heterogeneous_tenants(dyn.n, 4):
                 svc.admit(spec)
@@ -94,6 +102,35 @@ def _check_boundary_spans(path: str) -> List[str]:
             for name in BOUNDARY_SPANS if seen.get(name, 0.0) <= 0.0]
 
 
+def _check_trace_tree(path: str) -> List[str]:
+    """The span records must reconstruct a complete causal forest: no
+    orphan parent ids, at least one alert record, and every tenant trace
+    rooted at its ``admission`` span with a ``dispatch`` in the tree."""
+    from .trace import assemble
+
+    records = [json.loads(line) for line in open(path) if line.strip()]
+    problems: List[str] = []
+    forest = assemble(records)
+    if forest.orphans:
+        problems.append(
+            f"{len(forest.orphans)} span(s) with unknown parent_id: "
+            + ", ".join(f"{n.name}#{n.span_id}" for n in forest.orphans[:5]))
+    tids = forest.trace_ids()
+    if not tids:
+        problems.append("no tenant trace ids found in any span record")
+    for tid in tids:
+        tree = forest.tenant(tid)
+        if not tree.spans_named("admission"):
+            problems.append(f"trace {tid!r} has no admission span")
+        elif not tree.has_ancestry("dispatch", "admission"):
+            problems.append(
+                f"trace {tid!r}: no dispatch span with an admission "
+                "ancestor — causal chain broken")
+    if not any(r.get("kind") == "alert" for r in records):
+        problems.append("churn run emitted no kind=\"alert\" record")
+    return problems
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if argv and argv[0] in ("-h", "--help"):
@@ -111,6 +148,7 @@ def main(argv=None) -> int:
     messages = [f"line {i}: {msg}" for i, msg in problems]
     if self_check:
         messages.extend(_check_boundary_spans(path))
+        messages.extend(_check_trace_tree(path))
 
     if messages:
         print(f"telemetry contract FAILED for {path}:", file=sys.stderr)

@@ -40,7 +40,8 @@ class AdmissionQueue:
 
     OVERFLOW_POLICIES = ("reject", "evict-oldest")
 
-    def __init__(self, limit: int = 16, overflow: str = "reject"):
+    def __init__(self, limit: int = 16, overflow: str = "reject",
+                 clock=None):
         if limit < 0:
             raise ValueError(f"limit must be >= 0, got {limit}")
         if overflow not in self.OVERFLOW_POLICIES:
@@ -49,17 +50,21 @@ class AdmissionQueue:
                 f"got {overflow!r}")
         self.limit = limit
         self.overflow = overflow
+        # Optional timestamp source for terminal outcomes — the service
+        # passes its dispatch ordinal, so "when was this evicted?" is
+        # answerable in the same clock the trace spans use.
+        self._clock = clock if clock is not None else (lambda: 0)
         self._queue: List[Tuple[str, object]] = []
         # Terminal outcomes of ids that left the queue without a slot:
-        # query_id -> (status, reason).  Bounded: oldest evicted past
-        # _TERMINAL_CAP.
-        self._terminal: Dict[str, Tuple[str, str]] = {}
+        # query_id -> (status, reason, clock).  Bounded: oldest evicted
+        # past _TERMINAL_CAP.
+        self._terminal: Dict[str, Tuple[str, str, int]] = {}
 
     _TERMINAL_CAP = 1 << 16
 
     def _record_terminal(self, query_id: str, status: str,
                          reason: str) -> None:
-        self._terminal[query_id] = (status, reason)
+        self._terminal[query_id] = (status, reason, int(self._clock()))
         while len(self._terminal) > self._TERMINAL_CAP:
             self._terminal.pop(next(iter(self._terminal)))
 
@@ -86,6 +91,12 @@ class AdmissionQueue:
         """Why the id left the queue (None for unknown ids)."""
         entry = self._terminal.get(query_id)
         return entry[1] if entry is not None else None
+
+    def terminal_at(self, query_id: str) -> Optional[int]:
+        """Clock reading (the service's dispatch ordinal) at which the id
+        left the queue (None for unknown ids)."""
+        entry = self._terminal.get(query_id)
+        return entry[2] if entry is not None else None
 
     def push(self, query_id: str, spec) -> Optional[str]:
         """Enqueue; returns the id of an evicted spec (or None).

@@ -127,6 +127,14 @@ class SLOTracker:
                         "slo_violations_total",
                         "SLO window violations, per query").inc(
                             1, query=query_id)
+            if self.registry is not None:
+                # The instantaneous window state (1 = every declared
+                # check passed), distinct from the cumulative attainment
+                # ratio — this is the series alert rules sustain over.
+                self.registry.gauge(
+                    "slo_window_ok",
+                    "most recent SLO window outcome (1 ok, 0 violated)"
+                ).set(1.0 if ok else 0.0, query=query_id)
             self._publish(query_id)
         return {"slo_ok": ok, "slo_violations": self._violations[query_id],
                 **checks}

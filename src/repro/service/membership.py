@@ -80,6 +80,11 @@ class MembershipQueue:
         # DynTopology mutation, or capacity walls that depend on other
         # queued events, surface here instead of killing the drain).
         self.failures: List = []
+        # Per-kind breakdown of the most recent drain (joins / leaves /
+        # links / unlinks applied + failures) — the service folds it into
+        # the membership_drain span attrs, so the causal trace says WHAT
+        # a boundary did, not just how long it took.
+        self.last_drain_stats: Dict[str, int] = {}
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -242,6 +247,8 @@ class MembershipQueue:
         self._deg_delta.clear()
         self._free_heap = None  # present mask changes: rebuild lazily
         join_inits = {}
+        stats = {"joins": 0, "leaves": 0, "links": 0, "unlinks": 0,
+                 "failures": 0}
         for ev in events:
             try:
                 if ev.kind == "join":
@@ -261,6 +268,9 @@ class MembershipQueue:
             except ValueError as e:
                 self.failures.append((ev, str(e)))
                 del self.failures[:-1000]  # bounded record
+                stats["failures"] += 1
                 continue
             self.applied_events += 1
+            stats[ev.kind + "s"] += 1
+        self.last_drain_stats = {k: v for k, v in stats.items() if v}
         return join_inits

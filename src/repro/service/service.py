@@ -40,7 +40,8 @@ or rebuild engine tables (rebalance), and each recompiles at most once.
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Union
+import os
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +49,8 @@ import numpy as np
 
 from repro.core import lss, regions, topology, wvs
 from repro.kernels import suite as kernel_suite
-from repro.obs import Tracker, jit_cache_size
+from repro.obs import (AlertEngine, FlightRecorder, ProfiledDispatch,
+                       Tracker, jit_cache_size)
 from repro.obs import metrics as obs_metrics
 
 from . import query as qmod
@@ -91,6 +93,17 @@ class ServiceConfig(NamedTuple):
     tenant's packed region table becomes one grid step's VMEM table —
     and admit/retire stays zero-recompile (region tables are traced
     data, exactly like the topology tables).
+
+    Observability knobs: ``profile_dispatch`` wraps the compiled step in
+    :class:`~repro.obs.ProfiledDispatch` (host/device wall attribution
+    gauges per dispatch; ``profiler_dir`` additionally runs each
+    dispatch under ``jax.profiler.trace``); ``alerts`` is a tuple of
+    :class:`~repro.obs.AlertRule` evaluated at every observe boundary;
+    ``flight_capacity`` sizes the always-on flight-recorder ring
+    (:meth:`Service.dump_flight_recorder`); ``flight_dump_dir`` enables
+    *automatic* dumps on SLO violation / eviction / epoch / alert /
+    crash (None = manual dumps only).  None of these touch the data
+    plane: results stay bitwise identical with them on or off.
     """
 
     capacity: int = 64  # Q query slots
@@ -111,6 +124,11 @@ class ServiceConfig(NamedTuple):
     admission_overflow: str = "reject"  # "reject" | "evict-oldest"
     control: ControlPlaneConfig = ControlPlaneConfig()  # control plane
     use_kernels: Union[bool, str, None] = None  # kernel suite (see above)
+    profile_dispatch: bool = False  # host/device dispatch attribution
+    profiler_dir: Optional[str] = None  # jax.profiler.trace sessions
+    alerts: Tuple = ()  # AlertRule set, evaluated per observe boundary
+    flight_capacity: int = 1024  # flight-recorder ring size (records)
+    flight_dump_dir: Optional[str] = None  # auto-dump dir (None = manual)
 
 
 class _Preempted(NamedTuple):
@@ -455,7 +473,8 @@ class Service:
                                       self.base_cfg)
         self.ingest = StreamIngest()
         self.admission = AdmissionQueue(scfg.admission_queue,
-                                        scfg.admission_overflow)
+                                        scfg.admission_overflow,
+                                        clock=lambda: self.dispatches)
         # One tracker carries every observability surface; the service
         # owns (and closes) the default it builds for itself.
         self._owns_tracker = telemetry is None and tracker is None
@@ -467,6 +486,20 @@ class Service:
             self.tracker = TelemetrySink(max_records=self._STATUS_CAP)
         # Legacy alias: callers historically read svc.telemetry.records.
         self.telemetry = self.tracker
+        # ALL instrumentation routes through the flight-recorder tee:
+        # the user's tracker sees exactly what it always saw (records
+        # forwarded verbatim, registry shared), while the bounded ring
+        # retains the last N records + spans for post-mortem dumps even
+        # under the Noop baseline.
+        self._obs = FlightRecorder(self.tracker,
+                                   capacity=max(1, scfg.flight_capacity))
+        # Per-tenant causal trace ids, minted deterministically at admit
+        # (part of the record stream — MUST NOT depend on the tracker
+        # backend, or tracking-on/off bitwise parity breaks).
+        self._trace_seq = 0
+        self._trace_ids: Dict[str, str] = {}
+        self.alerts = (AlertEngine(scfg.alerts, self.tracker.registry)
+                       if scfg.alerts else None)
         # Control plane: SLO books, the admission/preemption scheduler,
         # and the capacity (regrow / rebalance-epoch) policy.  The SLO
         # tracker publishes its books into the shared metrics registry;
@@ -525,6 +558,13 @@ class Service:
         donate = (0,) if jax.default_backend() != "cpu" else ()
         self._step = jax.jit(self._step_impl, static_argnames=("k",),
                              donate_argnums=donate)
+        # Profiling wraps the CALL, not the jit: cache probes and
+        # recompile accounting keep reading self._step directly.
+        self._step_call = (
+            ProfiledDispatch(self._step, self._obs,
+                             backend=scfg.backend,
+                             profiler_dir=scfg.profiler_dir)
+            if scfg.profile_dispatch else self._step)
         self._observe = jax.jit(self._observe_impl)
         self.capman.note_epoch("init", self.backend.cut_frac())
 
@@ -623,22 +663,55 @@ class Service:
                                      or query_id in self._preempted):
             raise ValueError(f"query id {query_id!r} already admitted")
         qid = query_id if query_id is not None else self.registry.reserve_id()
-        if self.registry.num_free > 0:
-            self.registry.admit(spec, qid)
+        # The admission span is the root of this tenant's causal trace:
+        # every later span that does work for the tenant carries the
+        # same trace id, so obs.trace.assemble() hangs dispatches,
+        # preempts, resumes, and evictions under this scope.
+        tid = self._mint_trace(qid)
+        with self._obs.span("admission", trace=(tid,), query=qid,
+                            dispatch=self.dispatches) as sp:
+            if self.registry.num_free > 0:
+                self.registry.admit(spec, qid)
+                self.slo.submit(qid, spec.slo, self.cycles)
+                self._activate(qid, spec)
+                sp.set("status", "active")
+                return qid
+            # push may raise (overflow under "reject"): record the
+            # waiting bookkeeping only once the spec actually holds a
+            # queue place.
+            evicted = self.admission.push(qid, spec)
             self.slo.submit(qid, spec.slo, self.cycles)
-            self._activate(qid, spec)
+            self._enqueued_at[qid] = self.dispatches
+            sp.set("status", "queued")
+            if evicted is not None:
+                self._enqueued_at.pop(evicted, None)
+                self._note_eviction(evicted,
+                                    self.admission.terminal_reason(evicted))
             return qid
-        # push may raise (overflow under "reject"): record the waiting
-        # bookkeeping only once the spec actually holds a queue place.
-        evicted = self.admission.push(qid, spec)
-        self.slo.submit(qid, spec.slo, self.cycles)
-        self._enqueued_at[qid] = self.dispatches
-        if evicted is not None:
-            self._enqueued_at.pop(evicted, None)
-            self._ctrl_events.append(
-                ("evicted", (evicted, self.admission.terminal_reason(
-                    evicted))))
-        return qid
+
+    def _mint_trace(self, qid: str) -> str:
+        """Deterministic per-admission trace id (tracker independent)."""
+        self._trace_seq += 1
+        tid = f"t{self._trace_seq:05d}:{qid}"
+        self._trace_ids[qid] = tid
+        return tid
+
+    def _active_traces(self) -> tuple:
+        """Trace ids of the tenants the next shared scope works for."""
+        return tuple(self._trace_ids[qid]
+                     for qid, _slot, _spec in self.registry.active_items()
+                     if qid in self._trace_ids)
+
+    def _note_eviction(self, qid: str, reason: Optional[str]) -> None:
+        """Record one queue eviction everywhere it is observable: the
+        control record, the causal trace (a per-tenant span), and the
+        flight-recorder trigger set."""
+        tid = self._trace_ids.get(qid)
+        with self._obs.span("evict", trace=(tid,) if tid else (),
+                            query=qid, reason=str(reason),
+                            at=self.admission.terminal_at(qid)):
+            pass
+        self._ctrl_events.append(("evicted", (qid, reason)))
 
     def admission_status(self, query_id: str) -> str:
         """``"active"`` | ``"queued"`` | ``"preempted"`` | ``"retired"`` |
@@ -659,7 +732,10 @@ class Service:
     def _activate(self, qid: str, spec: qmod.QuerySpec) -> None:
         """Host-side slot setup for a freshly-admitted (not resumed)
         query whose registry slot is already claimed."""
-        self._reset_slot(self.registry.slot_of(qid), spec)
+        tid = self._trace_ids.get(qid)
+        with self._obs.span("activate", trace=(tid,) if tid else (),
+                            query=qid, slot=self.registry.slot_of(qid)):
+            self._reset_slot(self.registry.slot_of(qid), spec)
         self._total_msgs[qid] = 0
         self._activated_at[qid] = self.dispatches
         self._enqueued_at.pop(qid, None)
@@ -707,9 +783,12 @@ class Service:
         it in the waiting pool to age back in."""
         slot = self.registry.slot_of(query_id)
         spec = self.registry._specs[slot]
-        snap = self.backend.snapshot(self.states, slot)
-        self.registry.retire(query_id)
-        self._reset_slot(slot, None)
+        tid = self._trace_ids.get(query_id)
+        with self._obs.span("preempt", trace=(tid,) if tid else (),
+                            query=query_id, slot=slot):
+            snap = self.backend.snapshot(self.states, slot)
+            self.registry.retire(query_id)
+            self._reset_slot(slot, None)
         self._preempted[query_id] = _Preempted(
             spec, snap, self._applied_version, self.dispatches)
         self._ctrl_events.append(("preempted", query_id))
@@ -723,10 +802,15 @@ class Service:
         e = self._preempted.pop(query_id)
         self.registry.admit(e.spec, query_id)
         slot = self.registry.slot_of(query_id)
-        snap = self._pad_snapshot(e.state)
-        if e.topo_version != self._applied_version:
-            snap = self._reconcile_snapshot(snap)
-        self.states = self.backend.restore_slot(self.states, slot, snap)
+        tid = self._trace_ids.get(query_id)
+        with self._obs.span("resume", trace=(tid,) if tid else (),
+                            query=query_id, slot=slot,
+                            reconciled=e.topo_version
+                            != self._applied_version):
+            snap = self._pad_snapshot(e.state)
+            if e.topo_version != self._applied_version:
+                snap = self._reconcile_snapshot(snap)
+            self.states = self.backend.restore_slot(self.states, slot, snap)
         self._activated_at[query_id] = self.dispatches
         self._ctrl_events.append(("resumed", query_id))
 
@@ -903,8 +987,9 @@ class Service:
         new_dyn = dyn.grow(n_cap=n_cap, deg_cap=deg_cap)
         self.topo = self._dyn = new_dyn
         self.membership.rebind(new_dyn)
-        with self.tracker.span("epoch_regrow", n_cap=new_dyn.n_cap,
-                               deg_cap=new_dyn.deg_cap) as sp:
+        with self._obs.span("epoch_regrow", trace=self._active_traces(),
+                            n_cap=new_dyn.n_cap,
+                            deg_cap=new_dyn.deg_cap) as sp:
             self.states = self.backend.regrow(new_dyn, self.states)
         self._boundary_spans["epoch_regrow"] = sp.seconds
         self._boundary_counts["epochs"] = (
@@ -931,7 +1016,8 @@ class Service:
         if before is None:
             return None
         drift = self.capman.drift(before)
-        with self.tracker.span("epoch_rebalance", drift=drift) as sp:
+        with self._obs.span("epoch_rebalance", trace=self._active_traces(),
+                            drift=drift) as sp:
             self.states = self.backend.rebalance(self.topo, self.states)
         self._boundary_spans["epoch_rebalance"] = sp.seconds
         self._boundary_counts["epochs"] = (
@@ -1048,24 +1134,42 @@ class Service:
         admission queue, apply queued updates, run K cycles over all Q
         slots in one jit call, observe, emit per-tenant telemetry.
 
-        Every host boundary runs inside a tracker span (``membership_
-        drain`` / ``admission_drain`` / ``ingest_apply`` / ``dispatch``,
-        plus ``epoch_regrow`` / ``epoch_rebalance`` when an epoch fires);
-        the timings and work counts land in the registry and in the next
-        control record's ``spans`` / ``boundary`` maps.
+        The whole boundary runs inside one ``tick`` root span; every
+        host boundary nests under it (``membership_drain`` /
+        ``admission_drain`` / ``ingest_apply`` / ``dispatch`` /
+        ``observe``, plus ``epoch_regrow`` / ``epoch_rebalance`` when an
+        epoch fires, and the per-tenant ``activate`` / ``preempt`` /
+        ``resume`` / ``evict`` scopes) — the stream reconstructs into a
+        causal tree via :func:`repro.obs.trace.assemble`.  Timings and
+        work counts also land in the registry and in the next control
+        record's ``spans`` / ``boundary`` maps.  An exception escaping
+        the tick dumps the flight recorder (when ``flight_dump_dir`` is
+        set) before propagating.
 
         Returns this dispatch's telemetry records (active slots only).
         """
+        try:
+            with self._obs.span("tick", dispatch=self.dispatches):
+                return self._tick_inner(cycles)
+        except Exception as e:
+            self._auto_flight_dump("crash", error=repr(e))
+            raise
+
+    def _tick_inner(self, cycles: Optional[int]) -> list:
         k = cycles if cycles is not None else self.scfg.cycles_per_dispatch
-        tr = self.tracker
+        tr = self._obs
         with tr.span("membership_drain") as sp:
             n_events = self._apply_membership()
+            if n_events and self.membership is not None:
+                for key, v in self.membership.last_drain_stats.items():
+                    sp.set(key, v)
         self._boundary_spans["membership_drain"] = sp.seconds
         self._boundary_counts["membership_events"] = n_events
         self._maybe_rebalance()
         self._evict_unrecoverable()
         with tr.span("admission_drain") as sp:
             n_act = self._drain_admission()
+            sp.set("activations", n_act)
         self._boundary_spans["admission_drain"] = sp.seconds
         self._boundary_counts["activations"] = n_act
         with tr.span("ingest_apply") as sp:
@@ -1076,9 +1180,10 @@ class Service:
         topo = self.backend.topo_args()
         info = self.backend.dispatch_info()
         before = jit_cache_size(self._step)
-        with tr.span("dispatch", k=k, backend=self.scfg.backend,
+        with tr.span("dispatch", trace=self._active_traces(), k=k,
+                     backend=self.scfg.backend,
                      suite=info.get("suite"), fused=info.get("fused")) as sp:
-            self.states, self._corr_iters = self._step(
+            self.states, self._corr_iters = self._step_call(
                 self.states, params, topo, k=k)
             after = jit_cache_size(self._step)
             if before is not None and after is not None and after > before:
@@ -1104,7 +1209,7 @@ class Service:
         for qid, reason in self.evictor.victims(self.admission.queued_ids()):
             if self.admission.evict(qid, reason):
                 self._enqueued_at.pop(qid, None)
-                self._ctrl_events.append(("evicted", (qid, reason)))
+                self._note_eviction(qid, reason)
 
     def serve(self, dispatches: int) -> list:
         """Run ``dispatches`` ticks; returns the final tick's records."""
@@ -1115,7 +1220,7 @@ class Service:
 
     # -- observation -------------------------------------------------------
     def _emit_telemetry(self, params: qmod.QueryParams, topo) -> list:
-        with self.tracker.span("observe") as sp:
+        with self._obs.span("observe", trace=self._active_traces()) as sp:
             acc, quiescent, want = self._observe(self.states, params, topo)
             msgs = self.backend.msgs_of(self.states)  # per-slot counts
             self.states = self.backend.reset_msgs(self.states)
@@ -1147,6 +1252,7 @@ class Service:
                 "msgs": sent,
                 "msgs_per_link": sent / self._edges,
                 "topo_version": self._applied_version,
+                "trace_id": self._trace_ids.get(qid, ""),
             }
             slo_fields = self.slo.observe(qid, rec)
             if slo_fields is not None:
@@ -1173,7 +1279,7 @@ class Service:
                     reg.gauge("tenant_quiesced_at_cycles").remove(query=qid)
             if corr_iters is not None:
                 corr_hist.observe(int(corr_iters[slot]), query=qid)
-            self.tracker.log_record(rec)
+            self._obs.log_record(rec)
             records.append(rec)
         halo_bytes = self.backend.halo_bytes_per_cycle()
         if halo_bytes and records:
@@ -1194,8 +1300,60 @@ class Service:
             self.slo.observe_waiting(qid, self.cycles)
         for qid in self._preempted:
             self.slo.observe_waiting(qid, self.cycles)
+        # Alert rules: the registry's second policy consumer.  Evaluated
+        # after every gauge above is current; transitions become
+        # kind="alert" records and arm the flight-recorder trigger.
+        fired = []
+        if self.alerts is not None:
+            for a in self.alerts.evaluate(dispatch=self.dispatches,
+                                          t=self.cycles):
+                if a["state"] == "firing":
+                    fired.append(a)
+                self._obs.log_record(a)
+        # Flight-recorder trigger set for this window (checked before
+        # the control record swaps the event list out).
+        trigger = None
+        if any(r.get("slo_ok") is False for r in records):
+            trigger = "slo_violation"
+        elif any(kind == "evicted" for kind, _ in self._ctrl_events):
+            trigger = "eviction"
+        elif any(kind == "epoch" for kind, _ in self._ctrl_events):
+            trigger = "epoch"
+        elif fired:
+            trigger = "alert"
         self._emit_control_record()
+        if trigger is not None:
+            self._auto_flight_dump(trigger)
         return records
+
+    # -- flight recorder ---------------------------------------------------
+    def dump_flight_recorder(self, path: Optional[str] = None,
+                             reason: str = "manual") -> str:
+        """Write the flight-recorder ring (last ``flight_capacity``
+        records + spans) as JSONL and return the path.  Default path:
+        ``flight-d<dispatch>-<reason>.jsonl`` under ``flight_dump_dir``
+        (or the CWD when unset)."""
+        if path is None:
+            base = self.scfg.flight_dump_dir or "."
+            os.makedirs(base, exist_ok=True)
+            path = os.path.join(
+                base, f"flight-d{self.dispatches:06d}-{reason}.jsonl")
+        return self._obs.dump(path, reason=reason,
+                              dispatch=self.dispatches, t=self.cycles)
+
+    def _auto_flight_dump(self, reason: str, **context) -> Optional[str]:
+        """Automatic dump on SLO violation / eviction / epoch / alert /
+        crash — only when the service was configured with a dump dir
+        (manual :meth:`dump_flight_recorder` works regardless)."""
+        base = self.scfg.flight_dump_dir
+        if base is None:
+            return None
+        os.makedirs(base, exist_ok=True)
+        path = os.path.join(
+            base, f"flight-d{self.dispatches:06d}-{reason}.jsonl")
+        return self._obs.dump(path, reason=reason,
+                              dispatch=self.dispatches, t=self.cycles,
+                              **context)
 
     def _emit_control_record(self) -> None:
         """One record per dispatch with the control plane's activity —
@@ -1225,7 +1383,7 @@ class Service:
                     {"query": payload[0], "reason": payload[1]})
             else:
                 agg[kind].append(payload)
-        self.tracker.log_record({
+        self._obs.log_record({
             "kind": "control",
             "dispatch": self.dispatches,
             "t": self.cycles,

@@ -195,7 +195,8 @@ def test_prometheus_tracker_counts_records():
 def test_schema_validators():
     good_q = {"dispatch": 1, "t": 2, "query": "q0", "slot": 0,
               "accuracy": 1.0, "quiescent": True, "region": 1,
-              "msgs": 3, "msgs_per_link": 0.1, "topo_version": 0}
+              "msgs": 3, "msgs_per_link": 0.1, "topo_version": 0,
+              "trace_id": "t00001:q0"}
     good_c = {"kind": "control", "dispatch": 1, "t": 2, "queue_depth": 0,
               "preempted_depth": 0, "spans": {"dispatch": 0.1},
               "boundary": {"epochs": 1}}
@@ -392,9 +393,10 @@ def test_service_tracker_exclusive_and_owned_close(tmp_path):
 
 
 def test_sparkline_and_dashboard_render():
-    assert sparkline([]) == ""
+    assert sparkline([]) == "···"  # placeholder, never raises
     line = sparkline([0.0, 0.5, 1.0], width=3)
     assert len(line) == 3 and line[0] == "▁" and line[-1] == "█"
+    assert len(set(sparkline([0.7, 0.7], lo=None, hi=None))) == 1  # flat
     tr = InMemoryTracker()
     svc = _small_service(tracker=tr)
     svc.serve(4)

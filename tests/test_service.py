@@ -356,8 +356,12 @@ def test_telemetry_jsonl_roundtrip(tmp_path):
                              inputs=x, seed=0))
     svc.serve(3)
     sink.close()
-    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    all_lines = [json.loads(line) for line in path.read_text().splitlines()]
+    # The stream also carries kind="span" records (causal trace trees);
+    # the per-query telemetry is the subset with a "query" key.
+    lines = [r for r in all_lines if "query" in r]
     assert len(lines) == 3  # one active query x three dispatches
+    assert any(r.get("kind") == "span" for r in all_lines)
     for i, rec in enumerate(lines):
         assert rec["query"] == qa and rec["dispatch"] == i + 1
         assert rec["t"] == (i + 1) * 3

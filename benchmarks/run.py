@@ -30,11 +30,18 @@ import os
 import statistics
 import sys
 
-JSON_SUITES = ("service", "engine", "controlplane", "kernels", "obs")
+JSON_SUITES = ("service", "engine", "controlplane", "kernels", "obs",
+               "async")
 
 # Tracker overhead is budgeted absolutely (fraction of dispatch wall),
 # not relative to a baseline: observability must stay cheap everywhere.
 OBS_OVERHEAD_BUDGET = 0.05
+
+# Overlap-mode budgets (async suite), absolute like the obs budget:
+# overlap must hide at least half the host boundary, never cost wall
+# time beyond noise, and the churning steady state must not recompile.
+ASYNC_FRAC_RATIO_MIN = 2.0
+ASYNC_WALL_RATIO_MIN = 0.9
 
 
 def _summary(rows) -> dict:
@@ -47,6 +54,9 @@ def _summary(rows) -> dict:
         "median_msgs_per_link": med("msgs_per_link"),
         "median_peers_per_s": med("peers_per_s"),
         "median_overhead_frac": med("overhead_frac"),
+        "median_host_frac_ratio": med("host_frac_ratio"),
+        "median_wall_ratio": med("wall_ratio"),
+        "median_recompiles": med("recompiles"),
     }
 
 
@@ -86,6 +96,21 @@ def _check_summary(suite: str, fresh: dict, baseline: dict,
             errors.append(f"{suite}.{key}: {f!r} differs from baseline "
                           f"{b!r} by >1% (deterministic metric — semantic "
                           "change?)")
+    # Absolute overlap budgets (async suite; keys absent elsewhere).
+    fr = fs.get("median_host_frac_ratio")
+    if fr is not None and fr < ASYNC_FRAC_RATIO_MIN:
+        errors.append(f"{suite}.median_host_frac_ratio: {fr:.2f}x < the "
+                      f"absolute {ASYNC_FRAC_RATIO_MIN:.0f}x budget — "
+                      "overlap no longer hides the host boundary")
+    wr = fs.get("median_wall_ratio")
+    if wr is not None and wr < ASYNC_WALL_RATIO_MIN:
+        errors.append(f"{suite}.median_wall_ratio: {wr:.2f} < "
+                      f"{ASYNC_WALL_RATIO_MIN} — overlap mode is slower "
+                      "than the synchronous loop")
+    rc = fs.get("median_recompiles")
+    if rc is not None and rc > 0:
+        errors.append(f"{suite}.median_recompiles: {rc} — the churning "
+                      "steady state must stay zero-recompile")
     return errors
 
 
@@ -111,10 +136,10 @@ def main(argv=None) -> None:
     if args.smoke:
         common.SMOKE = True
 
-    from . import (controlplane, engine_scaleup, fig2_scaleup,
-                   fig3_connectivity, fig4_message_loss, fig5_difficulty,
-                   fig6_dynamic_data, fig7_loss_dynamic, fig8_churn,
-                   figD_ineffective, kernel_bench, kernels,
+    from . import (async_overlap, controlplane, engine_scaleup,
+                   fig2_scaleup, fig3_connectivity, fig4_message_loss,
+                   fig5_difficulty, fig6_dynamic_data, fig7_loss_dynamic,
+                   fig8_churn, figD_ineffective, kernel_bench, kernels,
                    membership_churn, obs_overhead, service_throughput)
 
     suites = {
@@ -125,7 +150,7 @@ def main(argv=None) -> None:
         "kernel": kernel_bench, "engine": engine_scaleup,
         "service": service_throughput, "membership": membership_churn,
         "controlplane": controlplane, "kernels": kernels,
-        "obs": obs_overhead,
+        "obs": obs_overhead, "async": async_overlap,
     }
     if args.check:
         suites = {k: v for k, v in suites.items() if k in JSON_SUITES}

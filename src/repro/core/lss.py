@@ -40,8 +40,15 @@ from . import correction, stopping, topology, wvs
 __all__ = [
     "LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle",
     "cycle_impl", "clear_slots", "pad_bucket", "metrics", "metrics_impl",
-    "counter_dtype", "suite_hooks",
+    "counter_dtype", "suite_hooks", "COLD_TIMER",
 ]
+
+# Send-timer value of a peer that has never sent: far enough in the past
+# that the ell-cycle resend timer fires on the first eligible cycle.
+# Every layer that (re)initializes ``last_send`` — init, joins, regrow
+# padding, snapshot reconcile — uses this one value, so "cold" is a
+# single bitwise-comparable constant across core, engine and service.
+COLD_TIMER = -(10 ** 6)
 
 
 def pad_bucket(*arrays):
@@ -146,7 +153,7 @@ def init_state(topo: TopoArrays, inputs: wvs.WV, seed: int = 0,
         x_m=inputs.m,
         x_c=inputs.c,
         pending=jnp.zeros((n, D), bool),
-        last_send=jnp.full((n,), -(10**6), jnp.int32),
+        last_send=jnp.full((n,), COLD_TIMER, jnp.int32),
         alive=alive,
         t=jnp.zeros((), jnp.int32),
         msgs=jnp.zeros((), counter_dtype()),

@@ -31,6 +31,21 @@ Transports: on a single device the halo exchange is a transpose (gather
 fallback); given a mesh axis of size ``S`` the same per-shard code runs
 under ``shard_map`` with ``lax.all_to_all`` (:meth:`use_mesh`).
 
+Async execution mode (``EngineConfig.async_mode`` / :meth:`init_async`):
+the cross-shard exchange drops the per-cycle barrier semantics.  Every
+shard keeps its own clock, publishes its boundary sends into a
+bounded-staleness ring (:func:`repro.engine.exchange.ring_publish`), and
+reads every peer shard at a receiver-chosen delay of up to
+``EngineConfig.staleness`` cycles.  Out-of-order and superseded
+deliveries are guarded by per-message sequence numbers — exactly the
+``seq_i``/``last_j`` counters Alg. 1 carries for general (non-FIFO)
+networks, promoted from the event-driven :mod:`repro.core.async_sim`
+reference.  At ``staleness=0`` the ring read degenerates to the
+synchronous transpose and the mode is **bitwise identical** to the sync
+engine (drop-RNG stream included); with ``staleness>0`` stale reads are
+bounded, dropped messages age out of the ring, and the realized delay /
+stale-drop counts surface as gauges.
+
 Dynamic membership: the topology tables (:class:`DeviceTopo`) are traced
 *arguments* of the jitted step, and the partition spans the topology's
 full capacity, so a :class:`~repro.core.topology.DynTopology` mutation
@@ -54,7 +69,8 @@ from repro.kernels import suite as kernel_suite
 
 from . import exchange, partition
 
-__all__ = ["DeviceTopo", "EngineConfig", "ShardedState", "ShardedLSS"]
+__all__ = ["DeviceTopo", "EngineConfig", "ShardedState", "AsyncShardedState",
+           "ShardedLSS"]
 
 
 class _LocalTables(NamedTuple):
@@ -108,6 +124,13 @@ class EngineConfig(NamedTuple):
     # gauges (backend="engine" / "engine-mesh").  The fence adds a sync
     # per dispatch, so this is an opt-in profiling mode, not a default.
     profile: bool = False
+    # Asynchronous gossip execution mode: per-shard clocks, cross-shard
+    # messages published into a bounded-staleness ring and read at a
+    # receiver-chosen delay in [0, staleness] cycles, per-message seq
+    # guards (Alg. 1's seq/last counters) against reordering.  At
+    # staleness=0 the mode is bitwise identical to the sync engine.
+    async_mode: bool = False
+    staleness: int = 0  # halo reads may lag the sender by <= this many cycles
 
 
 class ShardedState(NamedTuple):
@@ -125,6 +148,31 @@ class ShardedState(NamedTuple):
     t: jax.Array  # ()  current cycle, replicated
     msgs: jax.Array  # (S,) per-shard cumulative sends (exact int)
     rng: jax.Array  # (S, 2) per-shard PRNG keys
+
+
+class AsyncShardedState(NamedTuple):
+    """Async-mode engine state: the sync per-shard state plus the
+    bounded-staleness transport books.
+
+    ``clock`` is per shard.  In this single-dispatcher engine all shards
+    step together so the clocks stay equal, but every timer / ring /
+    sequence computation is written against the per-shard value — the
+    layout a multi-host dispatcher with genuinely divergent shard clocks
+    needs.  ``R = staleness + 1`` ring slots guarantee a publication
+    survives exactly the read window that may still target it.
+    """
+
+    sync: ShardedState  # the paper state, (S, B, ...) as ever
+    clock: jax.Array  # (S,) int32 per-shard local clocks
+    out_seq: jax.Array  # (S, B, D) int32 — seq of the newest posted message
+    last_seq: jax.Array  # (S, B, D) int32 — newest seq applied per in-slot
+    ring_m: jax.Array  # (R, S, S, H, d) published halo payloads
+    ring_c: jax.Array  # (R, S, S, H)
+    ring_flag: jax.Array  # (R, S, S, H) bool
+    ring_seq: jax.Array  # (R, S, S, H) int32
+    stale_drops: jax.Array  # (S,) seq-guarded (reordered/superseded) drops
+    applied: jax.Array  # (S,) cross-shard messages applied
+    delay_sum: jax.Array  # (S,) total realized delay of applied messages
 
 
 class ShardedLSS:
@@ -211,6 +259,9 @@ class ShardedLSS:
         self._donate = (0,) if jax.default_backend() != "cpu" else ()
         self._run_jit = jax.jit(self._run_block, static_argnames=("k",),
                                 donate_argnums=self._donate)
+        self._run_async_jit = jax.jit(self._run_async_block,
+                                      static_argnames=("k",),
+                                      donate_argnums=self._donate)
         # Lazily-built ProfiledDispatch over _run_jit (ecfg.profile);
         # invalidated whenever _run_jit itself is swapped (use_mesh).
         self._profiled = None
@@ -238,13 +289,24 @@ class ShardedLSS:
         return self
 
     # -- state -------------------------------------------------------------
-    def init(self, inputs: wvs.WV, seed: int = 0, alive=None) -> ShardedState:
+    def init(self, inputs: wvs.WV, seed: int = 0, alive=None):
         """Build sharded state from inputs in ORIGINAL peer order.
 
         ``alive`` (optional bool (n,), original order) seeds the churn
         mask — a capacity-padded :class:`~repro.core.topology.DynTopology`
         passes its ``present`` mask so spare rows start dead.
+
+        With ``EngineConfig.async_mode`` the return value is an
+        :class:`AsyncShardedState` (use :meth:`init_sync` for the bare
+        sync state).
         """
+        if self.ecfg.async_mode:
+            return self.init_async(inputs, seed=seed, alive=alive)
+        return self.init_sync(inputs, seed=seed, alive=alive)
+
+    def init_sync(self, inputs: wvs.WV, seed: int = 0,
+                  alive=None) -> ShardedState:
+        """:meth:`init`'s sync-state half, mode flag ignored."""
         S, B, D = self.S, self.B, self.D
         d = inputs.m.shape[-1]
         dt = inputs.m.dtype
@@ -261,7 +323,7 @@ class ShardedLSS:
             x_m=x_m.reshape(S, B, d),
             x_c=x_c.reshape(S, B),
             pending=jnp.zeros((S, B, D), bool),
-            last_send=jnp.full((S, B), -(10**6), jnp.int32),
+            last_send=jnp.full((S, B), lss.COLD_TIMER, jnp.int32),
             alive=alive.reshape(S, B),
             t=jnp.zeros((), jnp.int32),
             msgs=jnp.zeros((S,), lss.counter_dtype()),
@@ -275,6 +337,34 @@ class ShardedLSS:
                 jax.device_put(a, repl if a.ndim == 0 else shard)
                 for a in state))
         return state
+
+    def init_async(self, inputs: wvs.WV, seed: int = 0,
+                   alive=None) -> AsyncShardedState:
+        """Async-mode init: the sync state wrapped with cold transport
+        books (empty ring, zero clocks/sequence counters)."""
+        return self.wrap_async(self.init_sync(inputs, seed=seed, alive=alive))
+
+    def wrap_async(self, base: ShardedState) -> AsyncShardedState:
+        """Wrap an existing sync state for async execution.  The ring
+        starts empty: the first async cycle behaves exactly like a sync
+        cycle would from the same state."""
+        S, B, D, H = self.S, self.B, self.D, self.stopo.halo_width
+        R = max(1, int(self.ecfg.staleness) + 1)
+        d = base.x_m.shape[-1]
+        dt = base.x_m.dtype
+        cnt = lss.counter_dtype()
+        return AsyncShardedState(
+            sync=base,
+            clock=jnp.full((S,), base.t, jnp.int32),
+            out_seq=jnp.zeros((S, B, D), jnp.int32),
+            last_seq=jnp.zeros((S, B, D), jnp.int32),
+            ring_m=jnp.zeros((R, S, S, H, d), dt),
+            ring_c=jnp.zeros((R, S, S, H), dt),
+            ring_flag=jnp.zeros((R, S, S, H), bool),
+            ring_seq=jnp.zeros((R, S, S, H), jnp.int32),
+            stale_drops=jnp.zeros((S,), cnt),
+            applied=jnp.zeros((S,), cnt),
+            delay_sum=jnp.zeros((S,), cnt))
 
     # -- dynamic-data hooks (original peer ids) ------------------------------
     def set_inputs(self, state: ShardedState, who, new_x) -> ShardedState:
@@ -317,7 +407,7 @@ class ShardedLSS:
         )
 
     # -- dynamic membership ------------------------------------------------
-    def apply_membership(self, dyn) -> bool:
+    def apply_membership(self, dyn, rows=None) -> bool:
         """Catch the halo/local tables up to a mutated
         :class:`~repro.core.topology.DynTopology`.
 
@@ -326,10 +416,19 @@ class ShardedLSS:
         only the adjacency tables of the touched rows and the halo rows of
         their shard pairs are repaired (:func:`repro.engine.partition.
         repair_sharded_topo`).  Returns True when the halo width regrew —
-        a shape change, i.e. the next dispatch recompiles; within the halo
-        headroom the swap is data-only and the compiled step is reused.
+        a shape change, i.e. the next dispatch recompiles (async-mode
+        ring buffers are keyed by halo width too: re-wrap via
+        :meth:`wrap_async` after a regrow); within the halo headroom the
+        swap is data-only and the compiled step is reused.
+
+        ``rows`` overrides the changed-row set when the caller knows it
+        from a different journal than ``dyn``'s own — the staged-epoch
+        adoption path hands a background-built engine the rows that
+        churned between its snapshot and now, even though ``dyn`` itself
+        (a fresh ``grow()`` product) no longer journals back that far.
         """
-        rows = dyn.changed_rows_since(self._topo_version)
+        if rows is None:
+            rows = dyn.changed_rows_since(self._topo_version)
         self._topo_version = dyn.version
         if rows.size == 0:
             return False
@@ -492,6 +591,165 @@ class ShardedLSS:
         return jax.lax.fori_loop(
             0, k, lambda _, st: self._cycle_full(st, tables), state)
 
+    # -- one cycle, asynchronous gossip mode -------------------------------
+    def _cycle_async(self, astate: AsyncShardedState,
+                     tables: DeviceTopo) -> AsyncShardedState:
+        """One async-mode cycle: sync-identical intra-shard delivery and
+        per-peer update, but cross-shard messages go through the
+        bounded-staleness ring with per-message sequence guards.
+
+        The structure mirrors :meth:`_cycle_full` operation-for-operation
+        where the semantics coincide, because at ``staleness=0`` the two
+        must be bitwise identical — same RNG splits (the extra delay draw
+        happens only when ``staleness > 0``), same gathers, same scatter;
+        the ring write+read collapses to the transpose and the seq guard
+        passes every flagged message (sequence numbers are monotone per
+        out-slot, so a fresh delivery can never be stale).
+        """
+        cfg = self.cfg
+        state = astate.sync
+        S, B, D = self.S, self.B, self.D
+        staleness = int(self.ecfg.staleness)
+        R = max(1, staleness + 1)
+        keys = jax.vmap(jax.random.split)(state.rng)  # (S, 2, 2)
+        rng, kdrop = keys[:, 0], keys[:, 1]
+        if staleness > 0:
+            # Extra per-shard split for the delay draw — deliberately
+            # OUTSIDE the staleness=0 path so the drop stream stays
+            # bitwise on the sync engine's sequence there.
+            keys2 = jax.vmap(jax.random.split)(rng)
+            rng, kdelay = keys2[:, 0], keys2[:, 1]
+
+        nbr_alive = state.alive.reshape(S * B)[tables.tgt_pos]
+        live = tables.mask & state.alive[..., None] & nbr_alive
+        send = state.pending & live
+        if cfg.drop_rate > 0.0:
+            keep = jax.vmap(
+                lambda kk: jax.random.uniform(kk, (B, D)))(kdrop)
+            delivered = send & (keep >= cfg.drop_rate)
+        else:
+            delivered = send
+        sent = jnp.sum(send, axis=(1, 2))
+
+        # Shard-local edges: identical to the sync engine (same shard,
+        # same clock — nothing to be stale against).
+        src = tables.tgt_row * D + tables.rev
+
+        def gat(in_buf, out_buf, deliv, src_s, ok):
+            flat = out_buf.reshape(B * D, *out_buf.shape[2:])
+            got = deliv.reshape(B * D)[src_s] & ok
+            cond = got[..., None] if flat.ndim > 1 else got
+            return jnp.where(cond, flat[src_s], in_buf)
+
+        in_m = jax.vmap(gat)(state.in_m, state.out_m, delivered, src,
+                             tables.intra)
+        in_c = jax.vmap(gat)(state.in_c, state.out_c, delivered, src,
+                             tables.intra)
+
+        # Cross-shard: publish this cycle's boundary sends (+ their seq
+        # stamps) into each shard's ring slot at its own clock...
+        buf_m, buf_c, flag = exchange.gather_halo(
+            state.out_m, state.out_c, delivered, tables.halo)
+        buf_seq = jax.vmap(lambda sq, r, sl: sq[r, sl])(
+            astate.out_seq, tables.halo.send_row, tables.halo.send_slot)
+        wslot = astate.clock % R
+        ring_m, ring_c, ring_flag, ring_seq = exchange.ring_publish(
+            astate.ring_m, astate.ring_c, astate.ring_flag, astate.ring_seq,
+            wslot, buf_m, buf_c, flag, buf_seq)
+
+        # ...and read every (dst, src) pair at a bounded-stale sender
+        # clock.  delay[t, s] in [0, staleness], capped by the sender's
+        # clock so early cycles never reach before time 0 (untouched ring
+        # rows carry False flags anyway).
+        if staleness > 0:
+            delay = jax.vmap(lambda kk: jax.random.randint(
+                kk, (S,), 0, staleness + 1))(kdelay)  # (S_dst, S_src)
+            delay = jnp.minimum(delay, astate.clock[None, :])
+        else:
+            delay = jnp.zeros((S, S), jnp.int32)
+        rslot = (astate.clock[None, :] - delay) % R
+        got_m, got_c, got_flag, got_seq = exchange.ring_read(
+            ring_m, ring_c, ring_flag, ring_seq, rslot)
+
+        # Alg. 1's per-message guard: a delivery whose seq lags what its
+        # in-slot already applied is a reordered stale message — drop it
+        # (equal seq re-applies the identical payload: idempotent).
+        dst = jnp.arange(S)[:, None, None]
+        cur = astate.last_seq[dst, tables.halo.recv_row,
+                              tables.halo.recv_slot]
+        ok = got_flag & (got_seq >= cur)
+        in_m, in_c = exchange.scatter_halo(in_m, in_c, got_m, got_c, ok,
+                                           tables.halo)
+        last_seq = exchange.scatter_seq(astate.last_seq, got_seq, ok,
+                                        tables.halo.recv_row,
+                                        tables.halo.recv_slot)
+        cnt = astate.applied.dtype
+        stale = jnp.sum(got_flag & ~ok, axis=(1, 2)).astype(cnt)
+        applied = jnp.sum(ok, axis=(1, 2)).astype(cnt)
+        lag = jnp.sum(jnp.where(ok, delay[:, :, None], 0),
+                      axis=(1, 2)).astype(cnt)
+
+        # Peer-local update against the PER-SHARD clock (broadcast to
+        # rows); scalar-vs-row t is value-identical while clocks agree.
+        t_rows = jnp.repeat(astate.clock, B)
+        fl = lambda a: a.reshape(S * B, *a.shape[2:])
+        out_m, out_c, pending, last_send, _ = self._peer_update(
+            fl(state.out_m), fl(state.out_c), fl(in_m), fl(in_c),
+            fl(state.x_m), fl(state.x_c), fl(live), fl(state.last_send),
+            fl(state.alive), t_rows, cfg=cfg)
+        sh = lambda a: a.reshape(S, B, *a.shape[1:])
+        pending = sh(pending)
+        # Fresh postings advance their out-slot's sequence number.
+        out_seq = jnp.where(pending, astate.out_seq + 1, astate.out_seq)
+        state = state._replace(
+            out_m=sh(out_m), out_c=sh(out_c), in_m=in_m, in_c=in_c,
+            pending=pending, last_send=sh(last_send),
+            t=state.t + 1, msgs=state.msgs + sent.astype(state.msgs.dtype),
+            rng=rng)
+        return astate._replace(
+            sync=state, clock=astate.clock + 1, out_seq=out_seq,
+            last_seq=last_seq, ring_m=ring_m, ring_c=ring_c,
+            ring_flag=ring_flag, ring_seq=ring_seq,
+            stale_drops=astate.stale_drops + stale,
+            applied=astate.applied + applied,
+            delay_sum=astate.delay_sum + lag)
+
+    def _run_async_block(self, astate: AsyncShardedState, tables: DeviceTopo,
+                         k: int) -> AsyncShardedState:
+        return jax.lax.fori_loop(
+            0, k, lambda _, st: self._cycle_async(st, tables), astate)
+
+    def async_in_flight(self, astate: AsyncShardedState) -> jax.Array:
+        """Conservative device-side bool: could any ring publication
+        still be delivered by a future bounded-stale read?
+
+        A slot published at sender time c is readable until c+staleness;
+        of the R live slots only the oldest (about to be overwritten,
+        index ``(clock+1) % R``) has aged past every admissible delay.
+        At staleness=0 nothing lingers.  "Conservative" because a
+        flagged entry may already be superseded (its seq below the
+        receiver's last) — quiescence checks treat it as in flight
+        anyway and converge once the ring ages it out.
+        """
+        R = astate.ring_flag.shape[0]
+        if R == 1:
+            return jnp.zeros((), bool)
+        oldest = (astate.clock + 1) % R  # (S,) per src shard
+        live = (jnp.arange(R)[:, None] != oldest[None, :])  # (R, S_src)
+        return jnp.any(astate.ring_flag & live[:, :, None, None])
+
+    def async_lag_stats(self, astate: AsyncShardedState) -> dict:
+        """Host-side staleness summary (one device sync): applied
+        cross-shard messages, their mean realized delay in cycles, and
+        the cumulative seq-guarded stale-drop count."""
+        applied = int(jnp.sum(astate.applied))
+        return {
+            "applied": applied,
+            "stale_drops": int(jnp.sum(astate.stale_drops)),
+            "mean_delay": (float(jnp.sum(astate.delay_sum)) / applied
+                           if applied else 0.0),
+        }
+
     # -- one cycle, collective (per-shard block inside shard_map) ----------
     def _cycle_block(self, state: ShardedState,
                      tables: "_LocalTables") -> ShardedState:
@@ -566,8 +824,16 @@ class ShardedLSS:
                  tables.tgt_pos, tables.intra, *tables.halo)
 
     # -- driver ------------------------------------------------------------
-    def run(self, state: ShardedState, cycles: int) -> ShardedState:
+    def run(self, state, cycles: int):
         """Advance ``cycles`` cycles, ``cycles_per_dispatch`` per jit call.
+
+        Accepts a :class:`ShardedState` (synchronous cycles) or an
+        :class:`AsyncShardedState` (bounded-staleness gossip cycles) and
+        returns the same kind.  Async runs additionally publish
+        ``engine_async_*`` staleness gauges when the tracker is not the
+        Noop — reading the device counters costs one host sync per
+        ``run`` call, which the Noop path (and therefore the overlap
+        benchmarks) never pays.
 
         Each jit call is an ``engine.dispatch`` span in the tracker: wall
         time, ``k``, suite/fused attributes, the halo ``transport``
@@ -583,6 +849,8 @@ class ShardedLSS:
         """
         from repro.obs import NoopTracker, ProfiledDispatch, jit_cache_size
 
+        is_async = isinstance(state, AsyncShardedState)
+        run_jit = self._run_async_jit if is_async else self._run_jit
         k = max(1, self.ecfg.cycles_per_dispatch)
         transport = "all_to_all" if self._mesh is not None else "gather"
         # Host-side traffic model of the halo exchange, per shard: every
@@ -592,9 +860,10 @@ class ShardedLSS:
         st = self.stopo
         sends = st.halo.send_ok.reshape(self.S, -1).sum(axis=1)
         cuts = (st.mask & ~st.intra).reshape(self.S, -1).sum(axis=1)
-        msg_bytes = 4 * int(state.x_m.shape[-1]) + 4 + 1
+        d_dim = (state.sync if is_async else state).x_m.shape[-1]
+        msg_bytes = 4 * int(d_dim) + 4 + 1
         publish = not isinstance(self.tracker, NoopTracker)
-        fn = self._run_jit
+        fn = run_jit
         if self.ecfg.profile:
             if self._profiled is None or self._profiled.fn is not fn:
                 backend = ("engine-mesh" if self._mesh is not None
@@ -605,12 +874,13 @@ class ShardedLSS:
         done = 0
         while done < cycles:
             step = min(k, cycles - done)
-            before = jit_cache_size(self._run_jit)
+            before = jit_cache_size(run_jit)
             with self.tracker.span("engine.dispatch", k=step,
                                    suite=self.suite.name,
+                                   mode="async" if is_async else "sync",
                                    transport=transport) as sp:
                 state = fn(state, self._tables, k=step)
-                after = jit_cache_size(self._run_jit)
+                after = jit_cache_size(run_jit)
                 if (before is not None and after is not None
                         and after > before):
                     sp.set("recompiled", after - before)
@@ -634,9 +904,31 @@ class ShardedLSS:
                                    shard=str(s), transport=transport)
                         cut_g.set(int(cuts[s]), shard=str(s))
             done += step
+        if is_async and publish:
+            # Staleness surfaced as gauges (cumulative totals live in
+            # the state itself, so a fresh tracker still sees them).
+            lag = self.async_lag_stats(state)
+            self.tracker.gauge(
+                "engine_async_staleness_mean",
+                "mean realized halo delay (cycles) of applied "
+                "cross-shard messages, cumulative").set(lag["mean_delay"])
+            self.tracker.gauge(
+                "engine_async_stale_drops_total",
+                "cross-shard deliveries dropped by the per-message "
+                "seq guard (reordered/superseded), cumulative").set(
+                    lag["stale_drops"])
+            self.tracker.gauge(
+                "engine_async_applied_total",
+                "cross-shard messages applied, cumulative").set(
+                    lag["applied"])
         return state
 
-    def drain_msgs(self, state: ShardedState):
+    @staticmethod
+    def _base(state) -> ShardedState:
+        """The sync :class:`ShardedState` under either state kind."""
+        return state.sync if isinstance(state, AsyncShardedState) else state
+
+    def drain_msgs(self, state):
         """Read-and-reset the device send counter: (state', exact int).
 
         The per-shard counter is int32 without x64; draining at every
@@ -644,8 +936,12 @@ class ShardedLSS:
         interval (bounded by n*D*interval) while the host total stays
         exact at any run length.
         """
-        total = int(jnp.sum(state.msgs))
-        return state._replace(msgs=jnp.zeros_like(state.msgs)), total
+        base = self._base(state)
+        total = int(jnp.sum(base.msgs))
+        base = base._replace(msgs=jnp.zeros_like(base.msgs))
+        if isinstance(state, AsyncShardedState):
+            return state._replace(sync=base), total
+        return base, total
 
     # -- observers ---------------------------------------------------------
     def _metrics_impl(self, state: ShardedState, tables: DeviceTopo,
@@ -674,16 +970,25 @@ class ShardedLSS:
         quiescent = ~jnp.any(fl(state.pending) & live) & ~jnp.any(viol)
         return acc, quiescent, correct[self._pos], want  # original order
 
-    def metrics(self, state: ShardedState, eps: float = 1e-9):
+    def metrics(self, state, eps: float = 1e-9):
         """(accuracy, quiescent, correct-mask in original order) — the same
-        numbers :func:`repro.core.lss.metrics` reports."""
+        numbers :func:`repro.core.lss.metrics` reports.  For an async
+        state the quiescence bit additionally requires an empty ring
+        (:meth:`async_in_flight`): a message still deliverable at a
+        bounded-stale read could wake a peer back up."""
+        if isinstance(state, AsyncShardedState):
+            acc, quiescent, correct = self._metrics_jit(
+                state.sync, self._tables, eps=eps)[:3]
+            return acc, quiescent & ~self.async_in_flight(state), correct
         return self._metrics_jit(state, self._tables, eps=eps)[:3]
 
-    def total_msgs(self, state: ShardedState):
-        return jnp.sum(state.msgs)
+    def total_msgs(self, state):
+        return jnp.sum(self._base(state).msgs)
 
-    def to_lss_state(self, state: ShardedState) -> lss.LSSState:
-        """Unpermute into a core :class:`LSSState` (parity tests, debug)."""
+    def to_lss_state(self, state) -> lss.LSSState:
+        """Unpermute into a core :class:`LSSState` (parity tests, debug).
+        Accepts either state kind (async transport books are dropped)."""
+        state = self._base(state)
         S, B = self.S, self.B
         take = lambda a: a.reshape(S * B, *a.shape[2:])[self._pos]
         return lss.LSSState(
@@ -709,7 +1014,10 @@ class ShardedLSS:
         shard 0 (totals — the only thing consumers read — are preserved)
         and the per-shard drop-RNG keys are re-derived by splitting
         ``snap.rng`` (delivery semantics are unaffected at
-        ``drop_rate=0``; a lossy run resumes on a fresh drop stream).
+        ``drop_rate=0``; a lossy run resumes on a fresh drop stream —
+        :meth:`migrate_from` between equal shard counts carries the
+        per-shard keys verbatim instead, keeping epochs bitwise
+        invisible to the drop sequence).
         """
         S, B, D = self.S, self.B, self.D
         n1 = snap.alive.shape[0]
@@ -735,7 +1043,7 @@ class ShardedLSS:
             x_c=jnp.zeros((S * B,), dt).at[pos].set(snap.x_c).reshape(S, B),
             pending=jnp.zeros((S * B, D), bool).at[pos, :D1]
             .set(snap.pending).reshape(S, B, D),
-            last_send=jnp.full((S * B,), -(10**6), jnp.int32).at[pos]
+            last_send=jnp.full((S * B,), lss.COLD_TIMER, jnp.int32).at[pos]
             .set(snap.last_send.astype(jnp.int32)).reshape(S, B),
             alive=jnp.zeros((S * B,), bool).at[pos].set(snap.alive)
             .reshape(S, B),
@@ -776,4 +1084,13 @@ class ShardedLSS:
         place = self.place_lss_state
         for _ in batch:
             place = jax.vmap(place)
-        return place(snap)
+        placed = place(snap)
+        if old.S == self.S:
+            # Drop-RNG continuity: with an equal shard count the (S, 2)
+            # per-shard key array transfers verbatim, so a regrow /
+            # rebalance epoch is bitwise INVISIBLE to the message-drop
+            # sequence (shard s keeps drawing the stream it was on).  A
+            # shard-count change has no faithful key mapping — only then
+            # does place_lss_state's re-split apply.
+            placed = placed._replace(rng=state.rng)
+        return placed

@@ -44,6 +44,9 @@ __all__ = [
     "collective_all_to_all",
     "gather_block",
     "scatter_block",
+    "ring_publish",
+    "ring_read",
+    "scatter_seq",
 ]
 
 
@@ -90,6 +93,67 @@ def scatter_halo(in_m, in_c, buf_m, buf_c, flag, halo: HaloTables):
 def transpose_all_to_all(buf):
     """Single-device transport: (src, dst, ...) -> (dst, src, ...)."""
     return jnp.swapaxes(buf, 0, 1)
+
+
+# -- bounded-staleness ring (async engine mode) ----------------------------
+#
+# The async engine does not hand each cycle's send buffers straight to
+# the receiver: every shard *publishes* them into a ring of R =
+# staleness+1 slots keyed by its own clock, and each receiver reads
+# every sender's ring at a bounded-stale clock of its choosing.  A slot
+# written at sender time c is overwritten at time c+R, so any read with
+# delay <= staleness lands on an intact publication — bounded loss
+# (skipped publications age out) and reordering are exactly the
+# semantics Alg. 1's per-message sequence numbers guard against, which
+# is what :func:`scatter_seq` + the seq-vs-last test enforce on the
+# receive side.
+
+def ring_publish(ring_m, ring_c, ring_flag, ring_seq, slot,
+                 buf_m, buf_c, flag, seq):
+    """Write each shard's (S, H) send buffers into its own ring slot.
+
+    ``ring_*``: ``(R, S_src, S_dst, H[, d])``; ``slot``: (S,) per-shard
+    write index (``clock % R``).  The whole row is overwritten — flags of
+    the aged-out publication included, so idle shards converge to an
+    empty ring.
+    """
+    src = jnp.arange(slot.shape[0])
+    return (ring_m.at[slot, src].set(buf_m),
+            ring_c.at[slot, src].set(buf_c),
+            ring_flag.at[slot, src].set(flag),
+            ring_seq.at[slot, src].set(seq))
+
+
+def ring_read(ring_m, ring_c, ring_flag, ring_seq, slot):
+    """Read, for every (dst, src) pair, src's publication at
+    ``slot[dst, src]`` — the receiver-chosen, bounded-stale sender time.
+
+    Returns dst-major ``(S_dst, S_src, H[, d])`` buffers, the layout
+    :func:`scatter_halo` consumes (at delay 0 this is exactly
+    :func:`transpose_all_to_all` of the just-published buffers).
+    """
+    S = slot.shape[0]
+    dst, src = jnp.meshgrid(jnp.arange(S), jnp.arange(S), indexing="ij")
+    return (ring_m[slot, src, dst], ring_c[slot, src, dst],
+            ring_flag[slot, src, dst], ring_seq[slot, src, dst])
+
+
+def scatter_seq(last_seq, seq, flag, recv_row, recv_slot):
+    """Record applied sequence numbers per in-slot (vmapped over shards).
+
+    ``last_seq (S, B, D)`` holds the newest seq applied into each
+    in-slot; accepted messages (``flag``) scatter their seq via the same
+    out-of-bounds ``mode="drop"`` trick :func:`scatter_block` uses.
+    Each in-slot has a unique source out-slot, so at most one message
+    targets it per cycle — a plain set suffices.
+    """
+    def one(ls, sq, ok, rr, rs):
+        B, D = ls.shape
+        idx = jnp.where(ok, rr * D + rs, B * D).reshape(-1)
+        return (ls.reshape(B * D)
+                .at[idx].set(sq.reshape(-1), mode="drop")
+                .reshape(B, D))
+    return jax.vmap(one)(last_seq, seq, flag, recv_row, recv_slot)
 
 
 def collective_all_to_all(buf, axis_name: str):

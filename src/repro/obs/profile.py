@@ -15,6 +15,14 @@ wrapper.  ``host_overhead_frac = host / (host + device)`` is the
 fraction of dispatch wall the device sat idle for: the number the
 ROADMAP's async-runtime work needs to drive toward zero.
 
+In an *overlapped* runtime that host sync no longer exists: the whole
+point is that the next boundary runs while the device computes, and a
+per-call fence would serialize exactly the overlap it is measuring.
+``sample_every=N`` keeps attribution honest there — only every Nth call
+fences and publishes; the rest return the un-fenced futures untouched,
+so N-1 of every N dispatches overlap freely and the sampled one still
+records a true host/device split.
+
 Per call the wrapper publishes ``dispatch_host_ms`` /
 ``dispatch_device_ms`` / ``host_overhead_frac`` gauges (labeled by
 backend) through ``tracker.log_metrics`` — the Noop-safe path, so
@@ -69,24 +77,37 @@ class ProfiledDispatch:
       backend: gauge label value (``"core"`` / ``"engine"`` / ...).
       profiler_dir: when set, every call runs inside a
         ``jax.profiler.trace(profiler_dir)`` session.
+      sample_every: fence cadence.  1 (default) fences every call — the
+        synchronous-runtime behavior.  N>1 is the overlap-aware mode:
+        calls where ``calls % N != 0`` skip the fence, skip publishing,
+        and hand back the raw futures so the dispatch stays
+        asynchronous; only the sampled calls pay the serialization.
     """
 
     __slots__ = ("fn", "tracker", "backend", "profiler_dir", "calls",
-                 "last")
+                 "last", "sample_every", "sampled")
 
     def __init__(self, fn: Callable[..., Any], tracker: Optional[Tracker]
                  = None, backend: str = "core",
-                 profiler_dir: Optional[str] = None):
+                 profiler_dir: Optional[str] = None,
+                 sample_every: int = 1):
         self.fn = fn
         self.tracker = tracker if tracker is not None else NoopTracker()
         self.backend = backend
         self.profiler_dir = profiler_dir
+        self.sample_every = max(1, int(sample_every))
         self.calls = 0
+        self.sampled = 0  # how many calls actually fenced + published
         # Most recent attribution, host-readable regardless of backend:
         # {"host_ms", "device_ms", "total_ms", "host_overhead_frac"}.
         self.last: dict = {}
 
     def __call__(self, *args, **kwargs):
+        if self.calls % self.sample_every != 0:
+            # Unsampled call: enqueue only.  No fence, no gauges — the
+            # futures flow through and the device keeps overlapping.
+            self.calls += 1
+            return self.fn(*args, **kwargs)
         with profiler_session(self.profiler_dir):
             t0 = perf_counter()
             out = self.fn(*args, **kwargs)
@@ -97,6 +118,7 @@ class ProfiledDispatch:
         device_ms = max((t2 - t1) * 1e3, 0.0)
         total_ms = max((t2 - t0) * 1e3, 1e-12)
         self.calls += 1
+        self.sampled += 1
         self.last = {
             "host_ms": host_ms,
             "device_ms": device_ms,

@@ -18,11 +18,16 @@ Two modes, in the paper's moment form (<m, c> with m = c*v):
 
 A batch targets all active queries (``query_ids=None``) or a subset — a
 tenant streaming to its own private statistic.
+
+Targeted batches for a *preempted* tenant are not dropped: the service
+parks them (:meth:`StreamIngest.park`, bounded per tenant) and replays
+them into the tenant's slot when it resumes — a suspension pauses the
+tenant's stream instead of losing it.
 """
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -41,14 +46,44 @@ class UpdateBatch(NamedTuple):
 class StreamIngest:
     """Bounded queue of update batches, drained between dispatches."""
 
-    def __init__(self, max_pending: int = 10_000):
+    def __init__(self, max_pending: int = 10_000, max_parked: int = 256):
         self.max_pending = max_pending
+        self.max_parked = max_parked  # parked batches bound, per tenant
         self._queue: List[UpdateBatch] = []
+        self._parked: Dict[str, List[UpdateBatch]] = {}
         self.applied_batches = 0
         self.applied_updates = 0
+        self.parked_dropped = 0  # oldest-dropped under the per-tenant bound
 
     def __len__(self) -> int:
         return len(self._queue)
+
+    # -- preempted-tenant buffering ----------------------------------------
+    def park(self, query_id: str, batch: UpdateBatch) -> None:
+        """Buffer a batch for a preempted tenant (replayed at resume).
+        Bounded per tenant: past ``max_parked`` the OLDEST parked batch is
+        dropped — the replay then starts from a later stream position,
+        which "set"-mode streams absorb (last write wins) and "delta"
+        streams surface via :attr:`parked_dropped`."""
+        q = self._parked.setdefault(query_id, [])
+        q.append(batch)
+        if len(q) > self.max_parked:
+            q.pop(0)
+            self.parked_dropped += 1
+
+    def take_parked(self, query_id: str) -> List[UpdateBatch]:
+        """Remove and return the tenant's parked batches, oldest first."""
+        return self._parked.pop(query_id, [])
+
+    def discard_parked(self, query_id: str) -> int:
+        """Drop a retired tenant's parked batches; returns how many."""
+        return len(self._parked.pop(query_id, []))
+
+    def num_parked(self, query_id: Optional[str] = None) -> int:
+        """Parked batches for one tenant (or all, when ``None``)."""
+        if query_id is not None:
+            return len(self._parked.get(query_id, []))
+        return sum(len(v) for v in self._parked.values())
 
     def push(self, who, values, weights=None, mode: str = "set",
              query_ids: Optional[Sequence[str]] = None) -> UpdateBatch:

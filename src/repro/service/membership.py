@@ -89,6 +89,12 @@ class MembershipQueue:
     def __len__(self) -> int:
         return len(self._queue)
 
+    def has_pending(self) -> bool:
+        """True when a boundary drain would apply any queued event —
+        the O(1) probe the service's hot boundary uses to skip the
+        drain machinery entirely on quiet ticks."""
+        return bool(self._queue)
+
     def _will_be_present(self, peer: int) -> bool:
         if peer in self._pending_joins:
             return True

@@ -27,6 +27,14 @@ capacity swap in same-shaped table data and therefore never recompile
 the dispatch, while in-flight tenants keep converging (joining peers
 start from the paper's knowledge-init state).
 
+With ``ServiceConfig(overlap=True)`` the tick is re-cut around jax's
+async dispatch (:mod:`repro.service.overlap`): the host boundary for
+dispatch K+1 runs while dispatch K still occupies the device, K's
+telemetry syncs one tick later as a :class:`PendingWindow`, and epoch
+rebuilds stage on a background thread, swapping in at a boundary.
+Record content is bitwise identical to sync mode — only emission is
+deferred by one tick (:meth:`Service.flush` drains the tail).
+
 The **control plane** (:mod:`repro.service.controlplane`) runs on top of
 the same boundaries: per-tenant SLO evaluation folded into every
 telemetry record, a pluggable admission/preemption scheduler when the Q
@@ -60,6 +68,7 @@ from .controlplane import (ActiveView, CapacityManager, ControlPlaneConfig,
                            make_scheduler)
 from .ingest import StreamIngest, UpdateBatch
 from .membership import MembershipQueue
+from .overlap import DoubleBuffer, PendingWindow, StagedBuild
 from .registry import QueryRegistry
 from .telemetry import TelemetrySink
 
@@ -129,6 +138,15 @@ class ServiceConfig(NamedTuple):
     alerts: Tuple = ()  # AlertRule set, evaluated per observe boundary
     flight_capacity: int = 1024  # flight-recorder ring size (records)
     flight_dump_dir: Optional[str] = None  # auto-dump dir (None = manual)
+    # Overlapped host boundary (see repro.service.overlap): tick K+1's
+    # host work runs while dispatch K is still on the device; dispatch
+    # K's telemetry is finished one tick later (flush() at shutdown
+    # drains the last window).  Record CONTENT is identical to sync
+    # mode — only emission is one tick deferred.  profile_sample_every
+    # is ProfiledDispatch's fence cadence: >1 keeps attribution honest
+    # under overlap by only serializing every Nth dispatch.
+    overlap: bool = False  # overlap host boundary with in-flight dispatch
+    profile_sample_every: int = 1  # dispatch-attribution fence cadence
 
 
 class _Preempted(NamedTuple):
@@ -165,7 +183,7 @@ def _grow_core_states(states: lss.LSSState, n2: int,
         x_c=jnp.zeros((q, n2), dt).at[:, :n1].set(states.x_c),
         pending=jnp.zeros((q, n2, D2), bool).at[:, :n1, :D1]
         .set(states.pending),
-        last_send=jnp.full((q, n2), -(10**6), jnp.int32).at[:, :n1]
+        last_send=jnp.full((q, n2), lss.COLD_TIMER, jnp.int32).at[:, :n1]
         .set(states.last_send),
         alive=jnp.zeros((q, n2), bool).at[:, :n1].set(states.alive))
 
@@ -181,7 +199,7 @@ def _jit_core_join(states, who, m, c):
         alive=states.alive.at[:, who].set(True),
         x_m=states.x_m.at[:, who].set(m),
         x_c=states.x_c.at[:, who].set(c),
-        last_send=states.last_send.at[:, who].set(-(10 ** 6)))
+        last_send=states.last_send.at[:, who].set(lss.COLD_TIMER))
 
 
 class _CoreBackend:
@@ -230,6 +248,11 @@ class _CoreBackend:
     def msgs_of(self, states) -> np.ndarray:
         return np.asarray(states.msgs)  # (Q,)
 
+    def msgs_device(self, states):
+        """Per-slot send counts as a DEVICE array — no host sync, so the
+        overlapped observe path can enqueue behind the dispatch."""
+        return states.msgs  # (Q,)
+
     def reset_msgs(self, states):
         return states._replace(msgs=jnp.zeros_like(states.msgs))
 
@@ -270,9 +293,11 @@ class _CoreBackend:
     def halo_bytes_per_cycle(self) -> int:
         return 0  # one device, nothing crosses a shard boundary
 
-    def regrow(self, dyn, states):
+    def regrow(self, dyn, states, prebuilt=None, catchup_rows=None):
         """Adopt a grown topology (shape change: the service's jitted
-        programs recompile once) and pad every slot's state to match."""
+        programs recompile once) and pad every slot's state to match.
+        ``prebuilt``/``catchup_rows`` are the engine backend's staged-
+        epoch protocol; the core backend has no tables to pre-build."""
         self.topo = dyn
         self.ta = lss.TopoArrays.from_topology(dyn)
         return _grow_core_states(states, dyn.n, dyn.max_deg)
@@ -333,6 +358,9 @@ class _EngineBackend:
     def msgs_of(self, states) -> np.ndarray:
         return np.asarray(states.msgs).sum(axis=-1)  # (Q, S) -> (Q,)
 
+    def msgs_device(self, states):
+        return states.msgs.sum(axis=-1)  # (Q, S) -> (Q,), still device
+
     def reset_msgs(self, states):
         return states._replace(msgs=jnp.zeros_like(states.msgs))
 
@@ -357,7 +385,7 @@ class _EngineBackend:
         x_m = (states.x_m.reshape(q, -1, states.x_m.shape[-1])
                .at[:, pos].set(m))
         x_c = states.x_c.reshape(q, -1).at[:, pos].set(c)
-        last = states.last_send.reshape(q, -1).at[:, pos].set(-(10 ** 6))
+        last = states.last_send.reshape(q, -1).at[:, pos].set(lss.COLD_TIMER)
         return states._replace(
             alive=alive.reshape(states.alive.shape),
             x_m=x_m.reshape(states.x_m.shape),
@@ -402,23 +430,68 @@ class _EngineBackend:
         S, H, d = self.eng.S, self.eng.stopo.halo_width, self.scfg.d
         return S * S * H * (4 * d + 4 + 1)
 
-    def _reshard(self, dyn, states):
+    def _reshard(self, dyn, states, prebuilt=None, catchup_rows=None):
         """Fresh partition of ``dyn`` + state migration across
-        ``new_of_old`` — the mechanics shared by both epoch kinds."""
-        old, self.eng = self.eng, self._build(dyn)
+        ``new_of_old`` — the mechanics shared by both epoch kinds.
+
+        ``prebuilt`` is a staged background build (see
+        :meth:`stage_rebalance` / :meth:`stage_regrow`): an engine built
+        over an earlier snapshot, caught up here via the same incremental
+        journal repair live membership uses (``catchup_rows`` overrides
+        the changed-row set when ``dyn``'s own journal can't reach back
+        to the snapshot — the regrow case).  Any catch-up failure falls
+        back to the synchronous full rebuild."""
+        if prebuilt is not None:
+            try:
+                if prebuilt._topo_version != getattr(dyn, "version", 0):
+                    prebuilt.apply_membership(dyn, rows=catchup_rows)
+            except Exception:
+                prebuilt = None  # stale beyond repair: rebuild in line
+        old = self.eng
+        self.eng = prebuilt if prebuilt is not None else self._build(dyn)
         self.topo = dyn
         return self.eng.migrate_from(old, states)
 
-    def regrow(self, dyn, states):
+    def regrow(self, dyn, states, prebuilt=None, catchup_rows=None):
         """Re-shard over a grown topology (shape change: one recompile)."""
-        return self._reshard(dyn, states)
+        return self._reshard(dyn, states, prebuilt=prebuilt,
+                             catchup_rows=catchup_rows)
 
-    def rebalance(self, dyn, states):
+    def rebalance(self, dyn, states, prebuilt=None):
         """Re-partition the CURRENT graph (fresh BFS edge cut over the
         churned adjacency).  Same capacity, so traced shapes only change
         if the fresh halo tables need a different width — within the
         halo slack the service's compiled dispatch is reused as-is."""
-        return self._reshard(dyn, states)
+        return self._reshard(dyn, states, prebuilt=prebuilt)
+
+    # -- staged epoch builds (overlap mode) --------------------------------
+    def stage_rebalance(self, dyn):
+        """Kick off a background partition+table build over an immutable
+        snapshot of the current graph.  Returns ``(build, version)``; the
+        adopter hands ``build.take()`` to :meth:`rebalance` at a later
+        boundary and the catch-up repair covers whatever churned since
+        ``version`` (the service defers journal compaction past it)."""
+        snap = dyn.snapshot() if hasattr(dyn, "snapshot") else dyn
+        ver = getattr(dyn, "version", 0)
+
+        def build():
+            eng = self._build(snap)
+            eng._topo_version = ver  # snapshot carries no version
+            return eng
+
+        return StagedBuild(build, label="rebalance"), ver
+
+    def stage_regrow(self, dyn, n_cap=None, deg_cap=None):
+        """Background build over a grown COPY of ``dyn`` (the ``grow()``
+        call itself runs here, on the caller's thread — cheap array
+        copies — so the background work touches only the immutable
+        product).  The grown copy carries ``dyn``'s version, so the
+        returned version is what the adopter must supply catch-up rows
+        relative to (a fresh ``grow()`` product journals nothing)."""
+        grown = dyn.grow(n_cap=n_cap, deg_cap=deg_cap)
+        ver = getattr(dyn, "version", 0)
+        return StagedBuild(lambda: self._build(grown),
+                           label="regrow"), ver
 
 
 class Service:
@@ -563,9 +636,20 @@ class Service:
         self._step_call = (
             ProfiledDispatch(self._step, self._obs,
                              backend=scfg.backend,
-                             profiler_dir=scfg.profiler_dir)
+                             profiler_dir=scfg.profiler_dir,
+                             sample_every=scfg.profile_sample_every)
             if scfg.profile_dispatch else self._step)
         self._observe = jax.jit(self._observe_impl)
+        # Overlap machinery (used by sync mode too: the double buffer's
+        # reshape canary and the staged-epoch books are mode independent;
+        # _pending only ever holds a window under scfg.overlap).
+        self._pending: Optional[PendingWindow] = None
+        self._buffers = DoubleBuffer()
+        # kind ("rebalance" | "regrow") -> (StagedBuild, version[, caps]).
+        # While any build is in flight the membership journal is only
+        # compacted up to the oldest staged version, so adoption-time
+        # catch-up repair still finds the events it needs.
+        self._staged: Dict[str, tuple] = {}
         self.capman.note_epoch("init", self.backend.cut_frac())
 
     @property
@@ -593,10 +677,15 @@ class Service:
         return info
 
     def close(self) -> None:
-        """Deterministically dispose of observability resources: flushes
-        the tracker and, when the service built its own (no ``tracker=``/
+        """Deterministically dispose of observability resources: finishes
+        any pending overlapped window (best effort), flushes the tracker
+        and, when the service built its own (no ``tracker=``/
         ``telemetry=`` argument), closes it.  Borrowed trackers stay
         open — the caller owns their lifecycle.  Idempotent."""
+        try:
+            self.flush()
+        except Exception:
+            pass  # shutdown must not fail on a poisoned window
         if self._owns_tracker:
             self.tracker.close()
         else:
@@ -806,11 +895,23 @@ class Service:
         with self._obs.span("resume", trace=(tid,) if tid else (),
                             query=query_id, slot=slot,
                             reconciled=e.topo_version
-                            != self._applied_version):
+                            != self._applied_version) as sp:
             snap = self._pad_snapshot(e.state)
             if e.topo_version != self._applied_version:
                 snap = self._reconcile_snapshot(snap)
             self.states = self.backend.restore_slot(self.states, slot, snap)
+            # Replay updates that streamed in while the tenant held no
+            # slot (parked by _apply_ingest), oldest first — the resumed
+            # statistic is what an unsuspended tenant would hold.
+            parked = self.ingest.take_parked(query_id)
+            if parked:
+                x_m, x_c, pos = self.backend.x_moments(self.states)
+                slot_arr = np.array([slot], np.int32)
+                for b in parked:
+                    x_m, x_c = self.ingest.apply(x_m, x_c, b, slot_arr,
+                                                 pos=pos)
+                self.states = self.backend.with_x(self.states, x_m, x_c)
+                sp.set("replayed_batches", len(parked))
         self._activated_at[query_id] = self.dispatches
         self._ctrl_events.append(("resumed", query_id))
 
@@ -844,7 +945,7 @@ class Service:
             in_m=jnp.zeros_like(snap.in_m),
             in_c=jnp.zeros_like(snap.in_c),
             pending=jnp.zeros_like(snap.pending),
-            last_send=jnp.full_like(snap.last_send, -(10**6)),
+            last_send=jnp.full_like(snap.last_send, lss.COLD_TIMER),
             alive=present,
             x_m=jnp.where(newly[:, None], 0.0, snap.x_m),
             x_c=jnp.where(newly, 1.0, snap.x_c))
@@ -859,6 +960,7 @@ class Service:
             return
         if query_id in self._preempted:
             del self._preempted[query_id]
+            self.ingest.discard_parked(query_id)
             self._record_retired(query_id)
             return
         slot = self.registry.retire(query_id)
@@ -984,13 +1086,33 @@ class Service:
         if dyn is None:
             raise RuntimeError(
                 "grow_capacity needs a DynTopology-backed service")
+        # A pre-staged background build (see _maybe_stage_growth) whose
+        # capacity covers the request is adopted instead of rebuilding
+        # in line; its catch-up rows come from the OLD dyn's journal —
+        # computed before grow(), which resets the journal floor.
+        prebuilt = catchup_rows = None
+        staged = self._staged.pop("regrow", None)
+        if staged is not None:
+            build, ver, caps = staged
+            if ((n_cap is None or caps["n_cap"] >= n_cap)
+                    and (deg_cap is None or caps["deg_cap"] >= deg_cap)):
+                n_cap, deg_cap = caps["n_cap"], caps["deg_cap"]
+                try:
+                    catchup_rows = dyn.changed_rows_since(ver)
+                    prebuilt = build.take()
+                except Exception:
+                    prebuilt = catchup_rows = None
         new_dyn = dyn.grow(n_cap=n_cap, deg_cap=deg_cap)
         self.topo = self._dyn = new_dyn
         self.membership.rebind(new_dyn)
         with self._obs.span("epoch_regrow", trace=self._active_traces(),
                             n_cap=new_dyn.n_cap,
-                            deg_cap=new_dyn.deg_cap) as sp:
-            self.states = self.backend.regrow(new_dyn, self.states)
+                            deg_cap=new_dyn.deg_cap,
+                            staged=prebuilt is not None) as sp:
+            self.states = self.backend.regrow(new_dyn, self.states,
+                                              prebuilt=prebuilt,
+                                              catchup_rows=catchup_rows)
+        self._buffers.invalidate()  # shape change: expected recompile
         self._boundary_spans["epoch_regrow"] = sp.seconds
         self._boundary_counts["epochs"] = (
             self._boundary_counts.get("epochs", 0) + 1)
@@ -999,7 +1121,8 @@ class Service:
         self._edges = max(new_dyn.num_edges, 1)
         ev = self.capman.note_epoch(
             "regrow", self.backend.cut_frac(),
-            n_cap=new_dyn.n_cap, deg_cap=new_dyn.deg_cap)
+            n_cap=new_dyn.n_cap, deg_cap=new_dyn.deg_cap,
+            staged=prebuilt is not None)
         self._ctrl_events.append(("epoch", ev))
 
     def rebalance_now(self) -> Optional[dict]:
@@ -1015,20 +1138,36 @@ class Service:
         before = self.backend.cut_frac()
         if before is None:
             return None
+        prebuilt = None
+        staged = self._staged.pop("rebalance", None)
+        if staged is not None:
+            try:
+                prebuilt = staged[0].take()
+            except Exception:
+                prebuilt = None  # failed build: rebuild synchronously
         drift = self.capman.drift(before)
         with self._obs.span("epoch_rebalance", trace=self._active_traces(),
-                            drift=drift) as sp:
-            self.states = self.backend.rebalance(self.topo, self.states)
+                            drift=drift, staged=prebuilt is not None) as sp:
+            self.states = self.backend.rebalance(self.topo, self.states,
+                                                 prebuilt=prebuilt)
+        self._buffers.invalidate()  # fresh tables may change halo width
         self._boundary_spans["epoch_rebalance"] = sp.seconds
         self._boundary_counts["epochs"] = (
             self._boundary_counts.get("epochs", 0) + 1)
         ev = self.capman.note_epoch(
             "rebalance", self.backend.cut_frac(),
-            cut_before=before, drift=drift)
+            cut_before=before, drift=drift, staged=prebuilt is not None)
         self._ctrl_events.append(("epoch", ev))
         return ev
 
     def _maybe_rebalance(self) -> None:
+        # A staged rebalance build adopts as soon as it is ready (and
+        # suppresses new drift checks while in flight).
+        staged = self._staged.get("rebalance")
+        if staged is not None:
+            if staged[0].ready():
+                self.rebalance_now()
+            return
         # should_rebalance re-checks the cadence/threshold itself; the
         # early-outs here just avoid the O(edges) cut_frac() host scan on
         # every off-cadence dispatch.
@@ -1038,7 +1177,34 @@ class Service:
             return
         if self.capman.should_rebalance(self.dispatches,
                                         self.backend.cut_frac()):
-            self.rebalance_now()
+            if self.scfg.overlap and hasattr(self.backend,
+                                             "stage_rebalance"):
+                # Overlap mode: kick the partition rebuild off-thread and
+                # keep dispatching; adoption happens at a later boundary.
+                src = self._dyn if self._dyn is not None else self.topo
+                with self._obs.span("epoch_stage", kind="rebalance"):
+                    self._staged["rebalance"] = \
+                        self.backend.stage_rebalance(src)
+            else:
+                self.rebalance_now()
+
+    def _maybe_stage_growth(self) -> None:
+        """Overlap mode: pre-stage the regrow epoch's partition + table
+        build in the background when free membership rows run low, so
+        the capacity-wall epoch adopts a finished build instead of
+        stalling the boundary for the full rebuild."""
+        if (not self.scfg.overlap or self._dyn is None
+                or not self.capman.auto_regrow or self._staged
+                or not hasattr(self.backend, "stage_regrow")):
+            return
+        free = int((~self._dyn.present).sum())
+        if free >= max(1, self._dyn.n_cap // 16):
+            return
+        caps = self.capman.grown_caps(self._dyn.n_cap, self._dyn.deg_cap,
+                                      "rows")
+        with self._obs.span("epoch_stage", kind="regrow", **caps):
+            build, ver = self.backend.stage_regrow(self._dyn, **caps)
+        self._staged["regrow"] = (build, ver, caps)
 
     def drift(self) -> float:
         """Current partition drift (cut-fraction increase since the last
@@ -1051,11 +1217,17 @@ class Service:
         capacity: zero recompiles) + per-slot state edits."""
         if self._dyn is None:
             return 0
+        if (not self.membership.has_pending()
+                and self._dyn.version == self._applied_version):
+            return 0  # quiet tick: skip the drain machinery entirely
         join_inits = self.membership.drain_into(self._dyn)
         events = self._dyn.events_since(self._applied_version)
         if not events:
             return 0
-        self.backend.refresh_topology(self._dyn)
+        if self.backend.refresh_topology(self._dyn):
+            # Halo width regrew: traced shapes changed, the next swap's
+            # reshape is a declared epoch rather than a canary trip.
+            self._buffers.invalidate()
 
         # 1. Scrub the messaging state of every touched (peer, slot) —
         #    freed and claimed alike (idempotent; order-free).
@@ -1100,7 +1272,12 @@ class Service:
         self._present = self._dyn.present.copy()
         self._edges = max(self._dyn.num_edges, 1)
         self._applied_version = self._dyn.version
-        self._dyn.compact(self._applied_version)
+        # Staged epoch builds catch up from the journal at adoption time,
+        # so compaction may only advance to the oldest staged version.
+        floor = self._applied_version
+        for entry in self._staged.values():
+            floor = min(floor, entry[1])
+        self._dyn.compact(floor)
         return len(events)
 
     # -- streaming ingest --------------------------------------------------
@@ -1121,7 +1298,11 @@ class Service:
                                     count=len(active))
             else:
                 # Ids retired while the batch sat in the queue are dropped
-                # (their slot may already belong to a new tenant).
+                # (their slot may already belong to a new tenant); a
+                # PREEMPTED target parks the batch for replay at resume.
+                for q in b.query_ids:
+                    if q not in active and q in self._preempted:
+                        self.ingest.park(q, b)
                 slots = np.array([active[q] for q in b.query_ids
                                   if q in active], np.int32)
             x_m, x_c = self.ingest.apply(x_m, x_c, b, slots, pos=pos)
@@ -1147,6 +1328,10 @@ class Service:
         set) before propagating.
 
         Returns this dispatch's telemetry records (active slots only).
+        Under ``scfg.overlap`` the records returned are the PREVIOUS
+        dispatch's (its observation synced while this one ran); the
+        first tick returns ``[]`` and :meth:`flush` drains the last
+        window.  Record content is identical to sync mode either way.
         """
         try:
             with self._obs.span("tick", dispatch=self.dispatches):
@@ -1157,6 +1342,21 @@ class Service:
 
     def _tick_inner(self, cycles: Optional[int]) -> list:
         k = cycles if cycles is not None else self.scfg.cycles_per_dispatch
+        self._host_boundary()
+        window = self._launch(k)
+        if not self.scfg.overlap:
+            return self._finish_window(window)
+        # Overlap: window K's telemetry syncs NEXT tick, while dispatch
+        # K+1 runs — this tick returns window K-1's records (empty on
+        # the first tick; flush() drains the last one).
+        prev, self._pending = self._pending, window
+        return self._finish_window(prev) if prev is not None else []
+
+    def _host_boundary(self) -> None:
+        """Everything the host does between dispatches: membership
+        drain, epoch checks/staging, SLO eviction, admission, ingest.
+        In overlap mode all of it runs while the PREVIOUS dispatch is
+        still on the device — nothing here blocks on device results."""
         tr = self._obs
         with tr.span("membership_drain") as sp:
             n_events = self._apply_membership()
@@ -1166,6 +1366,7 @@ class Service:
         self._boundary_spans["membership_drain"] = sp.seconds
         self._boundary_counts["membership_events"] = n_events
         self._maybe_rebalance()
+        self._maybe_stage_growth()
         self._evict_unrecoverable()
         with tr.span("admission_drain") as sp:
             n_act = self._drain_admission()
@@ -1176,9 +1377,18 @@ class Service:
             n_batches = self._apply_ingest()
         self._boundary_spans["ingest_apply"] = sp.seconds
         self._boundary_counts["ingest_batches"] = n_batches
+
+    def _launch(self, k: int) -> PendingWindow:
+        """Stage the dispatch operands (the double-buffer swap), enqueue
+        the K-cycle dispatch + the observation pass behind it, and return
+        the un-synced window."""
         params = self.registry.params
         topo = self.backend.topo_args()
+        # The swap enforces the zero-recompile invariant: boundary work
+        # must not change traced shapes outside a declared epoch.
+        self._buffers.swap(params, topo)
         info = self.backend.dispatch_info()
+        tr = self._obs
         before = jit_cache_size(self._step)
         with tr.span("dispatch", trace=self._active_traces(), k=k,
                      backend=self.scfg.backend,
@@ -1197,7 +1407,46 @@ class Service:
         self.dispatches += 1
         self.cycles += k
         self._last_k = k
-        return self._emit_telemetry(params, topo)
+        return self._begin_observe(params, topo, k)
+
+    def _begin_observe(self, params: qmod.QueryParams, topo,
+                       k: int) -> PendingWindow:
+        """Enqueue the observation pass right behind the dispatch and
+        capture the host bookkeeping its records will be built from.
+        The returned arrays are futures — nothing here syncs."""
+        acc, quiescent, want = self._observe(self.states, params, topo)
+        msgs = self.backend.msgs_device(self.states)
+        self.states = self.backend.reset_msgs(self.states)
+        events, self._ctrl_events = self._ctrl_events, []
+        spans, self._boundary_spans = self._boundary_spans, {}
+        counts, self._boundary_counts = self._boundary_counts, {}
+        return PendingWindow(
+            dispatch=self.dispatches, t=self.cycles, k=k,
+            acc=acc, quiescent=quiescent, want=want, msgs=msgs,
+            corr_iters=self._corr_iters,
+            active=tuple((qid, slot) for qid, slot, _spec
+                         in self.registry.active_items()),
+            queued=tuple(self.admission.queued_ids()),
+            preempted=tuple(self._preempted),
+            topo_version=self._applied_version,
+            edges=self._edges,
+            events=events, spans=spans, counts=counts)
+
+    def flush(self) -> list:
+        """Finish the pending overlapped window without launching a new
+        dispatch: syncs its observation and emits its telemetry.  No-op
+        (empty list) in sync mode or when nothing is pending.  serve()
+        and close() call this; call it directly after a manual tick()
+        loop when record delivery must be caught up."""
+        w, self._pending = self._pending, None
+        if w is None:
+            return []
+        try:
+            with self._obs.span("tick", dispatch=w.dispatch, flush=True):
+                return self._finish_window(w)
+        except Exception as e:
+            self._auto_flight_dump("crash", error=repr(e))
+            raise
 
     def _evict_unrecoverable(self) -> None:
         """SLO-driven eviction: drop *waiting* tenants whose published
@@ -1212,46 +1461,57 @@ class Service:
                 self._note_eviction(qid, reason)
 
     def serve(self, dispatches: int) -> list:
-        """Run ``dispatches`` ticks; returns the final tick's records."""
+        """Run ``dispatches`` ticks; returns the final tick's records
+        (overlap mode flushes the trailing window first, so the return
+        value is the final dispatch's records in both modes)."""
         records = []
         for _ in range(dispatches):
             records = self.tick()
+        if self._pending is not None:
+            records = self.flush()
         return records
 
     # -- observation -------------------------------------------------------
-    def _emit_telemetry(self, params: qmod.QueryParams, topo) -> list:
-        with self._obs.span("observe", trace=self._active_traces()) as sp:
-            acc, quiescent, want = self._observe(self.states, params, topo)
-            msgs = self.backend.msgs_of(self.states)  # per-slot counts
-            self.states = self.backend.reset_msgs(self.states)
+    def _finish_window(self, w: PendingWindow) -> list:
+        """Sync a launched window's observation futures and emit its
+        telemetry.  Sync mode calls this immediately after the launch
+        (bitwise the old single-pass tick); overlap mode calls it one
+        tick later, while the next dispatch occupies the device."""
+        with self._obs.span(
+                "observe",
+                trace=tuple(self._trace_ids[qid] for qid, _slot in w.active
+                            if qid in self._trace_ids)) as sp:
             # ONE host sync for the whole fleet: metrics, message counts
             # and the correction-iteration totals ride the same batched
             # round trip the observation pass always made.
-            acc, quiescent, want = (np.asarray(acc), np.asarray(quiescent),
-                                    np.asarray(want))
-            corr_iters = (np.asarray(self._corr_iters)
-                          if self._corr_iters is not None else None)
-        self._boundary_spans["observe"] = sp.seconds
+            acc, quiescent, want = (np.asarray(w.acc),
+                                    np.asarray(w.quiescent),
+                                    np.asarray(w.want))
+            msgs = np.asarray(w.msgs)
+            corr_iters = (np.asarray(w.corr_iters)
+                          if w.corr_iters is not None else None)
+        # The window's own observe cost belongs to ITS control record.
+        w.spans["observe"] = sp.seconds
         reg = self.tracker.registry
         corr_hist = self.tracker.histogram(
             "service_corr_iters",
             "correction do-while iterations per slot per dispatch window",
             buckets=obs_metrics.DEFAULT_COUNT_BUCKETS)
         records = []
-        for qid, slot, _spec in self.registry.active_items():
+        for qid, slot in w.active:
             sent = int(msgs[slot])
             self._total_msgs[qid] = self._total_msgs.get(qid, 0) + sent
             rec = {
-                "dispatch": self.dispatches,
-                "t": self.cycles,
+                "dispatch": w.dispatch,
+                "t": w.t,
                 "query": qid,
                 "slot": slot,
                 "accuracy": float(acc[slot]),
                 "quiescent": bool(quiescent[slot]),
                 "region": int(want[slot]),
                 "msgs": sent,
-                "msgs_per_link": sent / self._edges,
-                "topo_version": self._applied_version,
+                "msgs_per_link": sent / w.edges,
+                "topo_version": w.topo_version,
                 "trace_id": self._trace_ids.get(qid, ""),
             }
             slo_fields = self.slo.observe(qid, rec)
@@ -1268,12 +1528,12 @@ class Service:
                         "cumulative sends, per query").inc(sent, query=qid)
             if rec["quiescent"]:
                 if qid not in self._quiesced_at:
-                    self._quiesced_at[qid] = self.cycles
+                    self._quiesced_at[qid] = w.t
                     reg.gauge(
                         "tenant_quiesced_at_cycles",
                         "cycle count at which the tenant first "
                         "quiesced and stayed quiescent").set(
-                            self.cycles, query=qid)
+                            w.t, query=qid)
             else:
                 if self._quiesced_at.pop(qid, None) is not None:
                     reg.gauge("tenant_quiesced_at_cycles").remove(query=qid)
@@ -1287,7 +1547,7 @@ class Service:
                 "engine_halo_bytes_total",
                 "halo exchange buffer bytes moved (dense transport "
                 "footprint), summed over cycles and active slots").inc(
-                    halo_bytes * self._last_k * len(records))
+                    halo_bytes * w.k * len(records))
         reg.gauge("service_queue_depth",
                   "admission queue occupancy").set(len(self.admission))
         reg.gauge("service_preempted_depth",
@@ -1295,33 +1555,33 @@ class Service:
                       len(self._preempted))
         reg.gauge("service_active_slots",
                   "occupied query slots").set(len(records))
-        # Tenants holding no slot still burn their SLO deadline.
-        for qid in self.admission.queued_ids():
-            self.slo.observe_waiting(qid, self.cycles)
-        for qid in self._preempted:
-            self.slo.observe_waiting(qid, self.cycles)
+        # Tenants holding no slot still burn their SLO deadline —
+        # evaluated against the window's waiting pools and clock, so
+        # deferral does not double- or under-count waiting windows.
+        for qid in w.queued:
+            self.slo.observe_waiting(qid, w.t)
+        for qid in w.preempted:
+            self.slo.observe_waiting(qid, w.t)
         # Alert rules: the registry's second policy consumer.  Evaluated
         # after every gauge above is current; transitions become
         # kind="alert" records and arm the flight-recorder trigger.
         fired = []
         if self.alerts is not None:
-            for a in self.alerts.evaluate(dispatch=self.dispatches,
-                                          t=self.cycles):
+            for a in self.alerts.evaluate(dispatch=w.dispatch, t=w.t):
                 if a["state"] == "firing":
                     fired.append(a)
                 self._obs.log_record(a)
-        # Flight-recorder trigger set for this window (checked before
-        # the control record swaps the event list out).
+        # Flight-recorder trigger set for this window.
         trigger = None
         if any(r.get("slo_ok") is False for r in records):
             trigger = "slo_violation"
-        elif any(kind == "evicted" for kind, _ in self._ctrl_events):
+        elif any(kind == "evicted" for kind, _ in w.events):
             trigger = "eviction"
-        elif any(kind == "epoch" for kind, _ in self._ctrl_events):
+        elif any(kind == "epoch" for kind, _ in w.events):
             trigger = "epoch"
         elif fired:
             trigger = "alert"
-        self._emit_control_record()
+        self._emit_control_record(w)
         if trigger is not None:
             self._auto_flight_dump(trigger)
         return records
@@ -1355,7 +1615,7 @@ class Service:
                               dispatch=self.dispatches, t=self.cycles,
                               **context)
 
-    def _emit_control_record(self) -> None:
+    def _emit_control_record(self, w: PendingWindow) -> None:
         """One record per dispatch with the control plane's activity —
         only when there is any (idle services emit nothing extra).
 
@@ -1363,14 +1623,14 @@ class Service:
         pools, and boundary work (membership events drained, ingest
         batches applied) — the record then carries the boundary ``spans``
         (seconds) and ``boundary`` (work counts) maps, which is how the
-        host-boundary costs reach the JSONL trail."""
-        events, self._ctrl_events = self._ctrl_events, []
-        spans, self._boundary_spans = self._boundary_spans, {}
-        counts, self._boundary_counts = self._boundary_counts, {}
+        host-boundary costs reach the JSONL trail.  Everything comes from
+        the WINDOW (captured right after its boundary ran), so sync and
+        overlap modes emit identical records."""
+        events, spans, counts = w.events, w.spans, w.counts
         boundary_work = (counts.get("membership_events", 0)
                          or counts.get("ingest_batches", 0)
                          or counts.get("epochs", 0))
-        if (not events and not len(self.admission) and not self._preempted
+        if (not events and not w.queued and not w.preempted
                 and not boundary_work):
             return
         agg: dict = {"activated": [], "resumed": [], "preempted": [],
@@ -1385,10 +1645,10 @@ class Service:
                 agg[kind].append(payload)
         self._obs.log_record({
             "kind": "control",
-            "dispatch": self.dispatches,
-            "t": self.cycles,
-            "queue_depth": len(self.admission),
-            "preempted_depth": len(self._preempted),
+            "dispatch": w.dispatch,
+            "t": w.t,
+            "queue_depth": len(w.queued),
+            "preempted_depth": len(w.preempted),
             **{k: v for k, v in agg.items() if v},
             **({"spans": spans} if spans else {}),
             **({"boundary": {k: v for k, v in counts.items() if v}}

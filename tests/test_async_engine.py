@@ -1,0 +1,164 @@
+"""Async gossip mode of the sharded engine: bounded-staleness halo ring.
+
+``EngineConfig(async_mode=True, staleness=R-1)`` promotes the event
+simulator's sequence-number semantics (``core/async_sim.py``) into
+``ShardedLSS``: each shard keeps its own clock, publishes halo messages
+into a ring of R slots, and neighbors read them at a bounded-stale
+offset guarded by per-message sequence numbers.  The contract under
+test:
+
+* staleness=0 is *bitwise identical* to the synchronous engine — same
+  drop streams, same decisions, same every-field state — so flipping
+  the mode on is free until a staleness budget is actually requested;
+* staleness>0 still converges to full agreement and quiesces, while
+  the seq guard provably fires (stale_drops > 0) and the realized
+  delay statistics stay within the budget;
+* ``run()`` publishes staleness gauges for non-noop trackers.
+
+Also pins the drop-RNG continuity contract of ``migrate_from``: an
+epoch swap between engines with equal shard counts carries the drop
+stream verbatim, so an interrupted run is bitwise equal to an
+uninterrupted twin.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lss, sim, topology, wvs
+from repro.engine import EngineConfig, ShardedLSS
+from repro.obs import InMemoryTracker
+
+
+def _problem(topo, seed=0):
+    centers, sample, _, _ = sim.make_problem(
+        sim.ProblemSpec(n=topo.n, seed=seed))
+    rng = np.random.default_rng(seed + 1)
+    x = sample(rng, topo.n)
+    return centers, wvs.from_vector(jnp.asarray(x),
+                                    jnp.ones((topo.n,), jnp.float32))
+
+
+def _assert_states_equal(a: lss.LSSState, b: lss.LSSState, ctx=""):
+    for name in a._fields:
+        av, bv = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert np.array_equal(av, bv), (ctx, name)
+
+
+# ---------------------------------------------------------------------------
+# staleness=0: bitwise parity with the synchronous engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("drop", [0.0, 0.3])
+def test_async_staleness0_bitwise_equals_sync(drop):
+    """The zero-staleness ring (R=1, read your neighbor's current slot)
+    must reproduce the sync engine bit-for-bit — including the per-peer
+    drop streams, which share the same key schedule."""
+    topo = topology.grid(64)
+    centers, inputs = _problem(topo, seed=0)
+    cfg = lss.LSSConfig(drop_rate=drop)
+    sync = ShardedLSS(topo, centers, cfg,
+                      EngineConfig(num_shards=4, cycles_per_dispatch=2))
+    asyn = ShardedLSS(topo, centers, cfg,
+                      EngineConfig(num_shards=4, cycles_per_dispatch=2,
+                                   async_mode=True, staleness=0))
+    s = sync.init(inputs, seed=7)
+    a = asyn.init(inputs, seed=7)
+    for i in range(3):
+        s = sync.run(s, 4)
+        a = asyn.run(a, 4)
+        _assert_states_equal(sync.to_lss_state(s), asyn.to_lss_state(a),
+                             ctx=f"round {i}")
+    # at R=1 nothing lingers in the ring and the seq guard never fires
+    lag = asyn.async_lag_stats(a)
+    assert lag["stale_drops"] == 0
+    assert lag["mean_delay"] == 0.0
+    assert not bool(asyn.async_in_flight(a))
+    # metrics agree too (accuracy/quiescence fold in_flight into quiesce)
+    acc_s, q_s, _ = sync.metrics(s)
+    acc_a, q_a, _ = asyn.metrics(a)
+    assert float(acc_s) == float(acc_a)
+    assert bool(q_s) == bool(q_a)
+
+
+# ---------------------------------------------------------------------------
+# staleness>0: convergence under bounded-stale reads
+# ---------------------------------------------------------------------------
+
+
+def test_async_bounded_staleness_converges_and_guards():
+    """With a 2-cycle staleness budget the halo reads lag, reordering
+    happens (seq guard fires), yet the protocol still reaches full
+    agreement and quiesces — Alg. 1's guarantees survive asynchrony."""
+    topo = topology.grid(64)
+    centers, inputs = _problem(topo, seed=3)
+    cfg = lss.LSSConfig(drop_rate=0.2)
+    asyn = ShardedLSS(topo, centers, cfg,
+                      EngineConfig(num_shards=4, cycles_per_dispatch=2,
+                                   async_mode=True, staleness=2))
+    a = asyn.init(inputs, seed=7)
+    acc = 0.0
+    for _ in range(30):
+        a = asyn.run(a, 4)
+        acc, quiescent, _ = asyn.metrics(a)
+        if float(acc) == 1.0 and bool(quiescent):
+            break
+    assert float(acc) == 1.0
+    assert bool(quiescent)
+    lag = asyn.async_lag_stats(a)
+    assert lag["applied"] > 0
+    assert lag["stale_drops"] > 0  # reordering actually happened
+    # realized delay respects the budget: mean in [0, staleness]
+    assert 0.0 < lag["mean_delay"] <= 2.0
+
+
+def test_async_run_publishes_staleness_gauges():
+    """Non-noop trackers get the engine_async_* gauges after run()."""
+    topo = topology.grid(36)
+    centers, inputs = _problem(topo, seed=4)
+    tr = InMemoryTracker()
+    asyn = ShardedLSS(topo, centers, lss.LSSConfig(),
+                      EngineConfig(num_shards=2, cycles_per_dispatch=2,
+                                   async_mode=True, staleness=1),
+                      tracker=tr)
+    a = asyn.init(inputs, seed=1)
+    a = asyn.run(a, 8)
+    lag = asyn.async_lag_stats(a)
+    g = tr.registry.gauge("engine_async_applied_total")
+    assert g.value() == float(lag["applied"])
+    assert (tr.registry.gauge("engine_async_stale_drops_total").value()
+            == float(lag["stale_drops"]))
+    assert (tr.registry.gauge("engine_async_staleness_mean").value()
+            == pytest.approx(lag["mean_delay"]))
+
+
+# ---------------------------------------------------------------------------
+# drop-RNG continuity across migrate_from epochs
+# ---------------------------------------------------------------------------
+
+
+def test_migrate_from_carries_drop_stream_between_equal_shards():
+    """An epoch swap (rebuild + migrate_from at equal shard count) is
+    bitwise invisible to the message-drop stream: the interrupted run
+    equals the uninterrupted twin on EVERY state field."""
+    topo = topology.grid(64)
+    centers, inputs = _problem(topo, seed=5)
+    cfg = lss.LSSConfig(drop_rate=0.3)
+    ecfg = EngineConfig(num_shards=4, cycles_per_dispatch=2)
+
+    straight = ShardedLSS(topo, centers, cfg, ecfg)
+    st = straight.init(inputs, seed=9)
+    st = straight.run(st, 10)
+
+    eng_a = ShardedLSS(topo, centers, cfg, ecfg)
+    s = eng_a.init(inputs, seed=9)
+    s = eng_a.run(s, 4)
+    rng_before = np.asarray(s.rng)
+    eng_b = ShardedLSS(topo, centers, cfg, ecfg)  # fresh engine, same topo
+    s = eng_b.migrate_from(eng_a, s)
+    # rng carried verbatim — not re-derived from a fresh key schedule
+    assert np.array_equal(np.asarray(s.rng), rng_before)
+    s = eng_b.run(s, 6)
+    _assert_states_equal(straight.to_lss_state(st), eng_b.to_lss_state(s),
+                         ctx="epoch continuity")

@@ -20,6 +20,11 @@ the tracker backend —
   ``block_until_ready`` fence per dispatch), and an always-firing alert
   rule evaluated at every observe boundary.  The worst-case tracing
   window.
+* ``audited`` — :class:`repro.obs.InMemoryTracker` with the audit plane
+  sampling EVERY window (``audit_every=1``): the invariant reductions
+  fold into the jitted observe program and their scalars ride the same
+  round-trip, so the audited dispatch must stay inside the same
+  overhead budget as plain tracking.
 
 Timed windows are interleaved round-robin across the three services so
 slow host drift (thermal, noisy neighbors) lands on all backends alike.
@@ -81,6 +86,8 @@ def run(full: bool = False):
         ("jsonl", JsonlTracker(tmp.name), None, {}),
         ("prom", prom, prom.expose, {}),
         ("traced", InMemoryTracker(max_records=4096), None, traced_cfg),
+        ("audited", InMemoryTracker(max_records=4096), None,
+         {"audit_every": 1}),
     ]
     try:
         services = [(name, _build(topo, specs, k, tr, **cfg), scrape)

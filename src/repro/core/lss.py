@@ -40,7 +40,7 @@ from . import correction, stopping, topology, wvs
 __all__ = [
     "LSSConfig", "TopoArrays", "LSSState", "init_state", "cycle",
     "cycle_impl", "clear_slots", "pad_bucket", "metrics", "metrics_impl",
-    "counter_dtype", "suite_hooks", "COLD_TIMER",
+    "audit_impl", "counter_dtype", "suite_hooks", "COLD_TIMER",
 ]
 
 # Send-timer value of a peer that has never sent: far enough in the past
@@ -482,3 +482,122 @@ def metrics(state: LSSState, topo: TopoArrays, centers: jax.Array,
     decide = lambda v: _regions.decide_voronoi(v, centers)
     acc, quiescent, correct, _ = metrics_impl(state, topo, decide, eps)
     return acc, quiescent, correct
+
+
+def audit_impl(state: LSSState, topo: TopoArrays, decide, eps=1e-9,
+               sample_mod=1, sample_phase=0, settled_ok=None):
+    """Device-side invariant reductions for the audit plane.
+
+    Evaluates the paper's algebraic invariants as pure reductions over the
+    state — everything returned is a scalar, so the service layer folds the
+    whole dict into its existing batched observe round-trip (vmapped over
+    the query axis) at zero extra host transfers.
+
+    **Conservation.**  By the slot involution, summing the status identity
+    ``S_i = X_ii (+) (+)_k (X_ki (-) X_ik)`` over alive peers telescopes:
+    every *settled* slot's in-message is bitwise the reverse slot's
+    out-message (the correction loop only mutates ``out`` where it sets
+    ``pending``, and delivery copies verbatim), so those terms cancel
+    exactly and only in-flight slots (``pending`` on the reverse side, or
+    excluded from ``settled_ok``) contribute.  The residual
+
+        ``(+)_alive S_i  (-)  (+)_alive X_ii  (-)  (+)_infl (in (-) out_rev)``
+
+    is therefore pure rounding noise, bounded by the classic summation
+    bound ``u * N_terms * L1-mass`` — any physical conservation break (a
+    corrupted knowledge vector, a halo repair applied twice) shows up far
+    above ``tol``.
+
+    **Edge symmetry.**  On settled slots ``A_ij = X_ij (+) X_ji`` and
+    ``A_ji = X_ji (+) X_ij`` are the same two IEEE additions in either
+    order — commutativity makes them *bitwise* equal, so the monitor
+    counts exact mismatches (no tolerance).  ``sample_mod``/``sample_phase``
+    rotate a ``1/sample_mod`` slot sample for scale (traced ints — changing
+    them never recompiles); the default checks every slot.
+
+    **Stopping soundness.**  Recomputes quiescence from the reference
+    formulas and counts alive peers whose Def.-4 balance condition fails
+    (``stop_bad``).  The count is returned *ungated*: because Alg. 1's
+    violating set is strictly stronger than Def. 4, a state this very
+    function calls quiescent always has ``stop_bad == 0`` — the host pairs
+    ``stop_bad`` with the quiescence bit the *serving path* claimed, so a
+    fused-kernel or stale metrics path reporting quiescence on a state
+    whose balance conditions fail is caught.
+
+    ``settled_ok`` (bool (n, D) or None) restricts "settled" further — the
+    bounded-staleness engine passes its intra-shard mask so halo slots,
+    whose in/out pairing is legitimately relaxed by the seq-number
+    protocol, move to the in-flight side of the ledger instead of being
+    asserted bitwise.
+
+    Returns a dict of scalars: ``resid``/``tol``/``mag`` (conservation),
+    ``edge_bad``/``edge_checked``, ``stop_bad``/``quiescent``, and
+    ``live_slots``/``msgs``/``t`` passthroughs for the exact counter check
+    host-side.
+    """
+    n, D = topo.nbr.shape
+    live = _live_mask(topo, state.alive)
+    src = topo.nbr * D + topo.rev
+    fl = lambda b: b.reshape(n * D, *b.shape[2:])
+    out_rev_m = fl(state.out_m)[src]
+    out_rev_c = fl(state.out_c)[src]
+    pend_rev = fl(state.pending)[src]
+
+    s = stopping.status(
+        state.x_m, state.x_c, state.out_m, state.out_c,
+        state.in_m, state.in_c, live,
+    )
+    gx_m = jnp.sum(jnp.where(state.alive[:, None], state.x_m, 0.0), axis=0)
+    gx_c = jnp.sum(jnp.where(state.alive, state.x_c, 0.0))
+
+    infl = live & pend_rev
+    if settled_ok is not None:
+        infl = live & (pend_rev | ~settled_ok)
+    sum_s_m = jnp.sum(jnp.where(state.alive[:, None], s.m, 0.0), axis=0)
+    sum_s_c = jnp.sum(jnp.where(state.alive, s.c, 0.0))
+    infl_k = infl[..., None]
+    flight_m = jnp.sum(jnp.where(infl_k, state.in_m - out_rev_m, 0.0),
+                       axis=(0, 1))
+    flight_c = jnp.sum(jnp.where(infl, state.in_c - out_rev_c, 0.0))
+    resid = jnp.maximum(
+        jnp.max(jnp.abs(sum_s_m - gx_m - flight_m)),
+        jnp.abs(sum_s_c - gx_c - flight_c),
+    )
+    mag = (
+        jnp.sum(jnp.where(state.alive[:, None], jnp.abs(state.x_m), 0.0))
+        + jnp.sum(jnp.where(state.alive, jnp.abs(state.x_c), 0.0))
+        + jnp.sum(jnp.where(live[..., None],
+                            jnp.abs(state.in_m) + jnp.abs(out_rev_m), 0.0))
+        + jnp.sum(jnp.where(live,
+                            jnp.abs(state.in_c) + jnp.abs(out_rev_c), 0.0))
+    )
+    u = jnp.finfo(state.x_m.dtype).eps
+    tol = 1e-6 + 4.0 * u * (n * (D + 1)) * mag
+
+    # Edge-agreement symmetry on settled slots (bitwise; rotating sample).
+    settled = live & ~state.pending & ~pend_rev
+    if settled_ok is not None:
+        settled = settled & settled_ok
+    mod = jnp.maximum(jnp.asarray(sample_mod, jnp.int32), 1)
+    sm = ((jnp.arange(n * D, dtype=jnp.int32).reshape(n, D)
+           + jnp.asarray(sample_phase, jnp.int32)) % mod) == 0
+    check = settled & sm
+    a_m = state.out_m + state.in_m
+    a_c = state.out_c + state.in_c
+    mismatch = (jnp.any(a_m != fl(a_m)[src], axis=-1)) | (a_c != fl(a_c)[src])
+    edge_bad = jnp.sum(check & mismatch)
+    edge_checked = jnp.sum(check)
+
+    a = stopping.agreements(state.out_m, state.out_c,
+                            state.in_m, state.in_c)
+    ok4 = stopping.def4_satisfied(decide, s, a, live, eps)
+    stop_bad = jnp.sum(state.alive & ~ok4)
+    viol = stopping.violations_alg1(decide, s, a, live, eps)
+    quiescent = ~jnp.any(state.pending & live) & ~jnp.any(viol)
+
+    return dict(
+        resid=resid, tol=tol, mag=mag,
+        edge_bad=edge_bad, edge_checked=edge_checked,
+        stop_bad=stop_bad, quiescent=quiescent,
+        live_slots=jnp.sum(live), msgs=state.msgs, t=state.t,
+    )

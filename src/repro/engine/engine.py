@@ -267,6 +267,9 @@ class ShardedLSS:
         self._profiled = None
         self._metrics_jit = jax.jit(self._metrics_impl,
                                     static_argnames=("eps",))
+        self._audit_jit = jax.jit(self._audit_impl,
+                                  static_argnames=("eps",))
+        self._audit_async_jit = jax.jit(self._audit_async_impl)
         self._clear_jit = jax.jit(self._clear_slots_impl)
 
     # -- mesh attachment ---------------------------------------------------
@@ -984,6 +987,84 @@ class ShardedLSS:
 
     def total_msgs(self, state):
         return jnp.sum(self._base(state).msgs)
+
+    def _audit_impl(self, state: ShardedState, tables: DeviceTopo, eps=1e-9,
+                    decide=None, sample_mod=1, sample_phase=0):
+        """Unjitted audit body: flatten the shard layout into the core
+        layout and delegate to :func:`repro.core.lss.audit_impl`.
+
+        ``tgt_pos`` IS the flat-neighbor table (``alive.reshape(S*B)
+        [tgt_pos]`` is how :meth:`_metrics_impl` reads neighbor liveness),
+        and ``rev`` holds the reverse slot at the target row, so the flat
+        ``(nbr, mask, rev)`` triple satisfies the slot involution the core
+        reductions are built on — including across shard boundaries.  In
+        async mode the halo slots' in/out pairing is relaxed by the
+        bounded-staleness ring, so they move to the in-flight side of the
+        conservation ledger and out of the bitwise edge check
+        (``settled_ok=intra``); :meth:`_audit_async_impl` covers the
+        transport books instead.  ``decide``/``eps`` may be per-query
+        (traced) overrides when the service vmaps this.
+        """
+        decide = decide if decide is not None else self.decide
+        S, B = self.S, self.B
+        fl = lambda a: a.reshape(S * B, *a.shape[2:])
+        flat_topo = lss.TopoArrays(nbr=fl(tables.tgt_pos),
+                                   mask=fl(tables.mask), rev=fl(tables.rev))
+        flat_state = lss.LSSState(
+            out_m=fl(state.out_m), out_c=fl(state.out_c),
+            in_m=fl(state.in_m), in_c=fl(state.in_c),
+            x_m=fl(state.x_m), x_c=fl(state.x_c),
+            pending=fl(state.pending), last_send=fl(state.last_send),
+            alive=fl(state.alive), t=state.t, msgs=jnp.sum(state.msgs),
+            rng=state.rng[0])
+        settled_ok = fl(tables.intra) if self.ecfg.async_mode else None
+        return lss.audit_impl(flat_state, flat_topo, decide, eps=eps,
+                              sample_mod=sample_mod,
+                              sample_phase=sample_phase,
+                              settled_ok=settled_ok)
+
+    def _audit_async_impl(self, astate: AsyncShardedState,
+                          tables: DeviceTopo):
+        """Async-monotonicity reductions over the transport books.
+
+        ``snd[src, dst, h]`` is the sender-side out-slot counter — the
+        supremum of every seq that slot has ever stamped into flight.  Two
+        invariants follow: the receiver's last *applied* seq never exceeds
+        it (``seq_bad``), and no live ring publication carries a stamp
+        beyond it (``ring_bad``).  Either count going positive means a
+        per-link sequence number regressed — the exact fault Alg. 1's
+        monotone guard assumes away.
+        """
+        S = self.S
+        h = tables.halo
+        snd = jax.vmap(lambda sq, r, sl: sq[r, sl])(
+            astate.out_seq, h.send_row, h.send_slot)  # (S_src, S_dst, H)
+        cur = astate.last_seq[jnp.arange(S)[:, None, None],
+                              h.recv_row, h.recv_slot]  # (S_dst, S_src, H)
+        ok = jnp.swapaxes(h.send_ok, 0, 1)
+        seq_bad = jnp.sum(ok & (cur > jnp.swapaxes(snd, 0, 1)))
+        ring_bad = jnp.sum(astate.ring_flag & h.send_ok[None]
+                           & (astate.ring_seq > snd[None]))
+        return dict(seq_bad=seq_bad, ring_bad=ring_bad,
+                    stale_drops=jnp.sum(astate.stale_drops),
+                    in_flight=self.async_in_flight(astate))
+
+    def audit(self, state, eps: float = 1e-9, sample_mod: int = 1,
+              sample_phase: int = 0) -> dict:
+        """Host-side audit read: raw invariant reductions as a dict of
+        Python scalars.  Accepts either state kind; an async state adds
+        the seq-monotonicity counters and the cumulative stale-drop total
+        (reconciled against ``engine_async_stale_drops_total`` by
+        :mod:`repro.obs.audit`).  One jit dispatch (+1 for async books);
+        the sampling knobs are traced, so changing them never recompiles.
+        """
+        raw = dict(self._audit_jit(
+            self._base(state), self._tables, eps=eps,
+            sample_mod=jnp.asarray(sample_mod, jnp.int32),
+            sample_phase=jnp.asarray(sample_phase, jnp.int32)))
+        if isinstance(state, AsyncShardedState):
+            raw.update(self._audit_async_jit(state, self._tables))
+        return {k: v.item() for k, v in raw.items()}
 
     def to_lss_state(self, state) -> lss.LSSState:
         """Unpermute into a core :class:`LSSState` (parity tests, debug).

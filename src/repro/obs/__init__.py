@@ -27,8 +27,16 @@ package is the one interface those observables flow through:
 * :mod:`.alerts` — :class:`AlertRule` / :class:`AlertEngine`, sustained
   metric predicates emitting ``kind="alert"`` records.
 * :mod:`.schema` — the golden record schema + validators.
+* :mod:`.audit` — the audit plane: online monitors for the paper's
+  algebraic invariants (conservation, edge symmetry, stopping
+  soundness, async seq monotonicity) over device-side reductions,
+  ``kind="audit"`` records, and the :class:`AuditFaults` injection
+  harness the monitors are proven against.
+* :mod:`.forensics` — first-violation provenance: join audit records
+  with the trace forest (``python -m repro.obs.forensics dump.jsonl``).
 * :mod:`.dashboard` — per-tenant / fleet text dashboards over a record
-  stream, histogram bars, and the causal :func:`trace_view`.
+  stream, histogram bars, audit summaries (:func:`render_audits`), and
+  the causal :func:`trace_view`.
 
 Everything is stdlib-only host-side code: trackers never touch device
 arrays (the :class:`ProfiledDispatch` fence only *moves* a sync the
@@ -39,26 +47,32 @@ makes.
 
 from .metrics import (Counter, DEFAULT_COUNT_BUCKETS, DEFAULT_TIME_BUCKETS,
                       Gauge, Histogram, MetricsRegistry)
-from .schema import (ALERT_OPTIONAL, ALERT_REQUIRED, CONTROL_OPTIONAL,
+from .schema import (ALERT_OPTIONAL, ALERT_REQUIRED, AUDIT_OPTIONAL,
+                     AUDIT_REQUIRED, CONTROL_OPTIONAL,
                      CONTROL_REQUIRED, FLIGHT_OPTIONAL, FLIGHT_REQUIRED,
                      PER_QUERY_OPTIONAL, PER_QUERY_REQUIRED, SPAN_OPTIONAL,
                      SPAN_REQUIRED, validate_record, validate_stream)
 from .tracker import (InMemoryTracker, JsonlTracker, NoopTracker,
                       PrometheusTextTracker, Span, Tracker, jit_cache_size)
 from .alerts import AlertEngine, AlertRule
+from .audit import AuditFaults, AuditReport
 from .flight import FlightRecorder
 from .profile import ProfiledDispatch, profiler_session
 from .push import PushTracker
 from .trace import SpanNode, TenantTrace, TraceForest, assemble
-from .dashboard import (render_controls, render_dashboard,
+from .dashboard import (render_audits, render_controls, render_dashboard,
                         render_fleet_header, render_histogram, sparkline,
                         trace_view)
 
 __all__ = [
     "ALERT_OPTIONAL",
     "ALERT_REQUIRED",
+    "AUDIT_OPTIONAL",
+    "AUDIT_REQUIRED",
     "AlertEngine",
     "AlertRule",
+    "AuditFaults",
+    "AuditReport",
     "CONTROL_OPTIONAL",
     "CONTROL_REQUIRED",
     "Counter",
@@ -88,6 +102,7 @@ __all__ = [
     "assemble",
     "jit_cache_size",
     "profiler_session",
+    "render_audits",
     "render_controls",
     "render_dashboard",
     "render_fleet_header",

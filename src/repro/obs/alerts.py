@@ -45,6 +45,10 @@ class AlertRule(NamedTuple):
       labels: label filter — a series matches when it contains every
         ``(k, v)`` pair (empty = every series; a missing series never
         matches).
+      percentile: for histogram metrics, watch this bucketed percentile
+        (e.g. ``95.0``) instead of the running mean — tail-latency SLOs
+        fire on the tail, not on an average a few fast samples can hide.
+        Ignored for counters/gauges.
     """
 
     name: str
@@ -54,6 +58,7 @@ class AlertRule(NamedTuple):
     predicate: Optional[Callable[[float], bool]] = None
     sustain: int = 1
     labels: Tuple[Tuple[str, str], ...] = ()
+    percentile: Optional[float] = None
 
     def matches(self, value: float) -> bool:
         if self.above is not None and not value > self.above:
@@ -69,15 +74,22 @@ class AlertRule(NamedTuple):
         return all(labels.get(k) == v for k, v in self.labels)
 
 
-def _series_values(inst) -> Iterator[Tuple[dict, float]]:
+def _series_values(inst, percentile: Optional[float] = None
+                   ) -> Iterator[Tuple[dict, float]]:
     """(labels, scalar) per series: counters/gauges verbatim, histograms
-    by running mean."""
+    by running mean — or by the requested bucketed percentile."""
     if isinstance(inst, (Counter, Gauge)):
         yield from inst.series()
     elif isinstance(inst, Histogram):
         for labels, (counts, total) in inst.series():
             n = sum(counts)
-            if n:
+            if not n:
+                continue
+            if percentile is not None:
+                v = inst.percentile(percentile, **labels)
+                if v is not None:
+                    yield labels, v
+            else:
                 yield labels, total / n
 
 
@@ -111,7 +123,8 @@ class AlertEngine:
         out: List[dict] = []
         for rule in self.rules:
             inst = self.registry.get(rule.metric)
-            series = list(_series_values(inst)) if inst is not None else []
+            series = (list(_series_values(inst, rule.percentile))
+                      if inst is not None else [])
             seen = set()
             for labels, value in series:
                 if not rule.label_filter(labels):
@@ -148,6 +161,8 @@ class AlertEngine:
                "value": float(value), "state": state,
                "sustain": int(rule.sustain),
                "labels": {k: str(v) for k, v in sorted(labels.items())}}
+        if rule.percentile is not None:
+            rec["percentile"] = float(rule.percentile)
         rec.update(context)
         rec.setdefault("dispatch", 0)
         rec.setdefault("t", 0)

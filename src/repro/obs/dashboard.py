@@ -18,7 +18,8 @@ from __future__ import annotations
 from typing import Dict, Iterable, List, Optional, Union
 
 __all__ = ["sparkline", "render_dashboard", "render_fleet_header",
-           "render_controls", "render_histogram", "trace_view"]
+           "render_controls", "render_histogram", "render_audits",
+           "trace_view"]
 
 _BLOCKS = "▁▂▃▄▅▆▇█"
 
@@ -145,6 +146,24 @@ def render_controls(records: List[dict], tail: int = 5) -> str:
             bits.append(f"spans {len(r['spans'])} "
                         f"(max {busiest[0]} {busiest[1] * 1e3:.2f}ms)")
         lines.append("control: " + ", ".join(bits))
+    return "\n".join(lines)
+
+
+def render_audits(records: List[dict], tail: int = 5) -> str:
+    """Audit-plane summary: window/violation counts + the last few
+    verdicts (failing windows take precedence over clean ones)."""
+    auds = [r for r in records if r.get("kind") == "audit"]
+    if not auds:
+        return "audit: no records"
+    bad = [r for r in auds if not r.get("ok", True)]
+    lines = [f"audit: {len(auds)} windows, {len(bad)} violations"]
+    for r in (bad or auds)[-tail:]:
+        failed = sorted(m for m, held in r.get("monitors", {}).items()
+                        if not held)
+        verdict = "ok" if r.get("ok", True) else "VIOL " + ",".join(failed)
+        lines.append(f"  d{r.get('dispatch')} {r.get('query')}: {verdict}  "
+                     f"resid {r.get('residual', 0.0):.2g}"
+                     f"/{r.get('tol', 0.0):.2g}")
     return "\n".join(lines)
 
 

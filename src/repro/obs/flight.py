@@ -67,6 +67,12 @@ class FlightRecorder(Tracker):
         """Ring contents oldest-first (a copy)."""
         return list(self._ring)
 
+    def records_of_kind(self, kind: str) -> List[dict]:
+        """Ring records of one kind, oldest-first (e.g. ``"audit"`` —
+        what forensics reads out of a triggered dump before it is even
+        written)."""
+        return [r for r in self._ring if r.get("kind") == kind]
+
     def __len__(self) -> int:
         return len(self._ring)
 

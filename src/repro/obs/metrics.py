@@ -177,6 +177,48 @@ class Histogram(_Instrument):
         n = self.count(**labels)
         return self.total(**labels) / n if n else None
 
+    def percentile(self, p: float, **labels) -> Optional[float]:
+        """Prometheus-style bucketed quantile estimate for one label
+        series (``0 < p < 100``), or None with no samples.
+
+        The rank is resolved against the cumulative bucket counts and
+        linearly interpolated within the chosen bucket (lower edge =
+        previous bucket's upper bound, 0 below the first bucket) — the
+        same estimate ``histogram_quantile()`` would produce from the
+        text exposition, so alert thresholds tested here transfer to a
+        real scrape stack.  Ranks landing in the +Inf bucket clamp to
+        the highest finite bound: an over-range p99 reads as "at least
+        the last bucket edge", never an invented value.
+        """
+        if not 0.0 < p < 100.0:
+            raise ValueError(f"percentile must be in (0, 100), got {p}")
+        counts = self._counts.get(_key(labels))
+        n = sum(counts) if counts else 0
+        if not n:
+            return None
+        rank = p / 100.0 * n
+        cum = 0
+        lo = 0.0
+        for ub, c in zip(self.buckets, counts):
+            prev = cum
+            cum += c
+            if cum >= rank:
+                if not c:
+                    return float(ub)
+                frac = (rank - prev) / c
+                return float(lo + (ub - lo) * min(max(frac, 0.0), 1.0))
+            lo = ub
+        return float(self.buckets[-1]) if self.buckets else None
+
+    def p50(self, **labels) -> Optional[float]:
+        return self.percentile(50.0, **labels)
+
+    def p95(self, **labels) -> Optional[float]:
+        return self.percentile(95.0, **labels)
+
+    def p99(self, **labels) -> Optional[float]:
+        return self.percentile(99.0, **labels)
+
     def series(self) -> Iterator[Tuple[dict, Tuple[List[int], float]]]:
         for k, counts in self._counts.items():
             yield dict(k), (list(counts), self._sums[k])

@@ -74,13 +74,34 @@ dump, see :mod:`repro.obs.flight`)::
 
     kind     "flight"
     reason   str    trigger (slo_violation, eviction, epoch, alert,
-                    crash, manual)
+                    audit_violation, crash, manual)
     records  int    ring records that follow
 
     (when present)
     dispatch int    dispatch ordinal at dump time
     t        int    global cycle count at dump time
     error    str    exception repr (crash dumps)
+
+**Audit** (``kind: "audit"``; one per audited dispatch per active slot,
+see :mod:`repro.obs.audit` — the evaluated invariant monitors)::
+
+    kind       "audit"
+    dispatch   int    dispatch ordinal the audit window covers
+    t          int    global cycle count after the dispatch
+    query      str    tenant's query id
+    slot       int    slot index
+    ok         bool   every monitor held
+    violations int    number of monitors that fired
+    residual   float  conservation residual (max-abs over components)
+    tol        float  the residual's rounding-model tolerance
+    trace_id   str    the tenant's causal trace id
+
+    (when present)
+    monitors   {name: bool}  per-monitor verdict (True = held)
+    edge_bad / edge_checked / stop_bad / seq_bad / ring_bad /
+    stale_drops / msgs / live_slots      int    raw reduction counters
+    quiescent / claimed_quiescent        bool   recomputed vs claimed
+    mag                                  float  conservation L1 mass
 
 :func:`validate_record` checks one dict against this schema and returns
 a list of problem strings (empty = valid); :func:`validate_stream` maps
@@ -94,7 +115,8 @@ from typing import Iterable, List, Tuple
 __all__ = ["PER_QUERY_REQUIRED", "PER_QUERY_OPTIONAL", "CONTROL_REQUIRED",
            "CONTROL_OPTIONAL", "SPAN_REQUIRED", "SPAN_OPTIONAL",
            "ALERT_REQUIRED", "ALERT_OPTIONAL", "FLIGHT_REQUIRED",
-           "FLIGHT_OPTIONAL", "validate_record", "validate_stream"]
+           "FLIGHT_OPTIONAL", "AUDIT_REQUIRED", "AUDIT_OPTIONAL",
+           "validate_record", "validate_stream"]
 
 _BOOL = (bool,)
 _INT = (int,)          # bool is excluded explicitly below
@@ -168,6 +190,7 @@ ALERT_REQUIRED = {
 ALERT_OPTIONAL = {
     "labels": _DICT,
     "sustain": _INT,
+    "percentile": _NUM,  # histogram rules watching a tail quantile
 }
 
 FLIGHT_REQUIRED = {
@@ -182,11 +205,40 @@ FLIGHT_OPTIONAL = {
     "error": _STR,
 }
 
+AUDIT_REQUIRED = {
+    "kind": _STR,
+    "dispatch": _INT,
+    "t": _INT,
+    "query": _STR,
+    "slot": _INT,
+    "ok": _BOOL,
+    "violations": _INT,
+    "residual": _NUM,
+    "tol": _NUM,
+    "trace_id": _STR,
+}
+
+AUDIT_OPTIONAL = {
+    "monitors": _DICT,
+    "edge_bad": _INT,
+    "edge_checked": _INT,
+    "stop_bad": _INT,
+    "seq_bad": _INT,
+    "ring_bad": _INT,
+    "stale_drops": _INT,
+    "msgs": _INT,
+    "live_slots": _INT,
+    "quiescent": _BOOL,
+    "claimed_quiescent": _BOOL,
+    "mag": _NUM,
+}
+
 _KINDS = {
     "control": (CONTROL_REQUIRED, CONTROL_OPTIONAL),
     "span": (SPAN_REQUIRED, SPAN_OPTIONAL),
     "alert": (ALERT_REQUIRED, ALERT_OPTIONAL),
     "flight": (FLIGHT_REQUIRED, FLIGHT_OPTIONAL),
+    "audit": (AUDIT_REQUIRED, AUDIT_OPTIONAL),
 }
 
 

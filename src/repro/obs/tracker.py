@@ -235,6 +235,11 @@ class _RecordStore:
     def controls(self) -> List[dict]:
         return [r for r in self._records if r.get("kind") == "control"]
 
+    def audits(self, query_id: Optional[str] = None) -> List[dict]:
+        """Retained ``kind="audit"`` records (optionally one tenant's)."""
+        return [r for r in self._records if r.get("kind") == "audit"
+                and (query_id is None or r.get("query") == query_id)]
+
     def last_by_query(self) -> Dict[str, dict]:
         out: Dict[str, dict] = {}
         for r in self._records:

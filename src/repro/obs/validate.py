@@ -11,9 +11,12 @@ Two modes:
   then validate the emitted stream AND assert (a) the host-boundary
   spans (``membership_drain``, ``admission_drain``, ``ingest_apply``,
   ``dispatch``, ``observe``) appear with nonzero timings in a control
-  record, and (b) the ``kind="span"`` records assemble into a complete
+  record, (b) the ``kind="span"`` records assemble into a complete
   causal trace forest — no orphan ``parent_id``, every tenant trace id
-  rooted at an ``admission`` span with a ``dispatch`` descendant.
+  rooted at an ``admission`` span with a ``dispatch`` descendant — and
+  (c) the audit plane ran (``audit_every=1``): every audited window
+  emitted ``kind="audit"`` records and the clean churn run produced
+  ZERO invariant violations.
 
 Exit status 0 on a clean stream, 1 with per-line diagnostics otherwise —
 wired into CI (and ``make obs-validate``) so a schema drift or a span
@@ -69,7 +72,8 @@ def _churn_run(path: str) -> None:
     with JsonlTracker(path, keep=False) as tracker:
         with Service(dyn, ServiceConfig(capacity=4, k_max=3, d=2,
                                         cycles_per_dispatch=4,
-                                        profile_dispatch=True, alerts=rules),
+                                        profile_dispatch=True, alerts=rules,
+                                        audit_every=1),
                      tracker=tracker) as svc:
             for spec in heterogeneous_tenants(dyn.n, 4):
                 svc.admit(spec)
@@ -131,6 +135,30 @@ def _check_trace_tree(path: str) -> List[str]:
     return problems
 
 
+def _check_audit(path: str) -> List[str]:
+    """The audit plane must have run (``audit_every=1``) and the clean
+    churn workload must not trip a single invariant monitor — a
+    violation here means the algebra itself broke under churn."""
+    audits = [json.loads(line) for line in open(path)
+              if line.strip() and '"audit"' in line]
+    audits = [r for r in audits if r.get("kind") == "audit"]
+    problems: List[str] = []
+    if not audits:
+        problems.append("churn run emitted no kind=\"audit\" record "
+                        "(audit plane did not run)")
+        return problems
+    for r in audits:
+        if not r.get("ok", False):
+            failed = sorted(m for m, held in r.get("monitors", {}).items()
+                            if not held)
+            problems.append(
+                f"audit violation on clean run: dispatch "
+                f"{r.get('dispatch')} query {r.get('query')!r} monitors "
+                f"{failed} (residual {r.get('residual')!r} / tol "
+                f"{r.get('tol')!r})")
+    return problems
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if argv and argv[0] in ("-h", "--help"):
@@ -149,6 +177,7 @@ def main(argv=None) -> int:
     if self_check:
         messages.extend(_check_boundary_spans(path))
         messages.extend(_check_trace_tree(path))
+        messages.extend(_check_audit(path))
 
     if messages:
         print(f"telemetry contract FAILED for {path}:", file=sys.stderr)

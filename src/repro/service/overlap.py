@@ -66,6 +66,8 @@ class PendingWindow(NamedTuple):
     events: list  # control events swapped out at launch
     spans: dict  # boundary span seconds swapped out at launch
     counts: dict  # boundary work counts swapped out at launch
+    audit: Any = None  # dict of (Q,) device audit reductions, or None
+    # when this window was not sampled (scfg.audit_every)
 
 
 class BufferReshape(RuntimeError):

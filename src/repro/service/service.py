@@ -59,6 +59,7 @@ from repro.core import lss, regions, topology, wvs
 from repro.kernels import suite as kernel_suite
 from repro.obs import (AlertEngine, FlightRecorder, ProfiledDispatch,
                        Tracker, jit_cache_size)
+from repro.obs import audit as obs_audit
 from repro.obs import metrics as obs_metrics
 
 from . import query as qmod
@@ -147,6 +148,15 @@ class ServiceConfig(NamedTuple):
     # under overlap by only serializing every Nth dispatch.
     overlap: bool = False  # overlap host boundary with in-flight dispatch
     profile_sample_every: int = 1  # dispatch-attribution fence cadence
+    # Audit plane (repro.obs.audit): every Nth dispatch the observation
+    # pass additionally evaluates the paper's algebraic invariants as
+    # device-side reductions (conservation, edge symmetry, stopping
+    # soundness) and emits schema'd kind="audit" records + the
+    # audit_violations_total / audit_residual metrics.  The reductions
+    # ride the SAME batched observe round-trip — zero extra host
+    # transfers — and audited state is read-only, so results stay
+    # bitwise identical with auditing on or off.  0 disables.
+    audit_every: int = 0  # audit the observe pass every N dispatches
 
 
 class _Preempted(NamedTuple):
@@ -244,6 +254,14 @@ class _CoreBackend:
 
     def metrics(self, st: lss.LSSState, decide, eps, topo):
         return lss.metrics_impl(st, topo, decide, eps=eps)
+
+    def audit(self, st: lss.LSSState, decide, eps, topo):
+        return lss.audit_impl(st, topo, decide, eps=eps)
+
+    def capacity_slots(self) -> int:
+        """n * D message-slot capacity: the static per-cycle send bound
+        the audit plane's exact counter check uses (sound under churn)."""
+        return int(self.ta.nbr.shape[0] * self.ta.nbr.shape[1])
 
     def msgs_of(self, states) -> np.ndarray:
         return np.asarray(states.msgs)  # (Q,)
@@ -354,6 +372,14 @@ class _EngineBackend:
 
     def metrics(self, st, decide, eps, topo):
         return self.eng._metrics_impl(st, topo, eps=eps, decide=decide)
+
+    def audit(self, st, decide, eps, topo):
+        return self.eng._audit_impl(st, topo, eps=eps, decide=decide)
+
+    def capacity_slots(self) -> int:
+        """S * B * D capacity (padding rows included — still a sound
+        upper bound on per-cycle sends)."""
+        return int(self.eng.S * self.eng.B * self.eng.D)
 
     def msgs_of(self, states) -> np.ndarray:
         return np.asarray(states.msgs).sum(axis=-1)  # (Q, S) -> (Q,)
@@ -640,6 +666,10 @@ class Service:
                              sample_every=scfg.profile_sample_every)
             if scfg.profile_dispatch else self._step)
         self._observe = jax.jit(self._observe_impl)
+        # The audited observe variant is a SEPARATE jitted program: the
+        # audit_every cadence is decided host-side between two cached
+        # executables, so sampling never retraces either one.
+        self._observe_audit = jax.jit(self._observe_audit_impl)
         # Overlap machinery (used by sync mode too: the double buffer's
         # reshape canary and the staged-epoch books are mode independent;
         # _pending only ever holds a window under scfg.overlap).
@@ -725,6 +755,18 @@ class Service:
             acc, quiescent, _, want = self.backend.metrics(
                 st, qmod.decide_fn(qp.regions), qp.eps, topo)
             return acc, quiescent, want
+        return jax.vmap(one)(states, params)
+
+    def _observe_audit_impl(self, states, params: qmod.QueryParams, topo):
+        # Identical to _observe_impl plus the audit-plane reductions — a
+        # dict of per-slot scalars that rides the same round-trip, so an
+        # audited window costs zero extra host transfers.
+        def one(st, qp):
+            decide = qmod.decide_fn(qp.regions)
+            acc, quiescent, _, want = self.backend.metrics(
+                st, decide, qp.eps, topo)
+            return acc, quiescent, want, self.backend.audit(
+                st, decide, qp.eps, topo)
         return jax.vmap(one)(states, params)
 
     # -- admission (between dispatches) ------------------------------------
@@ -1334,7 +1376,10 @@ class Service:
         window.  Record content is identical to sync mode either way.
         """
         try:
-            with self._obs.span("tick", dispatch=self.dispatches):
+            # dispatches increments mid-tick (at _launch); the root span
+            # is labeled with the dispatch this tick RUNS, so its attr
+            # matches the window records it causally covers.
+            with self._obs.span("tick", dispatch=self.dispatches + 1):
                 return self._tick_inner(cycles)
         except Exception as e:
             self._auto_flight_dump("crash", error=repr(e))
@@ -1414,7 +1459,16 @@ class Service:
         """Enqueue the observation pass right behind the dispatch and
         capture the host bookkeeping its records will be built from.
         The returned arrays are futures — nothing here syncs."""
-        acc, quiescent, want = self._observe(self.states, params, topo)
+        ae = self.scfg.audit_every
+        if ae and (self.dispatches - 1) % ae == 0:
+            # Audited window: the audit reductions fold into the same
+            # observe program (dispatches was just incremented, so the
+            # first window is always audited).
+            acc, quiescent, want, audit = self._observe_audit(
+                self.states, params, topo)
+        else:
+            acc, quiescent, want = self._observe(self.states, params, topo)
+            audit = None
         msgs = self.backend.msgs_device(self.states)
         self.states = self.backend.reset_msgs(self.states)
         events, self._ctrl_events = self._ctrl_events, []
@@ -1430,7 +1484,7 @@ class Service:
             preempted=tuple(self._preempted),
             topo_version=self._applied_version,
             edges=self._edges,
-            events=events, spans=spans, counts=counts)
+            events=events, spans=spans, counts=counts, audit=audit)
 
     def flush(self) -> list:
         """Finish the pending overlapped window without launching a new
@@ -1478,18 +1532,21 @@ class Service:
         (bitwise the old single-pass tick); overlap mode calls it one
         tick later, while the next dispatch occupies the device."""
         with self._obs.span(
-                "observe",
+                "observe", dispatch=w.dispatch,
                 trace=tuple(self._trace_ids[qid] for qid, _slot in w.active
                             if qid in self._trace_ids)) as sp:
-            # ONE host sync for the whole fleet: metrics, message counts
-            # and the correction-iteration totals ride the same batched
-            # round trip the observation pass always made.
+            # ONE host sync for the whole fleet: metrics, message counts,
+            # the correction-iteration totals and (on sampled windows)
+            # the audit reductions ride the same batched round trip the
+            # observation pass always made.
             acc, quiescent, want = (np.asarray(w.acc),
                                     np.asarray(w.quiescent),
                                     np.asarray(w.want))
             msgs = np.asarray(w.msgs)
             corr_iters = (np.asarray(w.corr_iters)
                           if w.corr_iters is not None else None)
+            audit_raw = (jax.tree_util.tree_map(np.asarray, w.audit)
+                         if w.audit is not None else None)
         # The window's own observe cost belongs to ITS control record.
         w.spans["observe"] = sp.seconds
         reg = self.tracker.registry
@@ -1541,6 +1598,33 @@ class Service:
                 corr_hist.observe(int(corr_iters[slot]), query=qid)
             self._obs.log_record(rec)
             records.append(rec)
+        # Audit plane: on sampled windows, evaluate the invariant
+        # reductions per active slot and emit kind="audit" records.
+        audit_bad = False
+        if audit_raw is not None:
+            max_sent = w.k * self.backend.capacity_slots()
+            for qid, slot in w.active:
+                raw = {key: v[slot] for key, v in audit_raw.items()}
+                rep = obs_audit.evaluate(
+                    raw, claimed_quiescent=bool(quiescent[slot]),
+                    max_sent=max_sent)
+                arec = obs_audit.record(
+                    rep, dispatch=w.dispatch, t=w.t, query=qid, slot=slot,
+                    trace_id=self._trace_ids.get(qid, ""))
+                self._obs.log_record(arec)
+                reg.gauge("audit_residual",
+                          "conservation residual of the last audited "
+                          "window (absolute, tolerance-gated)").set(
+                              arec["residual"], query=qid)
+                if not rep.ok:
+                    audit_bad = True
+                    for m, held in rep.monitors.items():
+                        if not held:
+                            reg.counter(
+                                "audit_violations_total",
+                                "audit-plane invariant violations, per "
+                                "query and monitor").inc(
+                                    1, query=qid, monitor=m)
         halo_bytes = self.backend.halo_bytes_per_cycle()
         if halo_bytes and records:
             reg.counter(
@@ -1571,9 +1655,13 @@ class Service:
                 if a["state"] == "firing":
                     fired.append(a)
                 self._obs.log_record(a)
-        # Flight-recorder trigger set for this window.
+        # Flight-recorder trigger set for this window.  An invariant
+        # violation outranks the service-level triggers: it means the
+        # algorithm itself broke, not just its operating envelope.
         trigger = None
-        if any(r.get("slo_ok") is False for r in records):
+        if audit_bad:
+            trigger = "audit_violation"
+        elif any(r.get("slo_ok") is False for r in records):
             trigger = "slo_violation"
         elif any(kind == "evicted" for kind, _ in w.events):
             trigger = "eviction"
@@ -1583,36 +1671,49 @@ class Service:
             trigger = "alert"
         self._emit_control_record(w)
         if trigger is not None:
-            self._auto_flight_dump(trigger)
+            # Stamp the dump with the WINDOW's counters: under overlap
+            # the live ones already advanced past the window that
+            # tripped the trigger.
+            self._auto_flight_dump(trigger, dispatch=w.dispatch, t=w.t)
         return records
 
     # -- flight recorder ---------------------------------------------------
     def dump_flight_recorder(self, path: Optional[str] = None,
-                             reason: str = "manual") -> str:
+                             reason: str = "manual",
+                             dispatch: Optional[int] = None,
+                             t: Optional[int] = None) -> str:
         """Write the flight-recorder ring (last ``flight_capacity``
         records + spans) as JSONL and return the path.  Default path:
         ``flight-d<dispatch>-<reason>.jsonl`` under ``flight_dump_dir``
-        (or the CWD when unset)."""
+        (or the CWD when unset).  ``dispatch`` / ``t`` override the
+        header's counters (triggered dumps pass the offending WINDOW's
+        values, which under overlap lag the live ones)."""
+        dispatch = self.dispatches if dispatch is None else dispatch
+        t = self.cycles if t is None else t
         if path is None:
             base = self.scfg.flight_dump_dir or "."
             os.makedirs(base, exist_ok=True)
             path = os.path.join(
-                base, f"flight-d{self.dispatches:06d}-{reason}.jsonl")
-        return self._obs.dump(path, reason=reason,
-                              dispatch=self.dispatches, t=self.cycles)
+                base, f"flight-d{dispatch:06d}-{reason}.jsonl")
+        return self._obs.dump(path, reason=reason, dispatch=dispatch, t=t)
 
-    def _auto_flight_dump(self, reason: str, **context) -> Optional[str]:
-        """Automatic dump on SLO violation / eviction / epoch / alert /
-        crash — only when the service was configured with a dump dir
-        (manual :meth:`dump_flight_recorder` works regardless)."""
+    def _auto_flight_dump(self, reason: str, dispatch: Optional[int] = None,
+                          t: Optional[int] = None,
+                          **context) -> Optional[str]:
+        """Automatic dump on audit / SLO violation / eviction / epoch /
+        alert / crash — only when the service was configured with a dump
+        dir (manual :meth:`dump_flight_recorder` works regardless).
+        ``dispatch`` / ``t`` default to the live counters; window-scoped
+        triggers pass the window's own."""
         base = self.scfg.flight_dump_dir
         if base is None:
             return None
+        dispatch = self.dispatches if dispatch is None else dispatch
+        t = self.cycles if t is None else t
         os.makedirs(base, exist_ok=True)
         path = os.path.join(
-            base, f"flight-d{self.dispatches:06d}-{reason}.jsonl")
-        return self._obs.dump(path, reason=reason,
-                              dispatch=self.dispatches, t=self.cycles,
+            base, f"flight-d{dispatch:06d}-{reason}.jsonl")
+        return self._obs.dump(path, reason=reason, dispatch=dispatch, t=t,
                               **context)
 
     def _emit_control_record(self, w: PendingWindow) -> None:

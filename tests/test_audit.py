@@ -1,0 +1,400 @@
+"""Audit plane: invariant monitors, fault injection, forensics.
+
+The contract under test is *selectivity*: each monitor holds on every
+clean state the stack can produce (core, sharded engine, bounded-
+staleness async engine, both service backends), and each injected fault
+fires exactly its matching monitor — which is what makes the suite
+evidence that the monitors are independent invariant checks rather than
+one aggregate alarm.  On top of that: the service's audited observe is a
+pure observer (audit-on vs audit-off states and telemetry are bitwise
+identical), a detected violation raises the ``audit_violation`` flight
+trigger and the ``audit_violations_total`` counter, and forensics joins
+the first failing audit record back to its dispatch span.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lss, regions, sim, stopping, topology, wvs
+from repro.engine import EngineConfig, ShardedLSS
+from repro.obs import AuditFaults, InMemoryTracker, validate_stream
+from repro.obs import audit as audit_mod
+from repro.obs import forensics
+from repro.service import QuerySpec, Service, ServiceConfig
+
+# ---------------------------------------------------------------------------
+# fixtures: one converged-ish core state + engines over the same problem
+# ---------------------------------------------------------------------------
+
+
+def _problem(n=36, seed=1):
+    spec = sim.ProblemSpec(n=n, k=3, d=2, seed=seed)
+    centers, sample, _, _ = sim.make_problem(spec)
+    x = sample(np.random.default_rng(seed + 1), n)
+    return np.asarray(centers), x
+
+
+def _core_state(topo, centers, x, cycles=6, seed=7):
+    ta = lss.TopoArrays.from_topology(topo)
+    inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((topo.n,)))
+    st = lss.init_state(ta, inputs, seed=seed)
+    cfg = lss.LSSConfig()
+    c = jnp.asarray(centers)
+    decide = regions.VoronoiRegions(c).decide
+    for _ in range(cycles):
+        st, _ = lss.cycle(st, ta, c, cfg)
+    return st, ta, decide, cfg
+
+
+def _engine(topo, centers, x, async_mode=False, staleness=0, dispatches=3,
+            seed=7):
+    cfg = lss.LSSConfig()
+    ecfg = (EngineConfig(num_shards=4, cycles_per_dispatch=2,
+                         async_mode=True, staleness=staleness)
+            if async_mode else
+            EngineConfig(num_shards=4, cycles_per_dispatch=2))
+    eng = ShardedLSS(topo, jnp.asarray(centers), cfg, ecfg)
+    inputs = wvs.from_vector(jnp.asarray(x), jnp.ones((topo.n,)))
+    st = eng.init(inputs, seed=seed)
+    st = eng.run(st, dispatches)
+    return eng, st
+
+
+def _flip_delta(state, topo_arrays, centers, row=0):
+    """A data-vector skew that provably moves ``row``'s status vector
+    onto a DIFFERENT center: ``delta = c_t * s_c - s_m`` makes the new
+    status vector exactly ``c_t``.  Deterministic — no magic constants
+    that happen to cross a Voronoi boundary on one seed."""
+    s_m, s_c = stopping.status(state.x_m, state.x_c, state.out_m,
+                               state.out_c, state.in_m, state.in_c,
+                               topo_arrays.mask)
+    v = np.asarray(s_m[row]) / float(s_c[row])
+    cur = int(np.argmin(((np.asarray(centers) - v) ** 2).sum(-1)))
+    tgt = (cur + 1) % len(centers)
+    return jnp.asarray(np.asarray(centers)[tgt] * float(s_c[row])
+                       - np.asarray(s_m[row]))
+
+
+FAULTS = ("corrupt_knowledge", "drop_halo_message", "skew_migration")
+#: fault -> the ONE monitor it must fire.
+FIRES = {"corrupt_knowledge": "conservation",
+         "drop_halo_message": "edge",
+         "skew_migration": "stopping"}
+
+
+def _apply_fault(fault, state, ta, centers):
+    if fault == "corrupt_knowledge":
+        return AuditFaults.corrupt_knowledge(state, ta, row=0, delta=5.0)
+    if fault == "drop_halo_message":
+        return AuditFaults.drop_halo_message(state, ta, row=0, delta=5.0)
+    return AuditFaults.skew_migration(
+        state, _flip_delta(state, ta, centers, row=0), row=0)
+
+
+def _assert_only_fires(rep, monitor):
+    assert not rep.ok
+    assert rep.monitors[monitor] is False, rep.monitors
+    others = {m: held for m, held in rep.monitors.items() if m != monitor}
+    assert all(others.values()), (monitor, rep.monitors, rep.raw)
+
+
+# ---------------------------------------------------------------------------
+# core backend
+# ---------------------------------------------------------------------------
+
+
+def test_core_clean_state_passes_all_monitors():
+    centers, x = _problem()
+    st, ta, decide, _ = _core_state(topology.grid(36), centers, x)
+    raw = audit_mod.audit_core(st, ta, decide)
+    rep = audit_mod.evaluate(raw, max_sent=None)
+    assert rep.ok, rep.monitors
+    assert raw["resid"] <= raw["tol"]
+    assert raw["edge_checked"] > 0  # full sample actually checked edges
+    # Quiescent end state: the recomputed claim is self-consistent.
+    for _ in range(40):
+        st, _ = lss.cycle(st, ta, jnp.asarray(centers), lss.LSSConfig())
+    raw = audit_mod.audit_core(st, ta, decide)
+    assert raw["quiescent"]
+    assert audit_mod.evaluate(raw).ok
+
+
+@pytest.mark.parametrize("fault", FAULTS)
+def test_core_fault_fires_exactly_its_monitor(fault):
+    centers, x = _problem()
+    st, ta, decide, _ = _core_state(topology.grid(36), centers, x)
+    bad = _apply_fault(fault, st, ta, centers)
+    raw = audit_mod.audit_core(bad, ta, decide)
+    # skew_migration models a STALE quiescence claim: the serving path
+    # reported quiescent before the migration skew landed.
+    rep = audit_mod.evaluate(
+        raw, claimed_quiescent=True if fault == "skew_migration" else None)
+    _assert_only_fires(rep, FIRES[fault])
+
+
+def test_core_edge_sampling_rotates_without_losing_detection():
+    """sample_mod=k checks ~1/k of the edges per pass, and rotating the
+    phase across passes covers every edge — the injected edge fault is
+    caught by SOME phase in one full rotation."""
+    centers, x = _problem()
+    st, ta, decide, _ = _core_state(topology.grid(36), centers, x)
+    bad = AuditFaults.drop_halo_message(st, ta, row=0, delta=5.0)
+    mod = 4
+    checked, hits = 0, 0
+    for phase in range(mod):
+        raw = audit_mod.audit_core(bad, ta, decide, sample_mod=mod,
+                                   sample_phase=phase)
+        checked += raw["edge_checked"]
+        hits += raw["edge_bad"]
+    full = audit_mod.audit_core(bad, ta, decide)
+    assert checked == full["edge_checked"]  # the phases tile the edges
+    assert hits == full["edge_bad"] > 0
+
+
+def test_counter_monitor_bounds_the_exact_send_count():
+    centers, x = _problem()
+    st, ta, decide, _ = _core_state(topology.grid(36), centers, x,
+                                    cycles=4)
+    raw = audit_mod.audit_core(st, ta, decide)
+    n, D = ta.nbr.shape
+    assert audit_mod.evaluate(raw, max_sent=4 * n * D).ok
+    # An impossibly small bound must trip ONLY the counter monitor.
+    rep = audit_mod.evaluate(raw, max_sent=0)
+    _assert_only_fires(rep, "counter")
+
+
+# ---------------------------------------------------------------------------
+# engine backends (sync + bounded-staleness async)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["sync", "async0", "async2"])
+def test_engine_clean_state_passes_all_monitors(kind):
+    centers, x = _problem(n=64, seed=0)
+    eng, st = _engine(topology.grid(64), centers, x,
+                      async_mode=kind != "sync",
+                      staleness=2 if kind == "async2" else 0)
+    raw = eng.audit(st)
+    if kind == "sync":
+        assert "seq_bad" not in raw
+        rep = audit_mod.evaluate(raw)
+    else:
+        assert raw["seq_bad"] == 0 and raw["ring_bad"] == 0
+        # The device stale-drop counter must reconcile with the lag
+        # stats the engine already publishes.
+        rep = audit_mod.evaluate(
+            raw, stale_drops_metric=eng.async_lag_stats(st)["stale_drops"])
+        assert rep.monitors["seq"]
+    assert rep.ok, (rep.monitors, raw)
+
+
+@pytest.mark.parametrize("kind", ["sync", "async2"])
+@pytest.mark.parametrize("fault", FAULTS)
+def test_engine_fault_fires_exactly_its_monitor(kind, fault):
+    centers, x = _problem(n=64, seed=0)
+    topo = topology.grid(64)
+    eng, st = _engine(topo, centers, x, async_mode=kind == "async2",
+                      staleness=2)
+    ta = lss.TopoArrays.from_topology(topo)
+    bad = AuditFaults.on_engine(
+        eng, st, lambda s, *_: _apply_fault(fault, s, ta, centers))
+    raw = eng.audit(bad)
+    rep = audit_mod.evaluate(
+        raw, claimed_quiescent=True if fault == "skew_migration" else None)
+    _assert_only_fires(rep, FIRES[fault])
+
+
+def test_async_engine_seq_regression_fires_seq_only():
+    centers, x = _problem(n=64, seed=0)
+    eng, st = _engine(topology.grid(64), centers, x, async_mode=True,
+                      staleness=2)
+    bad = AuditFaults.regress_seq(st, eng._tables, amount=1000)
+    raw = eng.audit(bad)
+    rep = audit_mod.evaluate(raw)
+    _assert_only_fires(rep, "seq")
+    assert raw["seq_bad"] > 0 or raw["ring_bad"] > 0
+
+
+def test_async_stale_drop_mismatch_fires_seq_only():
+    """The reconciliation leg of the seq monitor: the device counter
+    disagreeing with the published metric is itself a violation."""
+    centers, x = _problem(n=64, seed=0)
+    eng, st = _engine(topology.grid(64), centers, x, async_mode=True,
+                      staleness=2)
+    raw = eng.audit(st)
+    rep = audit_mod.evaluate(raw, stale_drops_metric=raw["stale_drops"] + 3)
+    _assert_only_fires(rep, "seq")
+
+
+# ---------------------------------------------------------------------------
+# service: sampled audits ride the observe round-trip on both backends
+# ---------------------------------------------------------------------------
+
+
+def _specs(n, q, seed=3):
+    centers, sample, _, _ = sim.make_problem(
+        sim.ProblemSpec(n=n, seed=seed))
+    rng = np.random.default_rng(seed + 1)
+    return centers, [
+        QuerySpec(region=regions.VoronoiRegions(jnp.asarray(centers)),
+                  inputs=sample(rng, n), seed=i) for i in range(q)]
+
+
+def _service(backend, tracker=None, **cfg_kw):
+    topo = topology.grid(36)
+    kw = dict(capacity=3, k_max=3, d=2, cycles_per_dispatch=2)
+    if backend == "engine":
+        kw.update(backend="engine", engine_shards=2)
+    kw.update(cfg_kw)
+    svc = Service(topo, ServiceConfig(**kw), tracker=tracker)
+    centers, specs = _specs(topo.n, 3)
+    for s in specs:
+        svc.admit(s)
+    return svc, centers
+
+
+@pytest.mark.parametrize("backend", ["core", "engine"])
+def test_service_clean_run_zero_violations(backend):
+    tr = InMemoryTracker()
+    svc, _ = _service(backend, tracker=tr, audit_every=1)
+    for _ in range(4):
+        svc.tick()
+    svc.close()
+    auds = [r for r in tr.records if r.get("kind") == "audit"]
+    assert len(auds) == 4 * 3  # every window, every tenant
+    assert all(r["ok"] for r in auds), [r for r in auds if not r["ok"]]
+    assert not validate_stream(tr.records)
+    assert tr.registry.counter("audit_violations_total").value() == 0.0
+
+
+def test_service_audit_every_samples_windows():
+    tr = InMemoryTracker()
+    svc, _ = _service("core", tracker=tr, audit_every=3)
+    for _ in range(7):
+        svc.tick()
+    svc.close()
+    audited = {r["dispatch"] for r in tr.records
+               if r.get("kind") == "audit"}
+    assert audited == {1, 4, 7}  # first window always audited, then every 3rd
+
+
+@pytest.mark.parametrize("backend", ["core", "engine"])
+def test_service_audit_is_a_pure_observer(backend):
+    """Bitwise parity: auditing every window changes no tenant state and
+    no telemetry record — the reductions ride the observe pass."""
+    def run(audit_every):
+        tr = InMemoryTracker()
+        svc, _ = _service(backend, tracker=tr, audit_every=audit_every)
+        recs = []
+        for _ in range(4):
+            recs.extend(svc.tick())
+        qids = [qid for qid, _slot, _spec in svc.registry.active_items()]
+        snaps = {q: svc.snapshot(q) for q in qids}
+        svc.close()
+        return recs, snaps
+
+    recs_off, snaps_off = run(0)
+    recs_on, snaps_on = run(1)
+    strip = lambda r: {k: v for k, v in r.items() if k != "trace_id"}
+    assert len(recs_off) == len(recs_on)
+    for a, b in zip(recs_off, recs_on):
+        assert strip(a) == strip(b)
+    for q in snaps_off:
+        for name in lss.LSSState._fields:
+            assert np.array_equal(np.asarray(getattr(snaps_off[q], name)),
+                                  np.asarray(getattr(snaps_on[q], name))), \
+                name
+
+
+@pytest.mark.parametrize("backend", ["core", "engine"])
+@pytest.mark.parametrize("fault", ["corrupt_knowledge",
+                                   "drop_halo_message"])
+def test_service_detects_injected_fault(tmp_path, backend, fault):
+    """End-to-end: a fault injected into one slot mid-serve produces a
+    failing audit record naming exactly the matching monitor, bumps
+    ``audit_violations_total``, and trips the ``audit_violation`` flight
+    dump stamped with the offending window."""
+    tr = InMemoryTracker()
+    svc, centers = _service(backend, tracker=tr, audit_every=1,
+                            flight_dump_dir=str(tmp_path))
+    svc.tick()
+    ta = lss.TopoArrays.from_topology(topology.grid(36))
+    snap = svc.backend.snapshot(svc.states, 1)
+    bad = _apply_fault(fault, snap, ta, centers)
+    svc.states = svc.backend.restore_slot(svc.states, 1, bad)
+    # Zero-cycle tick: observe (and audit) the faulted state as-is —
+    # running cycles first would let deliveries overwrite the corrupted
+    # slots before the audit reads them.
+    svc.tick(cycles=0)
+    svc.close()
+    auds = [r for r in tr.records if r.get("kind") == "audit"]
+    bad_recs = [r for r in auds if not r["ok"]]
+    assert bad_recs and all(r["dispatch"] == 2 for r in bad_recs)
+    assert all(r["slot"] == 1 for r in bad_recs)
+    monitor = FIRES[fault]
+    for r in bad_recs:
+        assert r["monitors"][monitor] is False
+        others = {m: h for m, h in r["monitors"].items() if m != monitor}
+        assert all(others.values()), r["monitors"]
+    assert not validate_stream(tr.records)
+    qid = bad_recs[0]["query"]
+    assert tr.registry.counter("audit_violations_total").value(
+        query=qid, monitor=monitor) == 1.0
+    dumps = [f for f in os.listdir(tmp_path) if "audit_violation" in f]
+    assert dumps == ["flight-d000002-audit_violation.jsonl"]
+    header = json.loads(
+        open(os.path.join(tmp_path, dumps[0])).readline())
+    assert header["reason"] == "audit_violation"
+    assert header["dispatch"] == 2
+
+
+# ---------------------------------------------------------------------------
+# forensics: first-violation provenance over the record stream
+# ---------------------------------------------------------------------------
+
+
+def test_forensics_reconstructs_first_violation(tmp_path):
+    tr = InMemoryTracker()
+    svc, centers = _service("core", tracker=tr, audit_every=1)
+    svc.tick()
+    ta = lss.TopoArrays.from_topology(topology.grid(36))
+    snap = svc.backend.snapshot(svc.states, 0)
+    svc.states = svc.backend.restore_slot(
+        svc.states, 0,
+        AuditFaults.corrupt_knowledge(snap, ta, row=0, delta=5.0))
+    svc.tick(cycles=0)
+    svc.tick(cycles=0)  # both windows fail; forensics must pick the FIRST
+    svc.close()
+
+    first = forensics.first_violation(tr.records)
+    assert first is not None and first["dispatch"] == 2
+    prov = forensics.provenance(tr.records)
+    assert prov["violation"] is first
+    assert prov["failed"] == ["conservation"]
+    assert prov["last_clean"] is not None
+    assert prov["last_clean"]["dispatch"] == 1
+    # The joined span is the dispatch-2 tick root: forensic provenance
+    # lands on the window that produced the corruption's first evidence.
+    assert prov["span"] is not None
+    assert prov["span"].attrs.get("dispatch") == 2
+    text = forensics.render(prov, show_trace=True)
+    assert "conservation" in text
+
+    # The CLI drives the same join off a JSONL file and signals the
+    # violation through its exit code.
+    path = os.path.join(str(tmp_path), "stream.jsonl")
+    with open(path, "w") as fh:
+        for r in tr.records:
+            fh.write(json.dumps(r) + "\n")
+    assert forensics.main([path]) == 1
+    clean = [r for r in tr.records if r.get("kind") != "audit"]
+    path2 = os.path.join(str(tmp_path), "clean.jsonl")
+    with open(path2, "w") as fh:
+        for r in clean:
+            fh.write(json.dumps(r) + "\n")
+    assert forensics.main([path2]) == 0

@@ -112,6 +112,66 @@ def test_prometheus_text_exposition():
     assert "lat_sum 0.05" in text and "lat_count 1" in text
 
 
+def test_histogram_bucket_exposition_is_cumulative():
+    """Pin Prometheus histogram semantics: ``_bucket`` series are
+    CUMULATIVE counts (each ``le`` bound includes every smaller bucket),
+    ending at ``+Inf == _count`` — even though the in-memory counts are
+    per-bucket."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "latency", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 5.0, 50.0, 500.0):
+        h.observe(v, span="x")
+    ((_, (counts, _total)),) = list(h.series())
+    assert counts == [1, 2, 1, 1]  # raw per-bucket, NOT cumulative
+    lines = reg.prometheus_text().splitlines()
+    buckets = [l for l in lines if l.startswith("lat_bucket")]
+    assert buckets == [
+        'lat_bucket{span="x",le="1"} 1',
+        'lat_bucket{span="x",le="10"} 3',
+        'lat_bucket{span="x",le="100"} 4',
+        'lat_bucket{span="x",le="+Inf"} 5',
+    ]
+    assert 'lat_count{span="x"} 5' in lines
+
+
+def test_histogram_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(1.0, 10.0))
+    assert h.p50() is None  # no samples yet
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v, span="x")
+    # rank interpolation inside the (1, 10] bucket
+    assert h.p50(span="x") == pytest.approx(5.5)
+    assert h.percentile(10.0, span="x") < 1.0
+    # ranks past the last finite bound clamp to it (never invented)
+    assert h.p95(span="x") == 10.0
+    assert h.p99(span="x") == 10.0
+    with pytest.raises(ValueError):
+        h.percentile(0.0, span="x")
+    with pytest.raises(ValueError):
+        h.percentile(100.0, span="x")
+
+
+def test_alert_rule_percentile_selection():
+    """A histogram rule with ``percentile=`` fires on the tail, not the
+    mean — and stamps the percentile into the alert record."""
+    from repro.obs import AlertEngine, AlertRule
+
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(1.0, 10.0))
+    # 9 fast samples, 1 slow: mean ~5.4, p95 = 10 (clamped tail).
+    for _ in range(9):
+        h.observe(0.5, span="x")
+    h.observe(50.0, span="x")
+    mean_rule = AlertRule("mean_hi", "lat", above=8.0)
+    tail_rule = AlertRule("tail_hi", "lat", above=8.0, percentile=95.0)
+    eng = AlertEngine([mean_rule, tail_rule], reg)
+    recs = eng.evaluate(dispatch=1, t=1)
+    assert [r["rule"] for r in recs] == ["tail_hi"]  # mean hides the tail
+    assert recs[0]["percentile"] == 95.0
+    assert validate_record(recs[0]) == []
+
+
 # ---------------------------------------------------------------------------
 # trackers
 # ---------------------------------------------------------------------------

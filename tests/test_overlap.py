@@ -392,3 +392,85 @@ def test_profiled_dispatch_sample_every_fences_sparsely():
     mine = [m for m in tr.metrics if m["labels"].get("backend") == "test"]
     assert len(mine) == 3
     assert all("dispatch_device_ms" in m["metrics"] for m in mine)
+
+
+# ---------------------------------------------------------------------------
+# observability staleness under overlap: window-scoped triggers and spans
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_flight_dump_and_spans_use_window_dispatch(tmp_path):
+    """Under overlap, window K's telemetry is finished while dispatch K+1
+    is already live — so a flight-recorder trigger and the observe span
+    must be stamped with the WINDOW's counters, not the service's.  The
+    dump filename/header carry ``w.dispatch``/``w.t``, and every observe
+    span's ``dispatch`` attr matches its window (one behind the tick root
+    that finished it)."""
+    import json
+    import os
+
+    from repro.obs import AlertRule
+
+    topo = topology.grid(25)
+    centers, x = _problem(25, seed=3)
+    tr = InMemoryTracker()
+    svc = Service(topo, ServiceConfig(
+        capacity=1, k_max=3, d=2, cycles_per_dispatch=2, overlap=True,
+        alerts=(AlertRule("always_on", "service_active_slots",
+                          above=-1.0),),
+        flight_dump_dir=str(tmp_path)), tracker=tr)
+    svc.admit(_spec(centers, x))
+    svc.tick()  # launches window 1; nothing finished yet -> no dump
+    svc.tick()  # finishes window 1 while dispatch 2 is live -> alert dump
+    # The trigger fired for window 1; the live counter already says 2.
+    assert svc.dispatches == 2
+    dumps = sorted(os.listdir(tmp_path))
+    assert dumps == ["flight-d000001-alert.jsonl"]
+    header = json.loads(
+        open(os.path.join(tmp_path, dumps[0])).readline())
+    assert header["dispatch"] == 1
+    assert header["t"] == 2  # window 1 ran 2 cycles
+    svc.flush()
+    svc.close()
+
+    # Span bookkeeping: each observe span is stamped with the window it
+    # synced; under overlap that is one behind the tick that ran it
+    # (except the flush tick, which IS its window's root).
+    spans = [r for r in tr.records if r.get("kind") == "span"]
+    ticks = {s["span_id"]: s for s in spans if s["name"] == "tick"}
+    observes = [s for s in spans if s["name"] == "observe"]
+    assert len(observes) == 2  # windows 1 and 2 both finished
+    for obs_span in observes:
+        parent = ticks[obs_span["parent_id"]]
+        if parent["attrs"].get("flush"):
+            assert obs_span["attrs"]["dispatch"] == \
+                parent["attrs"]["dispatch"]
+        else:
+            assert obs_span["attrs"]["dispatch"] == \
+                parent["attrs"]["dispatch"] - 1
+    # Tick roots are labeled with the dispatch they RAN: 1, 2, then the
+    # flush root re-labeled with the window it drained (2).
+    assert [t["attrs"]["dispatch"] for t in
+            sorted(ticks.values(), key=lambda s: s["span_id"])] == [1, 2, 2]
+
+
+def test_sync_observe_span_matches_tick_dispatch():
+    """In sync mode the observe span and its tick root agree on the
+    dispatch index — the window is finished inside the tick that ran
+    it."""
+    topo = topology.grid(25)
+    centers, x = _problem(25, seed=3)
+    tr = InMemoryTracker()
+    svc = Service(topo, ServiceConfig(capacity=1, k_max=3, d=2,
+                                      cycles_per_dispatch=2), tracker=tr)
+    svc.admit(_spec(centers, x))
+    svc.tick()
+    svc.tick()
+    svc.close()
+    spans = [r for r in tr.records if r.get("kind") == "span"]
+    ticks = {s["span_id"]: s for s in spans if s["name"] == "tick"}
+    observes = [s for s in spans if s["name"] == "observe"]
+    assert len(observes) == 2
+    for obs_span in observes:
+        assert obs_span["attrs"]["dispatch"] == \
+            ticks[obs_span["parent_id"]]["attrs"]["dispatch"]

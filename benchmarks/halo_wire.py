@@ -1,0 +1,115 @@
+"""Halo wire formats: bytes-per-link and wall-clock across transports.
+
+ISSUE 10's boundary-bytes benchmark: for each workload (grid / BA at
+n=10k default, 100k ``--full``, across shard counts) build one engine
+per wire format — ``exact`` (dense f32), ``compact`` (lossless trim +
+bit-packed flags), ``int8`` (per-link quantization with error feedback)
+— and record:
+
+* ``bytes_per_link`` — the wire byte model per active cross-shard pair
+  (deterministic; ``compact_bytes_ratio`` / ``int8_bytes_ratio`` are the
+  reduction factors vs exact, gated at >= 1.5x / 4x by ``run.py
+  --check``);
+* ``wire_wall_ratio`` — measured dispatch wall vs the exact engine on
+  the same workload (interleaved timing rounds so host noise cancels;
+  gated at <= 1.1x: byte reduction must not cost wall time);
+* ``msgs_per_link`` — exact and compact rows only; the bench *asserts*
+  the two are identical (lossless modes may not change the message
+  sequence), and the JSON gate pins the median across PRs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lss, sim, wvs
+from repro.engine import EngineConfig, ShardedLSS
+
+from .common import Row, SMOKE, clamp_cycles, topo_factory
+
+WIRES = ("exact", "compact", "int8")
+
+
+def _cases(full: bool):
+    cases = [("grid", 10_000, 4), ("ba", 10_000, 4), ("grid", 10_000, 8)]
+    if full:
+        cases += [("grid", 100_489, 8), ("ba", 100_000, 8)]
+    return cases
+
+
+def _bench_case(kind: str, n: int, shards: int, rounds: int = 3):
+    topo = topo_factory(kind, n)
+    spec = sim.ProblemSpec(n=topo.n, seed=0)
+    centers, sample, _, _ = sim.make_problem(spec)
+    rng = np.random.default_rng(1)
+    inputs = wvs.from_vector(jnp.asarray(sample(rng, topo.n)),
+                             jnp.ones((topo.n,), jnp.float32))
+    cfg = lss.LSSConfig()
+    cyc = clamp_cycles(48)
+    engines, states, best = {}, {}, {}
+    for wire in WIRES:
+        eng = ShardedLSS(topo, centers, cfg,
+                         EngineConfig(num_shards=shards,
+                                      cycles_per_dispatch=8,
+                                      halo_slack=1.5, wire=wire))
+        st = eng.init(inputs, seed=0)
+        st = eng.run(st, 16)  # compile + warm the caches
+        engines[wire], states[wire], best[wire] = eng, st, float("inf")
+    # Interleaved timing rounds: every wire sees the same host conditions
+    # within a round, so the wall ratio is noise-resistant.
+    for _ in range(rounds):
+        for wire in WIRES:
+            t0 = time.perf_counter()
+            states[wire] = engines[wire].run(states[wire], cyc)
+            jax.block_until_ready(states[wire])
+            best[wire] = min(best[wire], time.perf_counter() - t0)
+    # Lossless modes must not change the message sequence (gate, not a
+    # statistic): compact is bitwise-identical to exact.
+    msgs = {w: int(engines[w].total_msgs(states[w])) for w in WIRES}
+    assert msgs["compact"] == msgs["exact"], (
+        f"lossless wire changed the message count: {msgs}")
+    d = int(inputs.m.shape[-1])
+    counts = np.asarray(engines["exact"].stopo.halo.send_ok).sum(axis=-1)
+    links = max(int((counts > 0).sum()), 1)  # active ordered shard pairs
+    edges = max(topo.num_edges, 1)
+    exact_bytes = int(engines["exact"].wire_pair_bytes(d).sum())
+    rows = []
+    for wire in WIRES:
+        eng = engines[wire]
+        bytes_cyc = int(eng.wire_pair_bytes(d).sum())
+        extra = {
+            "wire": wire,
+            "bytes_per_cycle": bytes_cyc,
+            "bytes_per_link": bytes_cyc / links,
+            "wire_width": int(eng._tables.halo.send_ok.shape[-1]),
+        }
+        if wire in ("exact", "compact"):
+            extra["msgs_per_link"] = msgs[wire] / edges
+        if wire != "exact":
+            extra[f"{wire}_bytes_ratio"] = exact_bytes / max(bytes_cyc, 1)
+            extra["wire_wall_ratio"] = best[wire] / best["exact"]
+        rows.append(Row(
+            name=f"comm/{kind}{topo.n}s{shards}/{wire}",
+            us_per_call=best[wire] / cyc * 1e6,
+            derived=round(bytes_cyc / links, 1),
+            extra=extra))
+    return rows
+
+
+def run(full: bool = False):
+    rounds = 2 if SMOKE else 5
+    rows = []
+    for kind, n, shards in _cases(full):
+        rows += _bench_case(kind, n, shards, rounds=rounds)
+        if SMOKE:
+            break  # one case exercises every wire end-to-end
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -5,7 +5,8 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs paper-scale
 to toy sizes (a does-it-still-run gate for CI).  ``--only fig2`` filters.
 
 Machine-readable perf tracking: the systems suites (``JSON_SUITES``:
-service, engine, controlplane, kernels, obs) additionally write
+service, engine, controlplane, kernels, obs, async, comm) additionally
+write
 ``BENCH_<suite>.json`` next to the working directory (``--json-dir`` to
 relocate, ``--no-json`` to skip) with per-row extras (median wall-time,
 msgs/link, peers/s, tracker overhead) so the perf trajectory is diffable
@@ -31,7 +32,7 @@ import statistics
 import sys
 
 JSON_SUITES = ("service", "engine", "controlplane", "kernels", "obs",
-               "async")
+               "async", "comm")
 
 # Tracker overhead is budgeted absolutely (fraction of dispatch wall),
 # not relative to a baseline: observability must stay cheap everywhere.
@@ -42,6 +43,14 @@ OBS_OVERHEAD_BUDGET = 0.05
 # time beyond noise, and the churning steady state must not recompile.
 ASYNC_FRAC_RATIO_MIN = 2.0
 ASYNC_WALL_RATIO_MIN = 0.9
+
+# Halo wire-format budgets (comm suite), absolute: compression must
+# actually shrink the boundary bytes, and must not cost wall time.  The
+# wall gate only applies outside --smoke (at toy sizes fixed per-dispatch
+# overheads dominate and the ratio is meaningless).
+COMM_COMPACT_BYTES_MIN = 1.5
+COMM_INT8_BYTES_MIN = 4.0
+COMM_WIRE_WALL_MAX = 1.1
 
 
 def _summary(rows) -> dict:
@@ -57,6 +66,9 @@ def _summary(rows) -> dict:
         "median_host_frac_ratio": med("host_frac_ratio"),
         "median_wall_ratio": med("wall_ratio"),
         "median_recompiles": med("recompiles"),
+        "median_compact_bytes_ratio": med("compact_bytes_ratio"),
+        "median_int8_bytes_ratio": med("int8_bytes_ratio"),
+        "median_wire_wall_ratio": med("wire_wall_ratio"),
     }
 
 
@@ -111,6 +123,23 @@ def _check_summary(suite: str, fresh: dict, baseline: dict,
     if rc is not None and rc > 0:
         errors.append(f"{suite}.median_recompiles: {rc} — the churning "
                       "steady state must stay zero-recompile")
+    # Absolute wire-format budgets (comm suite; keys absent elsewhere).
+    cb = fs.get("median_compact_bytes_ratio")
+    if cb is not None and cb < COMM_COMPACT_BYTES_MIN:
+        errors.append(f"{suite}.median_compact_bytes_ratio: {cb:.2f}x < "
+                      f"the absolute {COMM_COMPACT_BYTES_MIN}x byte-"
+                      "reduction budget for the lossless compact wire")
+    ib = fs.get("median_int8_bytes_ratio")
+    if ib is not None and ib < COMM_INT8_BYTES_MIN:
+        errors.append(f"{suite}.median_int8_bytes_ratio: {ib:.2f}x < "
+                      f"the absolute {COMM_INT8_BYTES_MIN}x byte-"
+                      "reduction budget for the int8 wire")
+    ww = fs.get("median_wire_wall_ratio")
+    if (ww is not None and fresh["mode"] != "smoke"
+            and ww > COMM_WIRE_WALL_MAX):
+        errors.append(f"{suite}.median_wire_wall_ratio: {ww:.2f} > "
+                      f"{COMM_WIRE_WALL_MAX} — compressed wires may not "
+                      "cost wall time")
     return errors
 
 
@@ -139,8 +168,9 @@ def main(argv=None) -> None:
     from . import (async_overlap, controlplane, engine_scaleup,
                    fig2_scaleup, fig3_connectivity, fig4_message_loss,
                    fig5_difficulty, fig6_dynamic_data, fig7_loss_dynamic,
-                   fig8_churn, figD_ineffective, kernel_bench, kernels,
-                   membership_churn, obs_overhead, service_throughput)
+                   fig8_churn, figD_ineffective, halo_wire, kernel_bench,
+                   kernels, membership_churn, obs_overhead,
+                   service_throughput)
 
     suites = {
         "fig2": fig2_scaleup, "fig3": fig3_connectivity,
@@ -151,6 +181,7 @@ def main(argv=None) -> None:
         "service": service_throughput, "membership": membership_churn,
         "controlplane": controlplane, "kernels": kernels,
         "obs": obs_overhead, "async": async_overlap,
+        "comm": halo_wire,
     }
     if args.check:
         suites = {k: v for k, v in suites.items() if k in JSON_SUITES}

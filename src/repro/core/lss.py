@@ -485,7 +485,8 @@ def metrics(state: LSSState, topo: TopoArrays, centers: jax.Array,
 
 
 def audit_impl(state: LSSState, topo: TopoArrays, decide, eps=1e-9,
-               sample_mod=1, sample_phase=0, settled_ok=None):
+               sample_mod=1, sample_phase=0, settled_ok=None,
+               tol_rel_extra=0.0):
     """Device-side invariant reductions for the audit plane.
 
     Evaluates the paper's algebraic invariants as pure reductions over the
@@ -528,7 +529,18 @@ def audit_impl(state: LSSState, topo: TopoArrays, decide, eps=1e-9,
     bounded-staleness engine passes its intra-shard mask so halo slots,
     whose in/out pairing is legitimately relaxed by the seq-number
     protocol, move to the in-flight side of the ledger instead of being
-    asserted bitwise.
+    asserted bitwise.  A quantized halo wire passes the same mask for the
+    same reason: a delivered in-message legitimately differs from the
+    reverse out-slot by the (error-feedback-bounded) quantization error.
+
+    ``tol_rel_extra`` widens the conservation rounding model for lossy
+    transports: the engine passes its wire format's documented
+    per-component relative error bound (``Wire.quant_eps`` — ``1/254``
+    for int8, ``2^-8`` for bf16), which joins the ``u``-scaled term so
+    the same ``N_terms * L1-mass`` envelope covers quantization residue
+    still in flight through the error-feedback state.  Zero (the
+    default, and every exact/compact path) leaves the tolerance bitwise
+    unchanged.
 
     Returns a dict of scalars: ``resid``/``tol``/``mag`` (conservation),
     ``edge_bad``/``edge_checked``, ``stop_bad``/``quiescent``, and
@@ -572,7 +584,7 @@ def audit_impl(state: LSSState, topo: TopoArrays, decide, eps=1e-9,
                             jnp.abs(state.in_c) + jnp.abs(out_rev_c), 0.0))
     )
     u = jnp.finfo(state.x_m.dtype).eps
-    tol = 1e-6 + 4.0 * u * (n * (D + 1)) * mag
+    tol = 1e-6 + (4.0 * u + tol_rel_extra) * (n * (D + 1)) * mag
 
     # Edge-agreement symmetry on settled slots (bitwise; rotating sample).
     settled = live & ~state.pending & ~pend_rev

@@ -1,6 +1,6 @@
-"""Gradient compression for the slow (DCN / pod) axis.
+"""Lossy wire compression for the slow (DCN / pod) axis.
 
-Two standard schemes, both with error feedback so compression error is
+Standard schemes, all with error feedback so compression error is
 carried, not dropped (convergence-preserving):
 
 * ``int8_compress`` — per-tensor symmetric int8 quantization: 4x fewer
@@ -9,6 +9,12 @@ carried, not dropped (convergence-preserving):
   (sparsity is realized as masked dense tensors here: a real DCN transport
   would ship (indices, values); the *reduction math* and error feedback are
   exact either way, which is what correctness tests can check).
+* ``quantize_halo`` / ``dequantize_halo`` — the engine's halo-buffer
+  generalization of ``int8_compress``: PER-LINK scales over ``(..., W, d)``
+  moment buffers plus their ``(..., W)`` weight row, masked by the
+  delivered flags, error feedback updated only where a message actually
+  shipped.  This is what ``EngineConfig(wire="int8")`` runs
+  (:mod:`repro.engine.exchange`).
 
 Usage inside a step:
     comp, err = topk_compress(grad, err, frac=0.01)
@@ -22,7 +28,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["int8_compress", "int8_decompress", "topk_compress"]
+__all__ = ["int8_compress", "int8_decompress", "topk_compress",
+           "HaloQuantPack", "quantize_halo", "dequantize_halo"]
 
 
 class Int8Pack(NamedTuple):
@@ -44,6 +51,64 @@ def int8_compress(x, err=None):
 
 def int8_decompress(pack: Int8Pack):
     return pack.q.astype(jnp.float32) * pack.scale
+
+
+class HaloQuantPack(NamedTuple):
+    """Per-link quantized halo payload (one scale pair per link)."""
+
+    q_m: jax.Array      # int8 (..., W, d) moment buffers
+    q_c: jax.Array      # int8 (..., W) weight row
+    scale_m: jax.Array  # f32 (...,) per-link moment scale
+    scale_c: jax.Array  # f32 (...,) per-link weight scale
+
+
+def quantize_halo(buf_m, buf_c, flag, err_m=None, err_c=None):
+    """Symmetric int8 quantization of halo send buffers, per link.
+
+    ``buf_m (..., W, d)`` / ``buf_c (..., W)`` are one link's gathered
+    send buffers per leading index (src-major ``(S, S, W, ...)`` on the
+    gather path, block-local ``(S, W, ...)`` under shard_map — the scale
+    reductions only assume the trailing axes).  ``flag (..., W)`` masks
+    real messages; masked entries quantize as zero and never touch the
+    error feedback.
+
+    Error-feedback contract: with ``xf = buf + err`` (masked), the scale
+    is ``max|xf| / 127`` per link, so ``|xf| / scale <= 127`` — clipping
+    is never active — and the per-component round-trip error obeys the
+    documented bound
+
+        ``|dequantize(q) - xf| <= scale / 2 = max|xf| / 254``
+
+    (the relative form, ``quant_eps = 1/254``, is what the audit plane's
+    conservation tolerance and the round-trip property test use).  The
+    returned error buffers hold ``xf - deq`` where ``flag`` and the old
+    error elsewhere: a pending-but-unsent slot keeps carrying its debt.
+    """
+    f32 = jnp.float32
+    fm = flag[..., None]
+    xm = buf_m.astype(f32) + (0.0 if err_m is None else err_m)
+    xc = buf_c.astype(f32) + (0.0 if err_c is None else err_c)
+    xm = jnp.where(fm, xm, 0.0)
+    xc = jnp.where(flag, xc, 0.0)
+    scale_m = jnp.maximum(jnp.max(jnp.abs(xm), axis=(-2, -1)), 1e-12) / 127.0
+    scale_c = jnp.maximum(jnp.max(jnp.abs(xc), axis=-1), 1e-12) / 127.0
+    q_m = jnp.clip(jnp.round(xm / scale_m[..., None, None]),
+                   -127, 127).astype(jnp.int8)
+    q_c = jnp.clip(jnp.round(xc / scale_c[..., None]),
+                   -127, 127).astype(jnp.int8)
+    deq_m = q_m.astype(f32) * scale_m[..., None, None]
+    deq_c = q_c.astype(f32) * scale_c[..., None]
+    new_err_m = jnp.where(fm, xm - deq_m, 0.0 if err_m is None else err_m)
+    new_err_c = jnp.where(flag, xc - deq_c, 0.0 if err_c is None else err_c)
+    pack = HaloQuantPack(q_m=q_m, q_c=q_c, scale_m=scale_m, scale_c=scale_c)
+    return pack, new_err_m, new_err_c
+
+
+def dequantize_halo(q_m, q_c, scale_m, scale_c):
+    """Inverse of :func:`quantize_halo`'s value mapping."""
+    f32 = jnp.float32
+    return (q_m.astype(f32) * scale_m[..., None, None],
+            q_c.astype(f32) * scale_c[..., None])
 
 
 def topk_compress(x, err=None, frac: float = 0.01):

@@ -3,7 +3,9 @@
 Modules:
   partition — BFS/greedy edge-cut partitioner + per-shard halo tables
   exchange  — boundary-message halo exchange (all_to_all / gather fallback)
+              + pluggable wire formats (exact / compact / int8 / bf16)
   engine    — ShardedLSS: K-cycles-per-dispatch sharded simulator
+  autotune  — HLO-cost-model plan enumeration (EngineConfig.auto_plan)
   sweep     — vmapped multi-seed / multi-config scenario sweeps
 """
 

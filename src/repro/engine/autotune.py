@@ -1,0 +1,250 @@
+"""Cost-model autotuning for the sharded engine.
+
+Enumerates candidate execution plans — ``(num_shards, halo_slack,
+cycles_per_dispatch, wire)`` — compiles a probe dispatch for each,
+feeds the optimized HLO to :func:`repro.launch.hlo_cost.analyze` (which
+applies the K-cycle ``fori_loop`` trip-count multiplier XLA's own
+``cost_analysis`` drops), combines the roofline terms with the wire
+byte model (:meth:`ShardedLSS.wire_pair_bytes`), and picks the plan
+minimizing modeled per-cycle dispatch cost.  With ``measure=True``
+(default) every candidate's compiled dispatch is additionally timed and
+the measured wall decides — the model then serves as the printed
+explanation, not the verdict.
+
+Entry points:
+
+* ``EngineConfig(auto_plan=True)`` — :class:`ShardedLSS` construction
+  calls :func:`plan` over a small default grid around the given config
+  (K halved/doubled x {exact, compact} wires) and adopts the winner.
+* ``python -m repro.engine.autotune --n 10000 --graph grid ...`` — CLI
+  sweep printing the full plan table with the chosen row marked.
+
+The roofline constants are deliberately coarse (the model only needs to
+*rank* plans): per-cycle cost =
+
+    flops / FLOPS + hbm_bytes / HBM_BW          (per dispatch, / K)
+    + wire_bytes / NET_BW                       (per cycle)
+    + DISPATCH_US / K                           (host boundary, / K)
+
+so larger K amortizes dispatch overhead, compact/quantized wires shrink
+the network term, and the HLO terms catch when a plan's extra shards
+stop paying for themselves.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lss, wvs
+from repro.launch import hlo_cost
+
+from . import exchange
+from .engine import AsyncShardedState, EngineConfig, ShardedLSS
+
+__all__ = ["Candidate", "PlanEntry", "PlanResult", "plan",
+           "default_candidates", "FLOPS_PER_S", "HBM_BYTES_PER_S",
+           "NET_BYTES_PER_S", "DISPATCH_US"]
+
+# Roofline constants (single CPU/accelerator device + commodity
+# interconnect).  Coarse on purpose: the model ranks plans, it does not
+# predict absolute walls.
+FLOPS_PER_S = 5e10
+HBM_BYTES_PER_S = 2e10
+NET_BYTES_PER_S = 1e9
+DISPATCH_US = 50.0
+
+
+class Candidate(NamedTuple):
+    """One enumerable execution plan."""
+
+    num_shards: int
+    halo_slack: float
+    k: int  # cycles_per_dispatch
+    wire: str
+
+
+class PlanEntry(NamedTuple):
+    """One scored (and optionally timed) candidate."""
+
+    cand: Candidate
+    modeled_us: float  # modeled per-cycle cost
+    measured_us: float  # measured per-cycle dispatch wall (nan = unmeasured)
+    wire_bytes: int  # wire bytes per cycle, all shard pairs
+    flops: float  # per dispatch (K cycles), from HLO
+    hbm_bytes: float  # per dispatch, from HLO
+    collective_bytes: float  # per dispatch, from HLO
+
+
+class PlanResult(NamedTuple):
+    config: EngineConfig  # base config with the winner applied
+    chosen: Candidate
+    table: Tuple[PlanEntry, ...]  # every candidate, enumeration order
+
+
+def default_candidates(base: EngineConfig) -> Tuple[Candidate, ...]:
+    """The ``auto_plan=True`` grid: a small neighborhood around ``base``
+    (construction-time tuning must stay cheap — every candidate is a
+    compile).  K halved / as-is / doubled, crossed with the base wire
+    plus ``compact`` (the always-lossless improvement; lossy wires are
+    an accuracy decision the caller must opt into explicitly)."""
+    k = max(1, base.cycles_per_dispatch)
+    ks = sorted({max(1, k // 2), k, 2 * k})
+    wires = sorted({base.wire, "compact"})
+    return tuple(Candidate(base.num_shards, base.halo_slack, kk, w)
+                 for kk in ks for w in wires)
+
+
+def _probe_inputs(n: int, d: int, seed: int) -> wvs.WV:
+    """Deterministic non-degenerate probe inputs (all-zero inputs would
+    let XLA fold away work real runs pay for)."""
+    m = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return wvs.WV(m=m, c=jnp.ones((n,), m.dtype))
+
+
+def plan(topo, centers, cfg: lss.LSSConfig = lss.LSSConfig(),
+         base: EngineConfig = EngineConfig(),
+         candidates: Optional[Sequence[Candidate]] = None,
+         inputs: Optional[wvs.WV] = None, seed: int = 0,
+         measure: bool = True, repeats: int = 3) -> PlanResult:
+    """Enumerate, score, and (optionally) time candidate plans.
+
+    Every candidate builds a probe :class:`ShardedLSS` (``auto_plan``
+    forced off), lowers one K-cycle dispatch, and runs
+    :func:`repro.launch.hlo_cost.analyze` on the optimized HLO.  With
+    ``measure=True`` the compiled probe is also executed (one warmup +
+    ``repeats`` timed calls, chaining the returned state so buffer
+    donation stays valid) and the minimum wall decides the winner;
+    otherwise the modeled cost does.
+
+    Returns a :class:`PlanResult` whose ``config`` is ``base`` with the
+    winning candidate's fields applied (and ``auto_plan=False``, so
+    constructing an engine from it never re-plans).
+    """
+    cands = tuple(candidates) if candidates is not None \
+        else default_candidates(base)
+    if not cands:
+        raise ValueError("no candidate plans to evaluate")
+    d = int(jnp.asarray(centers).shape[-1])
+    if inputs is None:
+        inputs = _probe_inputs(topo.n, d, seed)
+    entries = []
+    for c in cands:
+        ecfg = base._replace(num_shards=c.num_shards,
+                             halo_slack=c.halo_slack,
+                             cycles_per_dispatch=c.k, wire=c.wire,
+                             auto_plan=False)
+        eng = ShardedLSS(topo, centers, cfg=cfg, ecfg=ecfg)
+        state = eng.init(inputs, seed=seed)
+        run_jit = (eng._run_async_jit
+                   if isinstance(state, AsyncShardedState) else eng._run_jit)
+        compiled = run_jit.lower(state, eng._tables, k=c.k).compile()
+        cost = hlo_cost.analyze(compiled.as_text())
+        wire_bytes = int(eng.wire_pair_bytes(d).sum())
+        coll = float(cost["collective_bytes"]["total"])
+        modeled_us = (
+            (cost["flops"] / FLOPS_PER_S
+             + cost["hbm_bytes"] / HBM_BYTES_PER_S) * 1e6 / c.k
+            + wire_bytes / NET_BYTES_PER_S * 1e6
+            + DISPATCH_US / c.k)
+        measured_us = math.nan
+        if measure:
+            state = compiled(state, eng._tables)  # warmup (donation-safe)
+            jax.block_until_ready(state)
+            best = math.inf
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                state = compiled(state, eng._tables)
+                jax.block_until_ready(state)
+                best = min(best, time.perf_counter() - t0)
+            measured_us = best * 1e6 / c.k
+        entries.append(PlanEntry(cand=c, modeled_us=modeled_us,
+                                 measured_us=measured_us,
+                                 wire_bytes=wire_bytes,
+                                 flops=float(cost["flops"]),
+                                 hbm_bytes=float(cost["hbm_bytes"]),
+                                 collective_bytes=coll))
+    key = ((lambda e: e.measured_us) if measure
+           else (lambda e: e.modeled_us))
+    chosen = min(entries, key=key).cand
+    config = base._replace(num_shards=chosen.num_shards,
+                           halo_slack=chosen.halo_slack,
+                           cycles_per_dispatch=chosen.k, wire=chosen.wire,
+                           auto_plan=False)
+    return PlanResult(config=config, chosen=chosen, table=tuple(entries))
+
+
+def format_table(result: PlanResult) -> str:
+    """The CLI's plan table: one row per candidate, winner marked."""
+    hdr = (f"{'':2} {'S':>3} {'slack':>5} {'K':>4} {'wire':>8} "
+           f"{'wireB/cyc':>10} {'flops':>10} {'hbmB':>10} {'collB':>10} "
+           f"{'model us':>9} {'meas us':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for e in result.table:
+        mark = "*" if e.cand == result.chosen else ""
+        meas = "-" if math.isnan(e.measured_us) else f"{e.measured_us:9.1f}"
+        lines.append(
+            f"{mark:2} {e.cand.num_shards:>3} {e.cand.halo_slack:>5.2f} "
+            f"{e.cand.k:>4} {e.cand.wire:>8} {e.wire_bytes:>10} "
+            f"{e.flops:>10.3g} {e.hbm_bytes:>10.3g} "
+            f"{e.collective_bytes:>10.3g} {e.modeled_us:>9.1f} {meas:>9}")
+    c = result.chosen
+    lines.append(f"chosen: S={c.num_shards} slack={c.halo_slack} "
+                 f"K={c.k} wire={c.wire}")
+    return "\n".join(lines)
+
+
+def _main(argv=None) -> int:
+    import argparse
+
+    from repro.core import topology
+
+    p = argparse.ArgumentParser(
+        description="Enumerate engine execution plans, score them with "
+        "the HLO cost model + wire byte model, time them, and print the "
+        "plan table (winner marked with *).")
+    p.add_argument("--n", type=int, default=10_000, help="peer count")
+    p.add_argument("--graph", choices=("grid", "ba"), default="grid")
+    p.add_argument("--k-centers", type=int, default=3,
+                   help="Voronoi option points")
+    p.add_argument("--d", type=int, default=2, help="statistic dimension")
+    p.add_argument("--shards", default="2,4",
+                   help="comma-separated shard counts")
+    p.add_argument("--slacks", default="1.5",
+                   help="comma-separated halo_slack values")
+    p.add_argument("--ks", default="4,8,16",
+                   help="comma-separated cycles_per_dispatch values")
+    p.add_argument("--wires", default="exact,compact,int8",
+                   help="comma-separated wire formats "
+                   f"(known: {', '.join(sorted(exchange.WIRE_FORMATS))})")
+    p.add_argument("--no-measure", action="store_true",
+                   help="rank by the cost model only (no timed runs)")
+    p.add_argument("--repeats", type=int, default=3)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    topo = (topology.grid(args.n) if args.graph == "grid"
+            else topology.barabasi_albert(args.n, m=2, seed=args.seed))
+    centers = jax.random.normal(jax.random.PRNGKey(args.seed),
+                                (args.k_centers, args.d))
+    cands = tuple(
+        Candidate(s, sl, k, w)
+        for s in (int(x) for x in args.shards.split(","))
+        for sl in (float(x) for x in args.slacks.split(","))
+        for k in (int(x) for x in args.ks.split(","))
+        for w in args.wires.split(","))
+    result = plan(topo, centers, candidates=cands, seed=args.seed,
+                  measure=not args.no_measure, repeats=args.repeats)
+    print(f"graph={args.graph} n={topo.n} d={args.d} "
+          f"candidates={len(cands)}")
+    print(format_table(result))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -58,10 +58,11 @@ recompiles.
 from __future__ import annotations
 
 import warnings
-from typing import NamedTuple, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.compat import shard_map
 from repro.core import lss, regions, stopping, topology, wvs
@@ -131,10 +132,28 @@ class EngineConfig(NamedTuple):
     # staleness=0 the mode is bitwise identical to the sync engine.
     async_mode: bool = False
     staleness: int = 0  # halo reads may lag the sender by <= this many cycles
+    # Halo wire format (repro.engine.exchange.get_wire): "exact" (f32,
+    # bitwise — the default), "compact" (lossless: bit-packed flags +
+    # occupied-width transport), "int8" / "bf16" (per-link quantization
+    # with error feedback; convergence-preserving, not bitwise).
+    wire: str = "exact"
+    # Cost-model autotuning (repro.engine.autotune): enumerate candidate
+    # (shards, halo_slack, K, wire) plans at construction, score each
+    # from the compiled dispatch HLO (launch.hlo_cost) + the wire byte
+    # model, time the shortlist, and adopt the winner's config.
+    auto_plan: bool = False
 
 
 class ShardedState(NamedTuple):
-    """:class:`repro.core.lss.LSSState`, blocked ``(S, B, ...)`` per shard."""
+    """:class:`repro.core.lss.LSSState`, blocked ``(S, B, ...)`` per shard.
+
+    The two trailing ``wire_err_*`` fields exist only under a stateful
+    (quantized) wire format: per-out-slot error-feedback buffers in
+    membership-stable ``(S, B, D, ...)`` coordinates (independent of the
+    halo width, so table repairs and wire-width bumps never reshape
+    them).  ``None`` — an empty pytree node — everywhere else, keeping
+    the exact/compact state trees structurally identical to before.
+    """
 
     out_m: jax.Array  # (S, B, D, d)
     out_c: jax.Array  # (S, B, D)
@@ -148,6 +167,8 @@ class ShardedState(NamedTuple):
     t: jax.Array  # ()  current cycle, replicated
     msgs: jax.Array  # (S,) per-shard cumulative sends (exact int)
     rng: jax.Array  # (S, 2) per-shard PRNG keys
+    wire_err_m: Optional[jax.Array] = None  # (S, B, D, d) quant error
+    wire_err_c: Optional[jax.Array] = None  # (S, B, D)
 
 
 class AsyncShardedState(NamedTuple):
@@ -201,6 +222,14 @@ class ShardedLSS:
                  region=None, tracker=None):
         from repro.obs import NoopTracker  # local: keep engine import light
 
+        if ecfg.auto_plan:
+            # Cost-model autotuning: enumerate (S, slack, K, wire)
+            # candidates around this config, score their compiled HLO +
+            # wire byte model, time the shortlist, adopt the winner.
+            # The probes themselves build with auto_plan=False.
+            from . import autotune  # lazy: autotune constructs engines
+
+            ecfg = autotune.plan(topo, centers, cfg=cfg, base=ecfg).config
         self.cfg = cfg
         self.ecfg = ecfg
         self.tracker = tracker if tracker is not None else NoopTracker()
@@ -224,7 +253,15 @@ class ShardedLSS:
         self.part = part
         self.S, self.B, self.D = part.num_shards, part.block, st.D
         self.n, self.num_edges = st.n, st.num_edges
-        self._tables = DeviceTopo.from_sharded(st)
+        # Halo wire format: what the cross-shard transport actually ships
+        # (and how the byte accounting models it).  Width-trimming
+        # formats slice the device-side halo tables to the occupied
+        # width (_wire_tables), so the trim is a traced-shape property —
+        # a later width bump recompiles through exactly the machinery a
+        # halo regrow already uses.
+        self._wire = exchange.get_wire(ecfg.wire)
+        self._wire_w = self._wire_width()
+        self._tables = self._wire_tables(DeviceTopo.from_sharded(st))
         # Version of the (Dyn)topology the tables reflect; apply_membership
         # catches up incrementally from here.
         self._topo_version = getattr(topo, "version", 0)
@@ -332,11 +369,18 @@ class ShardedLSS:
             msgs=jnp.zeros((S,), lss.counter_dtype()),
             rng=jax.random.split(jax.random.PRNGKey(seed), S),
         )
+        if self._wire.stateful:
+            # Quantization error feedback, per out-slot (membership-stable
+            # coordinates: halo repairs never reshape these).
+            state = state._replace(
+                wire_err_m=jnp.zeros((S, B, D, d), jnp.float32),
+                wire_err_c=jnp.zeros((S, B, D), jnp.float32))
         if self._mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
             shard = NamedSharding(self._mesh, P(self._axis))
             repl = NamedSharding(self._mesh, P())
             state = ShardedState(*(
+                None if a is None else
                 jax.device_put(a, repl if a.ndim == 0 else shard)
                 for a in state))
         return state
@@ -351,7 +395,10 @@ class ShardedLSS:
         """Wrap an existing sync state for async execution.  The ring
         starts empty: the first async cycle behaves exactly like a sync
         cycle would from the same state."""
-        S, B, D, H = self.S, self.B, self.D, self.stopo.halo_width
+        S, B, D = self.S, self.B, self.D
+        # Ring slots match the WIRE width (trimmed tables), not the padded
+        # host halo capacity — the ring holds what the transport ships.
+        H = int(self._tables.halo.send_ok.shape[-1])
         R = max(1, int(self.ecfg.staleness) + 1)
         d = base.x_m.shape[-1]
         dt = base.x_m.dtype
@@ -401,13 +448,20 @@ class ShardedLSS:
     def _clear_slots_impl(self, state: ShardedState, rows, slots):
         pos = self._pos[rows]
         s_idx, b_idx = pos // self.B, pos % self.B
-        return state._replace(
+        upd = dict(
             out_m=state.out_m.at[..., s_idx, b_idx, slots, :].set(0.0),
             out_c=state.out_c.at[..., s_idx, b_idx, slots].set(0.0),
             in_m=state.in_m.at[..., s_idx, b_idx, slots, :].set(0.0),
             in_c=state.in_c.at[..., s_idx, b_idx, slots].set(0.0),
             pending=state.pending.at[..., s_idx, b_idx, slots].set(False),
         )
+        if state.wire_err_m is not None:
+            # A scrubbed slot's quantization debt dies with its message.
+            upd["wire_err_m"] = (state.wire_err_m
+                                 .at[..., s_idx, b_idx, slots, :].set(0.0))
+            upd["wire_err_c"] = (state.wire_err_c
+                                 .at[..., s_idx, b_idx, slots].set(0.0))
+        return state._replace(**upd)
 
     # -- dynamic membership ------------------------------------------------
     def apply_membership(self, dyn, rows=None) -> bool:
@@ -436,12 +490,63 @@ class ShardedLSS:
         if rows.size == 0:
             return False
         old_width = self.stopo.halo_width
+        old_wire_w = self._wire_w
         self.stopo = partition.repair_sharded_topo(
             self.stopo, dyn, rows,
             halo_slack=max(self.ecfg.halo_slack, 1.25))
         self.num_edges = self.stopo.num_edges
-        self._tables = DeviceTopo.from_sharded(self.stopo)
-        return self.stopo.halo_width != old_width
+        # The wire width only ever grows within an engine's lifetime: a
+        # shrink after unlinks would recompile for no correctness reason.
+        self._wire_w = max(old_wire_w, self._wire_width())
+        self._tables = self._wire_tables(DeviceTopo.from_sharded(self.stopo))
+        return (self.stopo.halo_width != old_width
+                or self._wire_w != old_wire_w)
+
+    # -- wire format -------------------------------------------------------
+    def _wire_width(self) -> int:
+        """Static halo width the wire transport ships.
+
+        The full padded ``H`` for non-trimming formats; otherwise the
+        last occupied table position (+1) rounded up to a byte boundary
+        (flags bit-pack evenly), so ``halo_slack`` headroom stays
+        host-side capacity instead of riding the transport.  Computed
+        from occupied *positions*, not counts, so it stays correct even
+        if a repair leaves a pair's entries non-contiguous.
+        """
+        H = self.stopo.halo_width
+        if not self._wire.trims:
+            return H
+        ok = np.asarray(self.stopo.halo.send_ok)
+        occupied = ok * (np.arange(H, dtype=np.int64) + 1)[None, None, :]
+        needed = int(occupied.max()) if occupied.size else 0
+        return max(1, min(H, -(-needed // 8) * 8))
+
+    def _wire_tables(self, tables: DeviceTopo) -> DeviceTopo:
+        """Slice the device halo tables to the wire width.
+
+        Entries at or beyond the wire width are all ``send_ok``-False
+        padding, so the slice is bitwise-invisible to the exchange; the
+        narrower traced table shapes are what make a wire-width bump a
+        *declared* recompile (same jit-cache mechanics as a halo regrow)
+        on every consumer, the service's compiled step included.
+        """
+        W = self._wire_w
+        halo = tables.halo
+        if W >= halo.send_ok.shape[-1]:
+            return tables
+        return tables._replace(halo=partition.HaloTables(
+            *(a[:, :, :W] for a in halo)))
+
+    def wire_pair_bytes(self, d: int) -> "np.ndarray":
+        """Modeled wire bytes per cycle per ordered shard pair ``(S, S)``
+        for ``d``-dimensional statistics: the active format's
+        serialization of each pair's halo row (dense rows for ``exact``,
+        ragged occupied widths + bit-packed flags for the compact family
+        — see the wire-format table in :mod:`repro.engine.exchange`).
+        Recomputed from the host tables, so membership repairs are
+        reflected immediately."""
+        counts = np.asarray(self.stopo.halo.send_ok).sum(axis=-1)
+        return self._wire.pair_bytes(counts, self._wire_w, int(d))
 
     # -- per-peer update (flattened), shared with the collective path ------
     def _peer_update(self, out_m, out_c, in_m, in_c, x_m, x_c, live,
@@ -564,11 +669,24 @@ class ShardedLSS:
         in_c = jax.vmap(gat)(state.in_c, state.out_c, delivered, src,
                              tables.intra)
 
-        # Cross-shard edges: halo gather -> transpose -> scatter.
+        # Cross-shard edges: halo gather -> wire encode -> transpose ->
+        # wire decode -> scatter.  The exact wire's encode/decode are the
+        # identity on the same (buf_m, buf_c, flag) triple, so this IS the
+        # pre-wire program bitwise (and compile-cache-identical).
         buf_m, buf_c, flag = exchange.gather_halo(
             state.out_m, state.out_c, delivered, tables.halo)
-        buf_m, buf_c, flag = (exchange.transpose_all_to_all(b)
-                              for b in (buf_m, buf_c, flag))
+        wire = self._wire
+        if wire.stateful:
+            g_em, g_ec = exchange.gather_err(
+                state.wire_err_m, state.wire_err_c, tables.halo)
+            payload, n_em, n_ec = wire.encode(buf_m, buf_c, flag, g_em, g_ec)
+            err_m, err_c = exchange.scatter_err(
+                state.wire_err_m, state.wire_err_c, n_em, n_ec, tables.halo)
+        else:
+            payload, _, _ = wire.encode(buf_m, buf_c, flag)
+            err_m, err_c = state.wire_err_m, state.wire_err_c
+        payload = tuple(exchange.transpose_all_to_all(p) for p in payload)
+        buf_m, buf_c, flag = wire.decode(payload)
         in_m, in_c = exchange.scatter_halo(in_m, in_c, buf_m, buf_c, flag,
                                            tables.halo)
 
@@ -584,7 +702,7 @@ class ShardedLSS:
             out_m=sh(out_m), out_c=sh(out_c), in_m=in_m, in_c=in_c,
             pending=sh(pending), last_send=sh(last_send),
             t=state.t + 1, msgs=state.msgs + sent.astype(state.msgs.dtype),
-            rng=rng)
+            rng=rng, wire_err_m=err_m, wire_err_c=err_c)
         if with_stats:
             return state, corr_iters
         return state
@@ -653,6 +771,20 @@ class ShardedLSS:
         # stamps) into each shard's ring slot at its own clock...
         buf_m, buf_c, flag = exchange.gather_halo(
             state.out_m, state.out_c, delivered, tables.halo)
+        wire = self._wire
+        if wire.lossy:
+            # Quantize at the SENDER boundary (encode -> decode before the
+            # ring), so what the ring holds — and any bounded-stale read
+            # later delivers — is exactly what a quantized transport ships.
+            # The error feedback updates on publish, the only sender-side
+            # event; staleness only affects which publication is read.
+            g_em, g_ec = exchange.gather_err(
+                state.wire_err_m, state.wire_err_c, tables.halo)
+            payload, n_em, n_ec = wire.encode(buf_m, buf_c, flag, g_em, g_ec)
+            buf_m, buf_c, flag = wire.decode(payload)
+            err_m, err_c = exchange.scatter_err(
+                state.wire_err_m, state.wire_err_c, n_em, n_ec, tables.halo)
+            state = state._replace(wire_err_m=err_m, wire_err_c=err_c)
         buf_seq = jax.vmap(lambda sq, r, sl: sq[r, sl])(
             astate.out_seq, tables.halo.send_row, tables.halo.send_slot)
         wslot = astate.clock % R
@@ -789,9 +921,22 @@ class ShardedLSS:
         buf_m, buf_c, flag = exchange.gather_block(
             out_m, out_c, delivered, halo.send_row, halo.send_slot,
             halo.send_ok)
-        buf_m = exchange.collective_all_to_all(buf_m, axis)
-        buf_c = exchange.collective_all_to_all(buf_c, axis)
-        flag = exchange.collective_all_to_all(flag, axis)
+        wire = self._wire
+        if wire.stateful:
+            em, ec = sq(state.wire_err_m), sq(state.wire_err_c)
+            g_em, g_ec = em[halo.send_row, halo.send_slot], \
+                ec[halo.send_row, halo.send_slot]
+            payload, n_em, n_ec = wire.encode(buf_m, buf_c, flag, g_em, g_ec)
+            em, ec = exchange.scatter_err_block(
+                em, ec, n_em, n_ec, halo.send_row, halo.send_slot,
+                halo.send_ok)
+            err_m, err_c = em[None], ec[None]
+        else:
+            payload, _, _ = wire.encode(buf_m, buf_c, flag)
+            err_m, err_c = state.wire_err_m, state.wire_err_c
+        payload = tuple(exchange.collective_all_to_all(p, axis)
+                        for p in payload)
+        buf_m, buf_c, flag = wire.decode(payload)
         in_m, in_c = exchange.scatter_block(in_m, in_c, buf_m, buf_c, flag,
                                             halo.recv_row, halo.recv_slot)
 
@@ -804,13 +949,15 @@ class ShardedLSS:
             pending=ex(pending), last_send=ex(last_send),
             t=state.t + 1,
             msgs=state.msgs + sent.astype(state.msgs.dtype)[None],
-            rng=rng)
+            rng=rng, wire_err_m=err_m, wire_err_c=err_c)
 
     def _run_block_collective(self, state: ShardedState, tables: DeviceTopo,
                               k: int):
         from jax.sharding import PartitionSpec as P
         sh, repl = P(self._axis), P()
-        spec = ShardedState(sh, sh, sh, sh, sh, sh, sh, sh, sh, repl, sh, sh)
+        err_sp = sh if state.wire_err_m is not None else None
+        spec = ShardedState(sh, sh, sh, sh, sh, sh, sh, sh, sh, repl, sh, sh,
+                            err_sp, err_sp)
 
         def local(state, mask, rev, tgt_row, tgt_pos, intra, *halo):
             local_t = _LocalTables(mask[0], rev[0], tgt_row[0], tgt_pos[0],
@@ -856,15 +1003,21 @@ class ShardedLSS:
         run_jit = self._run_async_jit if is_async else self._run_jit
         k = max(1, self.ecfg.cycles_per_dispatch)
         transport = "all_to_all" if self._mesh is not None else "gather"
-        # Host-side traffic model of the halo exchange, per shard: every
-        # real send-table entry moves one message slot (d-vector + weight
-        # counter + pending flag) per cycle.  Recomputed per run() — the
-        # tables are tiny and apply_membership may have rewritten them.
+        # Host-side traffic model of the halo exchange: what the ACTIVE
+        # wire format serializes per ordered shard pair per cycle
+        # (wire_pair_bytes) — dense rows under "exact", ragged occupied
+        # widths under the compact family, so compact/quantized modes are
+        # not charged for padding or halo_slack headroom.  Recomputed per
+        # run() — the tables are tiny and apply_membership may have
+        # rewritten them.
         st = self.stopo
-        sends = st.halo.send_ok.reshape(self.S, -1).sum(axis=1)
+        counts = np.asarray(st.halo.send_ok).sum(axis=-1)  # (S, S) slots
         cuts = (st.mask & ~st.intra).reshape(self.S, -1).sum(axis=1)
         d_dim = (state.sync if is_async else state).x_m.shape[-1]
-        msg_bytes = 4 * int(d_dim) + 4 + 1
+        pair = self.wire_pair_bytes(d_dim)  # (S, S) bytes per cycle
+        shard_bytes = pair.sum(axis=1)  # per src shard
+        total_bytes = int(pair.sum())
+        wire_w = int(self._tables.halo.send_ok.shape[-1])
         publish = not isinstance(self.tracker, NoopTracker)
         fn = run_jit
         if self.ecfg.profile:
@@ -892,20 +1045,32 @@ class ShardedLSS:
                         "jit cache growth across engine run dispatches").inc(
                             after - before)
                 sp.set("fused", self.dispatch_info["fused"])
-                sp.set("halo_bytes", int(sends.sum()) * msg_bytes * step)
+                sp.set("wire", self._wire.name)
+                sp.set("halo_bytes", total_bytes * step)
                 sp.set("cut_edges", int(cuts.sum()) // 2)
                 if publish:
                     halo_c = self.tracker.counter(
                         "engine_shard_halo_bytes_total",
-                        "cross-shard halo traffic per shard, modeled "
-                        "from the send tables")
+                        "cross-shard halo traffic per shard in "
+                        "wire-format bytes (active EngineConfig.wire "
+                        "serialization of the send tables)")
                     cut_g = self.tracker.gauge(
                         "engine_shard_cut_edges",
                         "directed cross-shard edge slots per shard")
+                    pad_g = self.tracker.gauge(
+                        "engine_halo_padding_frac",
+                        "fraction of the shipped halo width that is "
+                        "send_ok-masked padding, per ordered shard pair "
+                        "(waste the compact wire family removes)")
                     for s in range(self.S):
-                        halo_c.inc(int(sends[s]) * msg_bytes * step,
+                        halo_c.inc(int(shard_bytes[s]) * step,
                                    shard=str(s), transport=transport)
                         cut_g.set(int(cuts[s]), shard=str(s))
+                        for tdst in range(self.S):
+                            if tdst != s and pair[s, tdst] > 0:
+                                pad_g.set(
+                                    1.0 - counts[s, tdst] / wire_w,
+                                    src=str(s), dst=str(tdst))
             done += step
         if is_async and publish:
             # Staleness surfaced as gauges (cumulative totals live in
@@ -1017,11 +1182,19 @@ class ShardedLSS:
             pending=fl(state.pending), last_send=fl(state.last_send),
             alive=fl(state.alive), t=state.t, msgs=jnp.sum(state.msgs),
             rng=state.rng[0])
-        settled_ok = fl(tables.intra) if self.ecfg.async_mode else None
+        # A lossy wire relaxes the halo slots the same way async mode
+        # does: delivered values differ from the sender's copy (by the
+        # quantization bound), so cross-shard slots move to the measured
+        # in-flight side and out of the bitwise edge check, and the
+        # conservation rounding model widens by the wire's documented
+        # per-component error bound (quant_eps).
+        relaxed = self.ecfg.async_mode or self._wire.lossy
+        settled_ok = fl(tables.intra) if relaxed else None
         return lss.audit_impl(flat_state, flat_topo, decide, eps=eps,
                               sample_mod=sample_mod,
                               sample_phase=sample_phase,
-                              settled_ok=settled_ok)
+                              settled_ok=settled_ok,
+                              tol_rel_extra=self._wire.quant_eps)
 
     def _audit_async_impl(self, astate: AsyncShardedState,
                           tables: DeviceTopo):
@@ -1132,6 +1305,10 @@ class ShardedLSS:
             msgs=jnp.zeros((S,), lss.counter_dtype()).at[0]
             .set(jnp.asarray(snap.msgs, lss.counter_dtype())),
             rng=jax.random.split(snap.rng, S),
+            wire_err_m=(jnp.zeros((S, B, D, d), jnp.float32)
+                        if self._wire.stateful else None),
+            wire_err_c=(jnp.zeros((S, B, D), jnp.float32)
+                        if self._wire.stateful else None),
         )
 
     def migrate_from(self, old: "ShardedLSS",
@@ -1166,6 +1343,29 @@ class ShardedLSS:
         for _ in batch:
             place = jax.vmap(place)
         placed = place(snap)
+        if self._wire.stateful and state.wire_err_m is not None:
+            # Error feedback rides the migration row-for-row: a peer's
+            # unshipped quantization debt must survive the epoch or the
+            # convergence guarantee of error feedback breaks at every
+            # regrow/rebalance.  Slots are copied as-is (out-slot
+            # coordinates are partition-independent per logical row).
+            em, ec = move(state.wire_err_m), move(state.wire_err_c)
+            S, B, D = self.S, self.B, self.D
+            n1, D1 = em.shape[len(batch)], em.shape[len(batch) + 1]
+            pos = self._pos[:n1]
+            d = em.shape[-1]
+
+            def _place_err(em1, ec1):
+                zm = jnp.zeros((S * B, D, d), em1.dtype)
+                zc = jnp.zeros((S * B, D), ec1.dtype)
+                return (zm.at[pos, :D1].set(em1).reshape(S, B, D, d),
+                        zc.at[pos, :D1].set(ec1).reshape(S, B, D))
+
+            pe = _place_err
+            for _ in batch:
+                pe = jax.vmap(pe)
+            pm, pc = pe(em, ec)
+            placed = placed._replace(wire_err_m=pm, wire_err_c=pc)
         if old.S == self.S:
             # Drop-RNG continuity: with an equal shard count the (S, 2)
             # per-shard key array transfers verbatim, so a regrow /

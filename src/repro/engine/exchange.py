@@ -28,12 +28,50 @@ including the extra ``halo_slack`` width headroom those repairs rely on —
 are masked by ``send_ok`` on the send side and scattered out-of-bounds
 (dropped) on the receive side, so unused capacity costs bandwidth but
 never correctness.
+
+Wire formats
+------------
+
+What actually crosses the transport is pluggable (:func:`get_wire`,
+``EngineConfig(wire=...)``): the gathered ``(buf_m, buf_c, flag)``
+triple is ``encode``-d into a payload tuple on the sender side, each
+payload array rides the transport (transpose or ``all_to_all``)
+unchanged, and the receiver ``decode``-s it back before the scatter.
+
+===========  ==============================================================
+``exact``    the triple itself — f32 values, bool flags.  The default;
+             encode/decode are identities, so the compiled program (and
+             every bitwise parity/audit guarantee) is byte-for-byte
+             today's.
+``compact``  lossless: the ``delivered`` flags bit-pack 8-to-a-byte
+             (:func:`pack_bits`) and the engine trims the halo tables to
+             the occupied width, so ``halo_slack`` headroom stops riding
+             the transport.  Message *values* are bitwise unchanged.
+``int8``     per-link symmetric int8 quantization of the value buffers
+             with error feedback carried in per-out-slot state
+             (:func:`repro.distributed.compression.quantize_halo`);
+             convergence-preserving rather than bitwise, round-trip error
+             bounded by ``scale / 2`` per component.
+``bf16``     like ``int8`` but a bfloat16 cast (no scales): relative
+             error ``<= 2^-8`` per component, same error-feedback state.
+===========  ==============================================================
+
+``pair_bytes`` is each format's host-side traffic model: modeled wire
+bytes per cycle for every ordered shard pair.  Like
+:func:`repro.distributed.compression.topk_compress`, the lossless
+compact format is *realized* as dense masked arrays on device (a real
+DCN transport would ship the ragged per-pair rows); the byte model
+reports the serialized format, which is what the ``halo_bytes`` span
+attr and the bench gates track.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.compression import dequantize_halo, quantize_halo
 
 from .partition import HaloTables
 
@@ -47,6 +85,13 @@ __all__ = [
     "ring_publish",
     "ring_read",
     "scatter_seq",
+    "pack_bits",
+    "unpack_bits",
+    "gather_err",
+    "scatter_err",
+    "scatter_err_block",
+    "get_wire",
+    "WIRE_FORMATS",
 ]
 
 
@@ -164,3 +209,216 @@ def collective_all_to_all(buf, axis_name: str):
     ``s`` sent here: exactly the dst-major layout ``scatter_block`` wants.
     """
     return jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
+
+
+# -- wire formats ----------------------------------------------------------
+
+def pack_bits(flag):
+    """bool ``(..., W)`` -> uint8 ``(..., ceil(W/8))``, little-endian.
+
+    Bit ``h`` of byte ``b`` is flag ``b * 8 + h``; the tail byte pads
+    with zeros.  Inverse: :func:`unpack_bits`.
+    """
+    W = flag.shape[-1]
+    nbytes = -(-W // 8)
+    pad = nbytes * 8 - W
+    f = flag
+    if pad:
+        f = jnp.concatenate(
+            [f, jnp.zeros((*f.shape[:-1], pad), bool)], axis=-1)
+    bits = f.reshape(*f.shape[:-1], nbytes, 8).astype(jnp.uint32)
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(8, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed, width: int):
+    """uint8 ``(..., ceil(width/8))`` -> bool ``(..., width)``."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(packed[..., :, None], shifts), jnp.uint8(1))
+    flat = bits.reshape(*packed.shape[:-1], packed.shape[-1] * 8)
+    return flat[..., :width].astype(bool)
+
+
+def gather_err(err_m, err_c, halo: HaloTables):
+    """Per-out-slot error-feedback buffers -> src-major halo coordinates.
+
+    ``err_m (S, B, D, d)`` / ``err_c (S, B, D)`` live in out-slot
+    coordinates (membership-stable shapes, independent of the halo
+    width); each halo table entry reads its sending out-slot's running
+    error, exactly like :func:`gather_block` reads ``out_m``.
+    """
+    g = lambda e, r, s: e[r, s]
+    return (jax.vmap(g)(err_m, halo.send_row, halo.send_slot),
+            jax.vmap(g)(err_c, halo.send_row, halo.send_slot))
+
+
+def scatter_err_block(err_m, err_c, new_m, new_c, send_row, send_slot,
+                      send_ok):
+    """Write ONE shard's updated error feedback back to out-slot coords.
+
+    Entries beyond the real table (``~send_ok``) drop out of bounds; an
+    out-slot appears in at most one table entry, so writes never race.
+    """
+    B, D = err_c.shape
+    idx = jnp.where(send_ok, send_row * D + send_slot, B * D).reshape(-1)
+    err_m = (err_m.reshape(B * D, -1)
+             .at[idx].set(new_m.reshape(idx.size, -1), mode="drop")
+             .reshape(err_m.shape))
+    err_c = (err_c.reshape(B * D)
+             .at[idx].set(new_c.reshape(-1), mode="drop")
+             .reshape(err_c.shape))
+    return err_m, err_c
+
+
+def scatter_err(err_m, err_c, new_m, new_c, halo: HaloTables):
+    """vmap of :func:`scatter_err_block` over the leading shard axis."""
+    return jax.vmap(scatter_err_block)(err_m, err_c, new_m, new_c,
+                                       halo.send_row, halo.send_slot,
+                                       halo.send_ok)
+
+
+class _ExactWire:
+    """Today's f32 path: encode/decode are identities, the dense buffer
+    ships whole (padding and ``halo_slack`` headroom as real bytes)."""
+
+    name = "exact"
+    lossy = False      # message values survive the wire bitwise
+    stateful = False   # no error-feedback state
+    trims = False      # tables stay at the full padded halo width
+    quant_eps = 0.0    # per-component relative round-trip error bound
+
+    #: serialized bytes per message slot for d-vector payloads:
+    #: f32 moment vector + f32 weight + 1-byte flag.
+    @staticmethod
+    def _slot_bytes(d: int) -> int:
+        return 4 * d + 4 + 1
+
+    def encode(self, buf_m, buf_c, flag, err_m=None, err_c=None):
+        return (buf_m, buf_c, flag), err_m, err_c
+
+    def decode(self, payload):
+        return payload
+
+    def pair_bytes(self, counts: np.ndarray, width: int,
+                   d: int) -> np.ndarray:
+        """Modeled wire bytes per cycle per ordered (src, dst) pair.
+
+        The dense row ships whole for every off-diagonal pair — occupancy
+        (``counts``) does not matter, which is exactly the waste the
+        other formats remove.
+        """
+        S = counts.shape[0]
+        out = np.full((S, S), width * self._slot_bytes(d), np.int64)
+        np.fill_diagonal(out, 0)  # the s -> s chunk never leaves the shard
+        return out
+
+
+class _CompactWire(_ExactWire):
+    """Lossless byte reduction: bit-packed flags + occupied-width-only
+    transport (the engine trims the halo tables to the used width, and
+    the byte model ships each pair at its own ``H[s, t]``)."""
+
+    name = "compact"
+    trims = True
+
+    def encode(self, buf_m, buf_c, flag, err_m=None, err_c=None):
+        return (buf_m, buf_c, pack_bits(flag)), err_m, err_c
+
+    def decode(self, payload):
+        buf_m, buf_c, packed = payload
+        return buf_m, buf_c, unpack_bits(packed, buf_c.shape[-1])
+
+    def pair_bytes(self, counts, width, d):
+        """Per pair: a 4-byte width header + ``ceil(H[s,t]/8)`` flag
+        bytes + ``H[s,t]`` f32 message slots; silent pairs ship nothing."""
+        c = counts.astype(np.int64)
+        out = np.where(c > 0, c * (4 * d + 4) + (c + 7) // 8 + 4, 0)
+        np.fill_diagonal(out, 0)
+        return out
+
+
+class _Int8Wire(_CompactWire):
+    """Per-link symmetric int8 quantization with error feedback.
+
+    Each (src, dst) link quantizes its value buffers against its own
+    scale (``max|x + err| / 127``); the per-component round-trip error is
+    bounded by ``scale / 2`` and carried forward in the sender's
+    error-feedback state, so it perturbs — never loses — mass.
+    ``quant_eps`` is the relative form of that bound, which the audit
+    plane's conservation tolerance and the round-trip property test both
+    use.
+    """
+
+    name = "int8"
+    lossy = True
+    stateful = True
+    quant_eps = 1.0 / 254.0  # scale/2 with scale = max|x + err| / 127
+
+    def encode(self, buf_m, buf_c, flag, err_m=None, err_c=None):
+        pack, new_err_m, new_err_c = quantize_halo(buf_m, buf_c, flag,
+                                                   err_m, err_c)
+        payload = (*pack, pack_bits(flag))
+        return payload, new_err_m, new_err_c
+
+    def decode(self, payload):
+        q_m, q_c, scale_m, scale_c, packed = payload
+        buf_m, buf_c = dequantize_halo(q_m, q_c, scale_m, scale_c)
+        return buf_m, buf_c, unpack_bits(packed, q_c.shape[-1])
+
+    def pair_bytes(self, counts, width, d):
+        """int8 payloads + two f32 per-link scales + packed flags."""
+        c = counts.astype(np.int64)
+        out = np.where(c > 0, c * (d + 1) + 8 + (c + 7) // 8 + 4, 0)
+        np.fill_diagonal(out, 0)
+        return out
+
+
+class _Bf16Wire(_CompactWire):
+    """bfloat16 cast with error feedback: 2x value bytes, no scales;
+    relative per-component error bounded by ``2^-8`` (8-bit significand
+    round-to-nearest half-ulp)."""
+
+    name = "bf16"
+    lossy = True
+    stateful = True
+    quant_eps = 2.0 ** -8
+
+    def encode(self, buf_m, buf_c, flag, err_m=None, err_c=None):
+        f32 = jnp.float32
+        xm = buf_m.astype(f32) + (0.0 if err_m is None else err_m)
+        xc = buf_c.astype(f32) + (0.0 if err_c is None else err_c)
+        bm = xm.astype(jnp.bfloat16)
+        bc = xc.astype(jnp.bfloat16)
+        fm = flag[..., None]
+        new_err_m = jnp.where(fm, xm - bm.astype(f32),
+                              0.0 if err_m is None else err_m)
+        new_err_c = jnp.where(flag, xc - bc.astype(f32),
+                              0.0 if err_c is None else err_c)
+        return (bm, bc, pack_bits(flag)), new_err_m, new_err_c
+
+    def decode(self, payload):
+        bm, bc, packed = payload
+        return (bm.astype(jnp.float32), bc.astype(jnp.float32),
+                unpack_bits(packed, bc.shape[-1]))
+
+    def pair_bytes(self, counts, width, d):
+        c = counts.astype(np.int64)
+        out = np.where(c > 0, c * (2 * d + 2) + (c + 7) // 8 + 4, 0)
+        np.fill_diagonal(out, 0)
+        return out
+
+
+WIRE_FORMATS = {w.name: w for w in
+                (_ExactWire(), _CompactWire(), _Int8Wire(), _Bf16Wire())}
+
+
+def get_wire(name: str):
+    """Resolve a wire-format name (``EngineConfig.wire``) to its
+    singleton wire object."""
+    try:
+        return WIRE_FORMATS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire format {name!r}; "
+            f"expected one of {sorted(WIRE_FORMATS)}") from None

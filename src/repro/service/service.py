@@ -130,6 +130,10 @@ class ServiceConfig(NamedTuple):
     engine_shards: int = 2  # engine backend: shard count
     engine_method: str = "bfs"  # engine backend: partitioner
     engine_halo_slack: float = 1.5  # halo-width headroom for membership
+    # Engine backend halo wire format (repro.engine.exchange.get_wire):
+    # "exact" (bitwise default), "compact" (lossless byte reduction),
+    # "int8" / "bf16" (per-link quantization with error feedback).
+    engine_wire: str = "exact"
     admission_queue: int = 16  # waiting specs bound (0 = fail fast)
     admission_overflow: str = "reject"  # "reject" | "evict-oldest"
     control: ControlPlaneConfig = ControlPlaneConfig()  # control plane
@@ -347,7 +351,8 @@ class _EngineBackend:
                          cycles_per_dispatch=scfg.cycles_per_dispatch,
                          method=scfg.engine_method,
                          use_kernels=scfg.use_kernels,
-                         halo_slack=scfg.engine_halo_slack))
+                         halo_slack=scfg.engine_halo_slack,
+                         wire=scfg.engine_wire))
 
     def dispatch_info(self) -> dict:
         return dict(self.eng.dispatch_info)
@@ -449,12 +454,12 @@ class _EngineBackend:
         return st.cut_edges() / max(st.num_edges, 1)
 
     def halo_bytes_per_cycle(self) -> int:
-        """Bytes the dense halo transport moves per cycle per query slot:
-        the (S, S, H) exchange buffers — messages ``(m: d x f32, c: f32)``
-        plus the presence flag.  A capacity figure (the buffers ship
-        whole), which is exactly the transport's real footprint."""
-        S, H, d = self.eng.S, self.eng.stopo.halo_width, self.scfg.d
-        return S * S * H * (4 * d + 4 + 1)
+        """Bytes the halo transport moves per cycle per query slot under
+        the ACTIVE wire format (:meth:`ShardedLSS.wire_pair_bytes`):
+        dense ``(S, S, H)`` capacity rows for ``"exact"`` — the buffers
+        ship whole — ragged occupied widths (+ packed flags / quantized
+        payloads) for the compact family."""
+        return int(self.eng.wire_pair_bytes(self.scfg.d).sum())
 
     def _reshard(self, dyn, states, prebuilt=None, catchup_rows=None):
         """Fresh partition of ``dyn`` + state migration across

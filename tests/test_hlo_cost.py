@@ -80,6 +80,69 @@ ENTRY %main_spmd (p0: f32[8,32], p1: f32[32,16]) -> f32[8,16] {
     assert res["flops"] == 2 * 8 * 16 * 32
 
 
+def test_engine_dispatch_k_cycle_multiplier():
+    """The engine's K-cycle fori_loop dispatch is exactly the while-body
+    case the analyzer was built for: per-dispatch HBM traffic must scale
+    with the trip count K."""
+    from repro.core import lss, topology, wvs
+    from repro.engine import EngineConfig, ShardedLSS
+
+    topo = topology.grid(64)
+    centers = jnp.asarray(np.random.default_rng(0).normal(size=(3, 2)),
+                          jnp.float32)
+    eng = ShardedLSS(topo, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=2, cycles_per_dispatch=2))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 2)),
+                    jnp.float32)
+    state = eng.init(wvs.WV(m=x, c=jnp.ones((64,), jnp.float32)))
+
+    def cost(k):
+        txt = eng._run_jit.lower(state, eng._tables, k=k).compile().as_text()
+        return hlo_cost.analyze(txt)
+
+    c2, c12 = cost(2), cost(12)
+    assert c2["hbm_bytes"] > 0
+    ratio = c12["hbm_bytes"] / c2["hbm_bytes"]
+    # 12/2 = 6x trip count; allow slop for the loop-invariant prologue
+    assert 4.0 <= ratio <= 8.0, ratio
+
+
+def test_engine_mesh_collective_bytes_scale(subproc):
+    """Mesh path: the all_to_all halo exchange shows up in collective
+    bytes, multiplied by K, and grows with the shard count S (more
+    ordered pairs cross the transport)."""
+    out = subproc("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import lss, topology, wvs
+from repro.engine import EngineConfig, ShardedLSS
+from repro.launch import hlo_cost
+
+topo = topology.grid(64)
+centers = jnp.asarray(np.random.default_rng(0).normal(size=(3, 2)),
+                      jnp.float32)
+x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 2)), jnp.float32)
+inputs = wvs.WV(m=x, c=jnp.ones((64,), jnp.float32))
+
+def a2a_bytes(S, k):
+    mesh = jax.make_mesh((S,), ("shards",))
+    eng = ShardedLSS(topo, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=S, cycles_per_dispatch=k)
+                     ).use_mesh(mesh, "shards")
+    state = eng.init(inputs, seed=0)
+    txt = eng._run_jit.lower(state, eng._tables, k=k).compile().as_text()
+    return hlo_cost.analyze(txt)["collective_bytes"].get("all-to-all", 0.0)
+
+b_s2_k1 = a2a_bytes(2, 1)
+b_s2_k4 = a2a_bytes(2, 4)
+b_s4_k1 = a2a_bytes(4, 1)
+assert b_s2_k1 > 0, b_s2_k1
+assert 3.5 <= b_s2_k4 / b_s2_k1 <= 4.5, (b_s2_k4, b_s2_k1)  # K multiplier
+assert b_s4_k1 > b_s2_k1, (b_s4_k1, b_s2_k1)  # more shards, more pairs
+print("MESH_COLLECTIVE_COST_OK")
+""", n_devices=4)
+    assert "MESH_COLLECTIVE_COST_OK" in out
+
+
 def test_collective_bytes_parsing():
     hlo = """
 HloModule m

@@ -1,0 +1,426 @@
+"""Halo wire formats: lossless round-trips, quantization bounds,
+engine/service parity, lossy-wire convergence, and plan autotuning.
+
+The contract under test is ISSUE 10's tentpole: ``wire="compact"`` is
+bitwise-invisible everywhere (values AND the drop-RNG stream), the
+quantized wires honor their documented per-component error bound and
+still reach the paper's decisions (the algorithm is self-stabilizing
+under message perturbation — the property that makes lossy transport
+safe), and ``EngineConfig(auto_plan=True)`` adopts a plan whose measured
+dispatch wall is within 10% of the best enumerated candidate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lss, sim, topology, wvs
+from repro.distributed.compression import quantize_halo
+from repro.engine import EngineConfig, ShardedLSS
+from repro.engine import autotune, exchange
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic container: seeded fallback shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+
+def _rand_halo(seed, S=3, H=11, d=2, ragged=True):
+    """Random (S, S, H[, d]) halo buffers + flags; ``ragged`` zeroes each
+    pair's flags past its own random width (per-pair occupied widths)."""
+    rng = np.random.default_rng(seed)
+    buf_m = rng.normal(size=(S, S, H, d)).astype(np.float32) * 10
+    buf_c = rng.normal(size=(S, S, H)).astype(np.float32)
+    flag = rng.random((S, S, H)) < 0.6
+    if ragged:
+        widths = rng.integers(0, H + 1, size=(S, S))
+        flag &= np.arange(H)[None, None, :] < widths[:, :, None]
+    return jnp.asarray(buf_m), jnp.asarray(buf_c), jnp.asarray(flag)
+
+
+# ---------------------------------------------------------------------------
+# lossless round-trips (property tests)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**16), st.integers(1, 40))
+def test_pack_unpack_bits_roundtrip(seed, width):
+    rng = np.random.default_rng(seed)
+    flag = jnp.asarray(rng.random((3, 3, width)) < 0.5)
+    packed = exchange.pack_bits(flag)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (3, 3, -(-width // 8))
+    back = exchange.unpack_bits(packed, width)
+    assert np.array_equal(np.asarray(back), np.asarray(flag))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16), st.integers(2, 5), st.integers(1, 17),
+       st.integers(1, 4))
+def test_compact_wire_bitwise_roundtrip(seed, S, H, d):
+    """encode -> decode through the compact wire is the identity on
+    values and flags, including ragged per-pair occupied widths."""
+    buf_m, buf_c, flag = _rand_halo(seed, S=S, H=H, d=d)
+    wire = exchange.get_wire("compact")
+    payload, _, _ = wire.encode(buf_m, buf_c, flag)
+    out_m, out_c, out_f = wire.decode(payload)
+    assert np.array_equal(np.asarray(out_m), np.asarray(buf_m))
+    assert np.array_equal(np.asarray(out_c), np.asarray(buf_c))
+    assert np.array_equal(np.asarray(out_f), np.asarray(flag))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16))
+def test_int8_roundtrip_error_bound(seed):
+    """|dequantize(q) - (x + err)| <= scale/2 per component — the exact
+    bound the audit tolerance's ``quant_eps = 1/254`` encodes."""
+    buf_m, buf_c, flag = _rand_halo(seed)
+    rng = np.random.default_rng(seed + 1)
+    err_m = jnp.asarray(rng.normal(size=buf_m.shape).astype(np.float32))
+    err_c = jnp.asarray(rng.normal(size=buf_c.shape).astype(np.float32))
+    pack, _, _ = quantize_halo(buf_m, buf_c, flag, err_m, err_c)
+    fm = np.asarray(flag)[..., None]
+    xm = np.where(fm, np.asarray(buf_m) + np.asarray(err_m), 0.0)
+    xc = np.where(np.asarray(flag), np.asarray(buf_c) + np.asarray(err_c),
+                  0.0)
+    deq_m = np.asarray(pack.q_m, np.float32) * \
+        np.asarray(pack.scale_m)[..., None, None]
+    deq_c = np.asarray(pack.q_c, np.float32) * \
+        np.asarray(pack.scale_c)[..., None]
+    half_m = np.asarray(pack.scale_m)[..., None, None] / 2 + 1e-7
+    half_c = np.asarray(pack.scale_c)[..., None] / 2 + 1e-7
+    assert (np.abs(deq_m - xm) <= half_m).all()
+    assert (np.abs(deq_c - xc) <= half_c).all()
+    # relative form: scale/2 == max|x| / 254 == quant_eps * max|x|
+    wire = exchange.get_wire("int8")
+    mx = np.abs(xm).max(axis=(-2, -1))
+    assert (np.abs(deq_m - xm).max(axis=(-2, -1))
+            <= wire.quant_eps * mx + 1e-6).all()
+
+
+def test_bf16_error_bound():
+    """Flagged (actually delivered) components obey the 2^-8 relative
+    bound; unflagged entries are never scattered, so they are exempt."""
+    buf_m, buf_c, flag = _rand_halo(7)
+    wire = exchange.get_wire("bf16")
+    payload, _, _ = wire.encode(buf_m, buf_c, flag)
+    out_m, out_c, out_f = wire.decode(payload)
+    fm = np.broadcast_to(np.asarray(flag)[..., None], buf_m.shape)
+    xm = np.asarray(buf_m)[fm]
+    assert (np.abs(np.asarray(out_m)[fm] - xm)
+            <= wire.quant_eps * np.abs(xm) + 1e-7).all()
+    xc = np.asarray(buf_c)[np.asarray(flag)]
+    assert (np.abs(np.asarray(out_c)[np.asarray(flag)] - xc)
+            <= wire.quant_eps * np.abs(xc) + 1e-7).all()
+    assert np.array_equal(np.asarray(out_f), np.asarray(flag))
+
+
+def test_wire_registry():
+    assert set(exchange.WIRE_FORMATS) == {"exact", "compact", "int8", "bf16"}
+    try:
+        exchange.get_wire("zstd")
+        assert False, "unknown wire must raise"
+    except ValueError as e:
+        assert "zstd" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# byte model: compact/quantized must undercut exact
+# ---------------------------------------------------------------------------
+
+
+def test_pair_bytes_ordering_and_padding():
+    counts = np.array([[0, 5, 0], [3, 0, 9], [0, 0, 0]])
+    width, d = 16, 2
+    exact = exchange.get_wire("exact").pair_bytes(counts, width, d)
+    compact = exchange.get_wire("compact").pair_bytes(counts, width, d)
+    int8 = exchange.get_wire("int8").pair_bytes(counts, width, d)
+    assert (np.diag(exact) == 0).all()
+    # exact ships the dense width even on silent pairs; compact ships
+    # occupied slots only (silent pairs: nothing).
+    assert exact[0, 2] > 0 and compact[0, 2] == 0 and int8[0, 2] == 0
+    active = counts > 0
+    assert (compact[active] < exact[active]).all()
+    assert (int8[active] < compact[active]).all()
+
+
+# ---------------------------------------------------------------------------
+# engine parity: compact is bitwise-invisible on every path
+# ---------------------------------------------------------------------------
+
+
+def _engine_pair(topo, wire, seed=0, drop=0.0, **ecfg_kw):
+    spec = sim.ProblemSpec(n=topo.n, seed=seed)
+    centers, sample, _, _ = sim.make_problem(spec)
+    rng = np.random.default_rng(seed + 1)
+    inputs = wvs.from_vector(jnp.asarray(sample(rng, topo.n)),
+                             jnp.ones((topo.n,), jnp.float32))
+    cfg = lss.LSSConfig(drop_rate=drop)
+    eng = ShardedLSS(topo, centers, cfg,
+                     EngineConfig(num_shards=4, cycles_per_dispatch=4,
+                                  halo_slack=1.5, wire=wire, **ecfg_kw))
+    return eng, eng.init(inputs, seed=seed)
+
+
+def _assert_states_bitwise(a, b):
+    for f in a._fields:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None and y is None:
+            continue
+        assert np.array_equal(np.asarray(x), np.asarray(y)), f
+
+
+def test_compact_engine_bitwise_parity_with_drops():
+    """Sync gather path, message drops on: every state field (drop-RNG
+    stream included) identical between exact and compact."""
+    topo = topology.grid(100)
+    e0, s0 = _engine_pair(topo, "exact", drop=0.15)
+    e1, s1 = _engine_pair(topo, "compact", drop=0.15)
+    assert e1._wire_w < e0.stopo.halo_width  # the trim actually engaged
+    s0, s1 = e0.run(s0, 24), e1.run(s1, 24)
+    _assert_states_bitwise(s0, s1)
+
+
+def test_compact_async_bitwise_parity():
+    """Bounded-staleness ring path: compact stays bitwise (it is value-
+    lossless; only the byte accounting changes)."""
+    topo = topology.grid(100)
+    e0, s0 = _engine_pair(topo, "exact", drop=0.1,
+                          async_mode=True, staleness=2)
+    e1, s1 = _engine_pair(topo, "compact", drop=0.1,
+                          async_mode=True, staleness=2)
+    s0, s1 = e0.run(s0, 24), e1.run(s1, 24)
+    _assert_states_bitwise(s0.sync, s1.sync)
+    assert np.array_equal(np.asarray(s0.last_seq), np.asarray(s1.last_seq))
+    assert int(jnp.sum(s0.applied)) == int(jnp.sum(s1.applied))
+
+
+def test_compact_mesh_bitwise_parity(subproc):
+    """shard_map + collective_all_to_all transport, 4 real devices."""
+    out = subproc("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import lss, sim, topology, wvs
+from repro.engine import ShardedLSS, EngineConfig
+
+topo = topology.grid(64)
+spec = sim.ProblemSpec(n=64, seed=0)
+centers, sample, _, _ = sim.make_problem(spec)
+rng = np.random.default_rng(1)
+inputs = wvs.from_vector(jnp.asarray(sample(rng, topo.n)),
+                         jnp.ones((topo.n,), jnp.float32))
+mesh = jax.make_mesh((4,), ("shards",))
+states = {}
+for wire in ("exact", "compact"):
+    eng = ShardedLSS(topo, centers, lss.LSSConfig(drop_rate=0.1),
+                     EngineConfig(num_shards=4, cycles_per_dispatch=4,
+                                  halo_slack=1.5, wire=wire)
+                     ).use_mesh(mesh, "shards")
+    states[wire] = eng.run(eng.init(inputs, seed=0), 24)
+a, b = states["exact"], states["compact"]
+for f in a._fields:
+    x, y = getattr(a, f), getattr(b, f)
+    if x is None and y is None:
+        continue
+    assert np.array_equal(np.asarray(x), np.asarray(y)), f
+print("MESH_COMPACT_PARITY_OK")
+""", n_devices=4)
+    assert "MESH_COMPACT_PARITY_OK" in out
+
+
+def test_service_engine_backend_compact_parity():
+    """The service's engine backend (sync and overlap) is bitwise
+    unchanged under engine_wire='compact' — records included."""
+    from repro.core import regions
+    from repro.obs import InMemoryTracker
+    from repro.service import QuerySpec, Service, ServiceConfig
+
+    topo = topology.grid(36)
+    spec = sim.ProblemSpec(n=36, seed=5)
+    centers, sample, _, _ = sim.make_problem(spec)
+    x = sample(np.random.default_rng(6), topo.n)
+
+    def run(wire, overlap):
+        tr = InMemoryTracker()
+        svc = Service(topo, ServiceConfig(
+            capacity=2, k_max=3, d=2, cycles_per_dispatch=5,
+            backend="engine", engine_shards=2, engine_wire=wire,
+            overlap=overlap), tracker=tr)
+        qid = svc.admit(QuerySpec(region=regions.VoronoiRegions(centers),
+                                  inputs=x, seed=0))
+        svc.serve(4)
+        snap = svc.snapshot(qid)
+        recs = [r for r in tr.records if "query" in r]
+        svc.close()
+        return snap, recs
+
+    for overlap in (False, True):
+        s0, r0 = run("exact", overlap)
+        s1, r1 = run("compact", overlap)
+        for f in s0._fields:
+            assert np.array_equal(np.asarray(getattr(s0, f)),
+                                  np.asarray(getattr(s1, f))), (overlap, f)
+        assert r0 == r1, overlap
+
+
+# ---------------------------------------------------------------------------
+# quantized wire: convergence, composition with loss/staleness/migration
+# ---------------------------------------------------------------------------
+
+
+def test_int8_convergence_static_workloads():
+    """fig3-style workloads: int8 transport reaches the same decisions
+    (final accuracy / quiescence) as the exact engine."""
+    for make in (lambda: topology.grid(100),
+                 lambda: topology.barabasi_albert(100, m=2, seed=0)):
+        topo = make()
+        spec = sim.ProblemSpec(n=topo.n, seed=3)
+        r_exact = sim.run_static(topo, spec, max_cycles=400,
+                                 engine=EngineConfig(num_shards=4,
+                                                     cycles_per_dispatch=4))
+        r_int8 = sim.run_static(topo, spec, max_cycles=400,
+                                engine=EngineConfig(num_shards=4,
+                                                    cycles_per_dispatch=4,
+                                                    wire="int8"))
+        assert r_int8["final_accuracy"] == r_exact["final_accuracy"] == 1.0
+        assert r_int8["quiescent"]
+
+
+def test_int8_convergence_under_message_loss():
+    """fig4-style: quantization composes with message drops (the paper's
+    perturbation-robustness argument covers both at once)."""
+    topo = topology.grid(100)
+    spec = sim.ProblemSpec(n=topo.n, seed=4)
+    r = sim.run_static(topo, spec, cfg=lss.LSSConfig(drop_rate=0.2),
+                       max_cycles=600,
+                       engine=EngineConfig(num_shards=4,
+                                           cycles_per_dispatch=4,
+                                           wire="int8"))
+    assert r["final_accuracy"] == 1.0
+
+
+def test_int8_with_async_staleness():
+    """Error feedback updates at the sender's publish boundary, so it
+    survives bounded-staleness delivery."""
+    topo = topology.grid(100)
+    e, s = _engine_pair(topo, "int8", seed=2, drop=0.1,
+                        async_mode=True, staleness=2)
+    s = e.run(s, 120)
+    acc, _, _ = e.metrics(s)
+    assert float(acc) == 1.0
+    assert s.sync.wire_err_m is not None
+    a = e.audit(s)
+    assert a["resid"] <= a["tol"] and a["seq_bad"] == 0
+
+
+def test_int8_audit_stays_green():
+    """audit_every-style check: conservation residual within the widened
+    rounding model and edge symmetry relaxed to intra slots only."""
+    topo = topology.grid(100)
+    e, s = _engine_pair(topo, "int8", seed=1)
+    s = e.run(s, 40)
+    a = e.audit(s)
+    assert a["resid"] <= a["tol"], a
+    assert a["edge_bad"] == 0, a  # intra slots stay bitwise-symmetric
+    assert a["edge_checked"] > 0
+    # the relaxation is bounded: halo slots were excluded, not everything
+    e0, s0 = _engine_pair(topo, "exact", seed=1)
+    a0 = e0.audit(e0.run(s0, 40))
+    assert a["edge_checked"] < a0["edge_checked"]
+
+
+def test_int8_error_feedback_survives_migration():
+    """migrate_from carries per-slot quantization debt row-for-row into
+    the new layout; the run continues and converges."""
+    topo = topology.grid(100)
+    e1, s = _engine_pair(topo, "int8", seed=0)
+    s = e1.run(s, 12)
+    assert float(jnp.abs(s.wire_err_m).max()) > 0  # debt actually accrued
+    spec = sim.ProblemSpec(n=topo.n, seed=0)
+    centers, _, _, _ = sim.make_problem(spec)
+    e2 = ShardedLSS(topo, centers, lss.LSSConfig(),
+                    EngineConfig(num_shards=4, cycles_per_dispatch=4,
+                                 halo_slack=1.5, wire="int8",
+                                 method="stride"))
+    s2 = e2.migrate_from(e1, s)
+    # row-for-row: old row r's error slots land at the new layout's
+    # position of the same logical peer
+    old_flat = np.asarray(s.wire_err_m).reshape(e1.S * e1.B, e1.D, -1)
+    new_flat = np.asarray(s2.wire_err_m).reshape(e2.S * e2.B, e2.D, -1)
+    old_pos = np.asarray(e1._pos)
+    new_pos = np.asarray(e2._pos)
+    assert np.array_equal(new_flat[new_pos], old_flat[old_pos])
+    s2 = e2.run(s2, 100)
+    acc, _, _ = e2.metrics(s2)
+    assert float(acc) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# byte accounting + autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_halo_bytes_span_attr_reports_wire_bytes():
+    from repro.obs import InMemoryTracker
+
+    topo = topology.grid(100)
+    vals = {}
+    for wire in ("exact", "compact", "int8"):
+        spec = sim.ProblemSpec(n=topo.n, seed=0)
+        centers, sample, _, _ = sim.make_problem(spec)
+        inputs = wvs.from_vector(
+            jnp.asarray(sample(np.random.default_rng(1), topo.n)),
+            jnp.ones((topo.n,), jnp.float32))
+        tr = InMemoryTracker()
+        eng = ShardedLSS(topo, centers, lss.LSSConfig(),
+                         EngineConfig(num_shards=4, cycles_per_dispatch=4,
+                                      halo_slack=1.5, wire=wire),
+                         tracker=tr)
+        eng.run(eng.init(inputs, seed=0), 4)
+        spans = tr.spans_named("engine.dispatch")
+        assert spans and spans[0].attrs["wire"] == wire
+        vals[wire] = spans[0].attrs["halo_bytes"]
+        # per-shard counters sum to the span totals
+        c = tr.registry.get("engine_shard_halo_bytes_total")
+        assert sum(v for _, v in c.series()) == \
+            sum(s.attrs["halo_bytes"] for s in spans)
+        assert vals[wire] == 4 * int(eng.wire_pair_bytes(2).sum())
+        pad = tr.registry.get("engine_halo_padding_frac")
+        assert pad is not None  # per-pair padding visibility
+        assert all(0.0 <= v <= 1.0 for _, v in pad.series())
+    assert vals["compact"] < vals["exact"]
+    assert vals["int8"] < vals["compact"]
+
+
+def test_autotune_plan_table_and_acceptance():
+    """The adopted plan's measured dispatch wall is within 10% of the
+    best enumerated candidate (ISSUE 10 acceptance)."""
+    topo = topology.grid(400)
+    centers = jax.random.normal(jax.random.PRNGKey(0), (3, 2))
+    cands = [autotune.Candidate(2, 1.5, k, w)
+             for k in (2, 8) for w in ("exact", "compact")]
+    res = autotune.plan(topo, centers, candidates=cands, repeats=2)
+    assert len(res.table) == 4
+    best = min(e.measured_us for e in res.table)
+    chosen = next(e for e in res.table if e.cand == res.chosen)
+    assert chosen.measured_us <= 1.10 * best
+    assert res.config.auto_plan is False
+    by_wire = {(e.cand.k, e.cand.wire): e for e in res.table}
+    assert by_wire[(8, "compact")].wire_bytes < \
+        by_wire[(8, "exact")].wire_bytes
+    # the model ranks compact at or below exact for equal K
+    assert by_wire[(8, "compact")].modeled_us <= \
+        by_wire[(8, "exact")].modeled_us
+    assert "chosen" in autotune.format_table(res)
+
+
+def test_auto_plan_constructs_and_runs():
+    topo = topology.grid(100)
+    centers = jax.random.normal(jax.random.PRNGKey(0), (3, 2))
+    eng = ShardedLSS(topo, centers, lss.LSSConfig(),
+                     EngineConfig(num_shards=2, cycles_per_dispatch=4,
+                                  auto_plan=True))
+    assert eng.ecfg.auto_plan is False  # plan adopted, no re-planning
+    x = jax.random.normal(jax.random.PRNGKey(1), (topo.n, 2))
+    st = eng.run(eng.init(wvs.WV(m=x, c=jnp.ones((topo.n,)))), 8)
+    assert int(st.t) == 8
